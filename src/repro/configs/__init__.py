@@ -1,0 +1,118 @@
+"""Architecture registry: ``--arch <id>`` -> ArchConfig (+ reduced smoke twin).
+
+Also defines the four assigned input-shape cells and ``input_specs`` that
+produce ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (
+    arctic_480b,
+    gemma2_2b,
+    mamba2_2_7b,
+    mistral_large_123b,
+    pixtral_12b,
+    qwen2_7b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_9b,
+    whisper_tiny,
+    yi_6b,
+)
+from repro.models.model import ArchConfig
+
+_MODULES = [
+    mamba2_2_7b,
+    qwen3_moe_30b_a3b,
+    arctic_480b,
+    qwen2_7b,
+    gemma2_2b,
+    yi_6b,
+    mistral_large_123b,
+    pixtral_12b,
+    recurrentgemma_9b,
+    whisper_tiny,
+]
+
+ARCHS: dict[str, Any] = {m.ID: m for m in _MODULES}
+
+
+def names() -> list[str]:
+    return list(ARCHS)
+
+
+def get(arch_id: str) -> ArchConfig:
+    return ARCHS[arch_id].config()
+
+
+def get_reduced(arch_id: str) -> ArchConfig:
+    return ARCHS[arch_id].reduced_config()
+
+
+# ------------------------------------------------------------------- shapes
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention over the context; pure
+# full-attention archs are skipped (DESIGN.md §5).
+LONG_CONTEXT_OK = {"mamba2-2.7b", "gemma2-2b", "recurrentgemma-9b"}
+
+
+def cell_supported(arch_id: str, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and arch_id not in LONG_CONTEXT_OK:
+        return False, "pure full attention: 500k context unsupported (DESIGN.md §5)"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCell) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    * train/prefill: the full token batch (frontend stubs provide
+      precomputed patch/frame embeddings for [vlm]/[audio] — DESIGN.md §5);
+    * decode: one new token per sequence (the KV cache is state, not input).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    emb = jnp.bfloat16
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "patches":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s - cfg.frontend_len), jnp.int32),
+                "patch_embeds": jax.ShapeDtypeStruct((b, cfg.frontend_len, cfg.d_model), emb),
+            }
+        if cfg.frontend == "frames":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "frames": jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), emb),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    # decode: one token per sequence; cache length = seq_len
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeCell, rng: np.random.Generator) -> dict:
+    """Materialize a random batch matching input_specs (smoke/bench use)."""
+    out = {}
+    for k, sds in input_specs(cfg, shape).items():
+        if sds.dtype == jnp.int32:
+            out[k] = rng.integers(0, cfg.vocab, size=sds.shape).astype(np.int32)
+        else:
+            out[k] = rng.normal(size=sds.shape).astype(np.float32)
+    return out

@@ -1,0 +1,58 @@
+"""copd-mlp — the paper's own validation model (§VI).
+
+Kafka-ML's evaluation trains a small Keras MLP on the HCOPD dataset
+(age / smoking status / gender / biosensor features -> diagnosis class).
+This is the paper-faithful model used by the quickstart example and the
+Table I/II benchmark reproduction. It is not an LM, so it gets its own
+tiny functional model rather than an ArchConfig.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+ID = "copd-mlp"
+
+N_FEATURES = 5  # age, smoking, gender, + 2 biosensor readings
+N_CLASSES = 4  # COPD / HC / Asthma / Infected
+HIDDEN = 32
+
+
+def init(rng, n_features: int = N_FEATURES, hidden: int = HIDDEN, n_classes: int = N_CLASSES):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w1": jax.random.normal(k1, (n_features, hidden), jnp.float32) / math.sqrt(n_features),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, n_classes), jnp.float32) / math.sqrt(hidden),
+        "b2": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def forward(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def loss_fn(params, batch):
+    """Sparse categorical cross-entropy, as the paper's Listing 2 compiles."""
+    logits = forward(params, batch["data"])
+    labels = batch["label"].astype(jnp.int32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - picked)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def synth_dataset(rng_seed: int = 0, n: int = 220):
+    """Synthetic HCOPD-like tabular data (the real CSV is not bundled)."""
+    import numpy as np
+
+    rng = np.random.default_rng(rng_seed)
+    labels = rng.integers(0, N_CLASSES, size=n).astype(np.int32)
+    centers = rng.normal(size=(N_CLASSES, N_FEATURES)).astype(np.float32) * 2.0
+    data = centers[labels] + rng.normal(size=(n, N_FEATURES)).astype(np.float32)
+    return {"data": data.astype(np.float32), "label": labels}

@@ -1,0 +1,26 @@
+"""Core: the paper's contribution — stream-driven ML pipeline management."""
+from repro.core.control import (
+    CONTROL_TOPIC,
+    ControlLogger,
+    ControlMessage,
+    StreamRange,
+    poll_control,
+    send_control,
+)
+from repro.core.consumer import ConsumerGroup, GroupConsumer, range_assign
+from repro.core.log import (
+    LogConfig,
+    OffsetOutOfRange,
+    Record,
+    RecordBatch,
+    StreamLog,
+    TopicPartition,
+)
+from repro.core.registry import (
+    Configuration,
+    Deployment,
+    ModelSpec,
+    Registry,
+    TrainedResult,
+)
+from repro.core.supervisor import JobOutcome, Supervisor

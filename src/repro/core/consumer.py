@@ -1,0 +1,192 @@
+"""Consumer groups — load balancing + fault tolerance (paper §II, §IV-D).
+
+Kafka-ML leans on the Kafka consumer-group feature twice:
+
+* inference *replicas* join one group so partitions (and therefore request
+  load) are spread across them, and a dead replica's partitions are
+  reassigned to the survivors;
+* committed offsets give at-least-once delivery: a restarted member resumes
+  from its group's committed offset rather than re-reading the stream.
+
+This module implements the group coordinator: deterministic *range*
+assignment (Kafka's default), generation-numbered rebalances on
+join/leave/failure, heartbeat-based failure detection, and offset commit
+backed by the log's offset store.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+from repro.core.log import OffsetOutOfRange, RecordBatch, StreamLog, TopicPartition
+
+__all__ = ["ConsumerGroup", "GroupConsumer", "range_assign"]
+
+
+def range_assign(
+    members: Sequence[str], partitions: Sequence[TopicPartition]
+) -> dict[str, list[TopicPartition]]:
+    """Kafka's range assignor: sort both sides, give each member a
+    contiguous slice; the first ``len(partitions) % len(members)`` members
+    get one extra partition.
+
+    Invariants (property-tested): every partition assigned exactly once;
+    member loads differ by at most one; deterministic in its inputs.
+    """
+    out: dict[str, list[TopicPartition]] = {m: [] for m in members}
+    if not members:
+        return out
+    ms = sorted(members)
+    ps = sorted(partitions, key=lambda tp: (tp.topic, tp.partition))
+    base, extra = divmod(len(ps), len(ms))
+    start = 0
+    for i, m in enumerate(ms):
+        take = base + (1 if i < extra else 0)
+        out[m] = ps[start : start + take]
+        start += take
+    return out
+
+
+@dataclass
+class _Member:
+    member_id: str
+    last_heartbeat: float
+
+
+class ConsumerGroup:
+    """Group coordinator for one consumer group over a :class:`StreamLog`."""
+
+    def __init__(
+        self,
+        log: StreamLog,
+        group_id: str,
+        topics: Sequence[str],
+        *,
+        session_timeout_s: float = 10.0,
+        clock: Callable[[], float] | None = None,
+    ):
+        self.log = log
+        self.group_id = group_id
+        self.topics = list(topics)
+        self.session_timeout_s = session_timeout_s
+        self._clock = clock or time.monotonic
+        self._members: dict[str, _Member] = {}
+        self._assignment: dict[str, list[TopicPartition]] = {}
+        self.generation = 0
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------ membership
+    def _partitions(self) -> list[TopicPartition]:
+        tps: list[TopicPartition] = []
+        for t in self.topics:
+            tps.extend(TopicPartition(t, p) for p in range(self.log.num_partitions(t)))
+        return tps
+
+    def join(self, member_id: str) -> "GroupConsumer":
+        with self._lock:
+            self._members[member_id] = _Member(member_id, self._clock())
+            self._rebalance()
+            return GroupConsumer(self, member_id)
+
+    def leave(self, member_id: str) -> None:
+        with self._lock:
+            if self._members.pop(member_id, None) is not None:
+                self._rebalance()
+
+    def heartbeat(self, member_id: str) -> None:
+        with self._lock:
+            m = self._members.get(member_id)
+            if m is None:
+                raise KeyError(f"{member_id} not in group {self.group_id}")
+            m.last_heartbeat = self._clock()
+
+    def expire_dead_members(self) -> list[str]:
+        """Failure detection: drop members whose heartbeat lapsed, rebalance.
+
+        Returns the expired member ids. This is the fault-tolerance path the
+        paper gets from Kafka: a crashed inference replica's partitions move
+        to live replicas within a session timeout.
+        """
+        with self._lock:
+            now = self._clock()
+            dead = [
+                m.member_id
+                for m in self._members.values()
+                if now - m.last_heartbeat > self.session_timeout_s
+            ]
+            for mid in dead:
+                self._members.pop(mid)
+            if dead:
+                self._rebalance()
+            return dead
+
+    def _rebalance(self) -> None:
+        self.generation += 1
+        self._assignment = range_assign(list(self._members), self._partitions())
+
+    def assignment(self, member_id: str) -> list[TopicPartition]:
+        with self._lock:
+            return list(self._assignment.get(member_id, []))
+
+    @property
+    def members(self) -> list[str]:
+        with self._lock:
+            return sorted(self._members)
+
+    # ---------------------------------------------------------------- offsets
+    def committed(self, tp: TopicPartition) -> int:
+        off = self.log.committed_offset(self.group_id, tp)
+        return off if off is not None else self.log.start_offset(tp.topic, tp.partition)
+
+    def commit(self, tp: TopicPartition, offset: int) -> None:
+        self.log.commit_offset(self.group_id, tp, offset)
+
+
+class GroupConsumer:
+    """One member's view: poll assigned partitions from committed offsets.
+
+    ``poll`` returns record batches and advances *local* positions;
+    ``commit`` publishes them (at-least-once: a crash between poll and
+    commit re-delivers).
+    """
+
+    def __init__(self, group: ConsumerGroup, member_id: str):
+        self.group = group
+        self.member_id = member_id
+        self._positions: dict[TopicPartition, int] = {}
+        self._generation_seen = -1
+
+    def _sync_assignment(self) -> list[TopicPartition]:
+        assignment = self.group.assignment(self.member_id)
+        if self.group.generation != self._generation_seen:
+            # after a rebalance, restart from the group's committed offsets
+            self._positions = {tp: self.group.committed(tp) for tp in assignment}
+            self._generation_seen = self.group.generation
+        return assignment
+
+    def poll(self, max_records: int = 1024) -> list[RecordBatch]:
+        self.group.heartbeat(self.member_id)
+        batches: list[RecordBatch] = []
+        for tp in self._sync_assignment():
+            pos = self._positions[tp]
+            try:
+                batch = self.group.log.read(tp.topic, tp.partition, pos, max_records)
+            except OffsetOutOfRange:
+                # evicted under us — jump to log start (Kafka auto.offset.reset)
+                pos = self.group.log.start_offset(tp.topic, tp.partition)
+                batch = self.group.log.read(tp.topic, tp.partition, pos, max_records)
+            if len(batch):
+                self._positions[tp] = batch.next_offset
+                batches.append(batch)
+        return batches
+
+    def commit(self) -> None:
+        for tp, pos in self._positions.items():
+            self.group.commit(tp, pos)
+
+    def close(self) -> None:
+        self.commit()
+        self.group.leave(self.member_id)

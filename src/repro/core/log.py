@@ -1,0 +1,508 @@
+"""Distributed log — the Kafka-ML data substrate, JAX-host-native.
+
+Implements the semantics Kafka-ML relies on (paper §II, §V):
+
+* topics split into **partitions**; each partition is an append-only log of
+  records addressed by a monotonically increasing **offset**;
+* records are retained after consumption (the *distributed log*), so
+  consumers can re-read ranges — this is what lets Kafka-ML replay a
+  training stream to a new deployment with a tens-of-bytes control message
+  instead of re-sending the data;
+* **delete retention policy** with ``retention_bytes`` / ``retention_ms``
+  (paper §V lists exactly these two knobs; compact policy intentionally
+  not offered, as the paper argues delete is the right policy for ML
+  streams);
+* message-set (batched) appends amortize per-record overhead — the paper's
+  "message set abstraction";
+* zero-copy reads: records are returned as memoryviews into segment
+  buffers ("zero-copy optimizations" in paper §II).
+
+The log is an in-process, host-memory structure (segments are bytearrays)
+with optional disk spill. On a TPU pod the broker is colocated with the
+host, so a network hop becomes a RAM hop; every *semantic* (offsets,
+retention, replay, consumer groups) is preserved — see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import bisect
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, Sequence
+
+import numpy as np
+
+__all__ = [
+    "LogConfig",
+    "OffsetOutOfRange",
+    "Record",
+    "RecordBatch",
+    "StreamLog",
+    "TopicPartition",
+]
+
+
+class OffsetOutOfRange(LookupError):
+    """Requested offset is below the log start (evicted) or past the end."""
+
+
+@dataclass(frozen=True)
+class TopicPartition:
+    """Identifies one partition of one topic (Kafka's TopicPartition)."""
+
+    topic: str
+    partition: int
+
+    def __str__(self) -> str:  # [topic:partition] per the paper's format
+        return f"{self.topic}:{self.partition}"
+
+
+@dataclass(frozen=True)
+class Record:
+    """One record as seen by a consumer."""
+
+    topic: str
+    partition: int
+    offset: int
+    value: memoryview  # zero-copy view into the segment buffer
+    key: bytes | None
+    timestamp_ms: int
+
+    def value_bytes(self) -> bytes:
+        return bytes(self.value)
+
+
+@dataclass
+class LogConfig:
+    """Per-topic configuration (mirrors Kafka topic configs)."""
+
+    num_partitions: int = 1
+    # delete-retention knobs (paper §V): None ⇒ not applicable
+    retention_bytes: int | None = None
+    retention_ms: int | None = None
+    segment_bytes: int = 8 * 1024 * 1024  # roll segments at this size
+    replication_factor: int = 1  # bookkeeping only (single-host broker)
+    # disk spill: sealed (rolled) segments move their payload to an
+    # mmap-backed file under spill_dir; reads stay zero-copy (memoryview
+    # over the map). Host RAM then holds only the active segment + indexes.
+    spill_dir: str | None = None
+
+
+class _Segment:
+    """A contiguous chunk of the partition log.
+
+    Layout: one shared ``bytearray`` holding concatenated record payloads;
+    numpy index arrays map relative record index -> (start, length, key
+    range, timestamp). Batched appends write once into the buffer.
+    """
+
+    __slots__ = (
+        "base_offset",
+        "buf",
+        "key_buf",
+        "starts",
+        "lengths",
+        "key_starts",
+        "key_lengths",
+        "timestamps",
+        "count",
+        "created_ms",
+        "_spill_file",
+    )
+
+    def __init__(self, base_offset: int, created_ms: int):
+        self.base_offset = base_offset
+        self.buf = bytearray()
+        self.key_buf = bytearray()
+        # python lists while hot; frozen to numpy on roll
+        self.starts: list[int] = []
+        self.lengths: list[int] = []
+        self.key_starts: list[int] = []
+        self.key_lengths: list[int] = []
+        self.timestamps: list[int] = []
+        self.count = 0
+        self.created_ms = created_ms
+        self._spill_file = None
+
+    @property
+    def size_bytes(self) -> int:
+        return len(self.buf) + len(self.key_buf)
+
+    @property
+    def last_offset(self) -> int:
+        return self.base_offset + self.count - 1
+
+    def append_batch(
+        self,
+        values: Sequence[bytes | bytearray | memoryview],
+        keys: Sequence[bytes | None] | None,
+        timestamp_ms: int,
+    ) -> None:
+        pos = len(self.buf)
+        kpos = len(self.key_buf)
+        for i, v in enumerate(values):
+            self.starts.append(pos)
+            n = len(v)
+            self.lengths.append(n)
+            self.buf += v
+            pos += n
+            k = keys[i] if keys is not None else None
+            if k is None:
+                self.key_starts.append(kpos)
+                self.key_lengths.append(-1)
+            else:
+                self.key_starts.append(kpos)
+                self.key_lengths.append(len(k))
+                self.key_buf += k
+                kpos += len(k)
+            self.timestamps.append(timestamp_ms)
+        self.count += len(values)
+
+    def record(self, topic: str, partition: int, rel: int) -> Record:
+        start = self.starts[rel]
+        length = self.lengths[rel]
+        klen = self.key_lengths[rel]
+        key = (
+            None
+            if klen < 0
+            else bytes(self.key_buf[self.key_starts[rel] : self.key_starts[rel] + klen])
+        )
+        return Record(
+            topic=topic,
+            partition=partition,
+            offset=self.base_offset + rel,
+            value=memoryview(self.buf)[start : start + length],
+            key=key,
+            timestamp_ms=self.timestamps[rel],
+        )
+
+    def spill(self, path: str) -> None:
+        """Seal this segment's payload to an mmap-backed file (zero-copy
+        reads continue through the map); frees the heap buffer."""
+        import mmap
+
+        with open(path, "wb") as f:
+            f.write(bytes(self.buf))
+            f.flush()
+        if len(self.buf) == 0:
+            return
+        fh = open(path, "rb")
+        mm = mmap.mmap(fh.fileno(), 0, access=mmap.ACCESS_READ)
+        self.buf = mm  # memoryview(mmap) slices stay zero-copy
+        self._spill_file = (fh, path)
+
+    def drop_spill(self) -> None:
+        sp = getattr(self, "_spill_file", None)
+        if sp is not None:
+            fh, path = sp
+            try:
+                self.buf.close() if hasattr(self.buf, "close") else None
+                fh.close()
+                os.unlink(path)
+            except OSError:
+                pass
+
+
+@dataclass
+class RecordBatch:
+    """A batch of records read from one partition — supports vectorized decode.
+
+    ``values`` are zero-copy memoryviews; ``to_matrix`` stacks fixed-size
+    payloads into a single (n, record_bytes) uint8 array in one pass, the
+    fast path used by the training data pipeline.
+    """
+
+    topic: str
+    partition: int
+    first_offset: int
+    values: list[memoryview]
+    timestamps: list[int]
+
+    def __len__(self) -> int:
+        return len(self.values)
+
+    @property
+    def next_offset(self) -> int:
+        return self.first_offset + len(self.values)
+
+    def to_matrix(self) -> np.ndarray:
+        if not self.values:
+            return np.zeros((0, 0), dtype=np.uint8)
+        n = len(self.values[0])
+        if any(len(v) != n for v in self.values):
+            raise ValueError("to_matrix requires fixed-size records")
+        out = np.empty((len(self.values), n), dtype=np.uint8)
+        for i, v in enumerate(self.values):
+            out[i] = np.frombuffer(v, dtype=np.uint8)
+        return out
+
+
+class _Partition:
+    def __init__(self, topic: str, index: int, cfg: LogConfig, clock: Callable[[], int]):
+        self.topic = topic
+        self.index = index
+        self.cfg = cfg
+        self.clock = clock
+        self.segments: list[_Segment] = [_Segment(0, clock())]
+        self.log_start_offset = 0  # first retained offset
+        self.lock = threading.RLock()
+
+    # ------------------------------------------------------------------ write
+    def append_batch(
+        self, values: Sequence[bytes], keys: Sequence[bytes | None] | None
+    ) -> tuple[int, int]:
+        """Append a message set; returns (first_offset, last_offset)."""
+        with self.lock:
+            now = self.clock()
+            seg = self.segments[-1]
+            if seg.size_bytes >= self.cfg.segment_bytes and seg.count > 0:
+                if self.cfg.spill_dir is not None:  # seal -> mmap-backed file
+                    os.makedirs(self.cfg.spill_dir, exist_ok=True)
+                    seg.spill(os.path.join(
+                        self.cfg.spill_dir,
+                        f"{self.topic}-{self.index}-{seg.base_offset}.seg",
+                    ))
+                seg = _Segment(seg.base_offset + seg.count, now)
+                self.segments.append(seg)
+            first = seg.base_offset + seg.count
+            seg.append_batch(values, keys, now)
+            self._enforce_retention(now)
+            return first, seg.last_offset
+
+    # ------------------------------------------------------------------- read
+    @property
+    def end_offset(self) -> int:
+        seg = self.segments[-1]
+        return seg.base_offset + seg.count
+
+    def read(self, offset: int, max_records: int) -> RecordBatch:
+        with self.lock:
+            if offset < self.log_start_offset:
+                raise OffsetOutOfRange(
+                    f"{self.topic}:{self.index} offset {offset} < log start "
+                    f"{self.log_start_offset} (evicted by retention)"
+                )
+            end = self.end_offset
+            if offset > end:
+                raise OffsetOutOfRange(
+                    f"{self.topic}:{self.index} offset {offset} > end {end}"
+                )
+            n = min(max_records, end - offset)
+            values: list[memoryview] = []
+            timestamps: list[int] = []
+            if n > 0:
+                si = self._segment_for(offset)
+                remaining = n
+                off = offset
+                while remaining > 0:
+                    seg = self.segments[si]
+                    rel = off - seg.base_offset
+                    take = min(remaining, seg.count - rel)
+                    mv = memoryview(seg.buf)
+                    for r in range(rel, rel + take):
+                        start = seg.starts[r]
+                        values.append(mv[start : start + seg.lengths[r]])
+                        timestamps.append(seg.timestamps[r])
+                    remaining -= take
+                    off += take
+                    si += 1
+            return RecordBatch(
+                topic=self.topic,
+                partition=self.index,
+                first_offset=offset,
+                values=values,
+                timestamps=timestamps,
+            )
+
+    def _segment_for(self, offset: int) -> int:
+        bases = [s.base_offset for s in self.segments]
+        i = bisect.bisect_right(bases, offset) - 1
+        return max(i, 0)
+
+    # -------------------------------------------------------------- retention
+    def _enforce_retention(self, now_ms: int) -> None:
+        cfg = self.cfg
+        # never evict the active (last) segment
+        while len(self.segments) > 1:
+            head = self.segments[0]
+            evict = False
+            if cfg.retention_bytes is not None:
+                total = sum(s.size_bytes for s in self.segments)
+                if total > cfg.retention_bytes:
+                    evict = True
+            if not evict and cfg.retention_ms is not None:
+                if now_ms - head.created_ms > cfg.retention_ms:
+                    evict = True
+            if not evict:
+                break
+            self.segments.pop(0).drop_spill()
+            self.log_start_offset = self.segments[0].base_offset
+
+    def size_bytes(self) -> int:
+        with self.lock:
+            return sum(s.size_bytes for s in self.segments)
+
+
+class StreamLog:
+    """The broker: a set of topics, each a list of partitions.
+
+    Thread-safe. Also hosts the consumer-offset store (Kafka's
+    ``__consumer_offsets``) used by :mod:`repro.core.consumer`.
+    """
+
+    def __init__(self, clock: Callable[[], float] | None = None):
+        self._topics: dict[str, list[_Partition]] = {}
+        self._configs: dict[str, LogConfig] = {}
+        self._lock = threading.RLock()
+        self._clock = clock or time.time
+        # consumer group -> TopicPartition -> committed offset
+        self._committed: dict[str, dict[TopicPartition, int]] = {}
+
+    def _now_ms(self) -> int:
+        return int(self._clock() * 1000)
+
+    # ------------------------------------------------------------------ admin
+    def create_topic(self, name: str, cfg: LogConfig | None = None) -> None:
+        with self._lock:
+            if name in self._topics:
+                raise ValueError(f"topic {name!r} already exists")
+            cfg = cfg or LogConfig()
+            self._configs[name] = cfg
+            self._topics[name] = [
+                _Partition(name, i, cfg, self._now_ms)
+                for i in range(cfg.num_partitions)
+            ]
+
+    def ensure_topic(self, name: str, cfg: LogConfig | None = None) -> None:
+        with self._lock:
+            if name not in self._topics:
+                self.create_topic(name, cfg)
+
+    def topics(self) -> list[str]:
+        with self._lock:
+            return sorted(self._topics)
+
+    def num_partitions(self, topic: str) -> int:
+        return len(self._partitions(topic))
+
+    def delete_topic(self, name: str) -> None:
+        with self._lock:
+            self._topics.pop(name, None)
+            self._configs.pop(name, None)
+
+    def _partitions(self, topic: str) -> list[_Partition]:
+        try:
+            return self._topics[topic]
+        except KeyError:
+            raise KeyError(f"unknown topic {topic!r}") from None
+
+    def _partition(self, topic: str, partition: int) -> _Partition:
+        parts = self._partitions(topic)
+        if not 0 <= partition < len(parts):
+            raise IndexError(f"{topic} has no partition {partition}")
+        return parts[partition]
+
+    # ---------------------------------------------------------------- produce
+    def produce(
+        self,
+        topic: str,
+        value: bytes,
+        *,
+        key: bytes | None = None,
+        partition: int | None = None,
+    ) -> tuple[int, int]:
+        """Append one record; returns (partition, offset)."""
+        (p, first, _last) = self._produce_batch(topic, [value], [key], partition)
+        return p, first
+
+    def produce_batch(
+        self,
+        topic: str,
+        values: Sequence[bytes],
+        *,
+        keys: Sequence[bytes | None] | None = None,
+        partition: int | None = None,
+    ) -> tuple[int, int, int]:
+        """Append a message set to one partition.
+
+        Returns ``(partition, first_offset, last_offset)``. Batching is the
+        paper's "message set abstraction": one index/lock round per batch.
+        """
+        return self._produce_batch(topic, values, keys, partition)
+
+    def _produce_batch(
+        self,
+        topic: str,
+        values: Sequence[bytes],
+        keys: Sequence[bytes | None] | None,
+        partition: int | None,
+    ) -> tuple[int, int, int]:
+        parts = self._partitions(topic)
+        if partition is None:
+            if keys is not None and keys and keys[0] is not None:
+                partition = hash(bytes(keys[0])) % len(parts)
+            else:
+                partition = self._now_ms() % len(parts)  # sticky round-robin-ish
+        part = parts[partition]
+        first, last = part.append_batch(values, keys)
+        return partition, first, last
+
+    # ---------------------------------------------------------------- consume
+    def read(
+        self, topic: str, partition: int, offset: int, max_records: int = 1024
+    ) -> RecordBatch:
+        return self._partition(topic, partition).read(offset, max_records)
+
+    def read_range(
+        self, topic: str, partition: int, offset: int, length: int
+    ) -> RecordBatch:
+        """Read exactly ``length`` records starting at ``offset``.
+
+        This is the paper's §V access pattern: a control message names
+        ``[topic:partition:offset:length]`` and the training job reads that
+        exact slice of the distributed log.
+        """
+        batch = self.read(topic, partition, offset, length)
+        if len(batch) < length:
+            raise OffsetOutOfRange(
+                f"{topic}:{partition} range [{offset}, {offset+length}) extends past "
+                f"end {self.end_offset(topic, partition)}"
+            )
+        return batch
+
+    def iter_range(
+        self,
+        topic: str,
+        partition: int,
+        offset: int,
+        length: int,
+        chunk: int = 4096,
+    ) -> Iterator[RecordBatch]:
+        done = 0
+        while done < length:
+            take = min(chunk, length - done)
+            yield self.read_range(topic, partition, offset + done, take)
+            done += take
+
+    def start_offset(self, topic: str, partition: int) -> int:
+        return self._partition(topic, partition).log_start_offset
+
+    def end_offset(self, topic: str, partition: int) -> int:
+        return self._partition(topic, partition).end_offset
+
+    def size_bytes(self, topic: str, partition: int | None = None) -> int:
+        parts = self._partitions(topic)
+        if partition is not None:
+            return parts[partition].size_bytes()
+        return sum(p.size_bytes() for p in parts)
+
+    # -------------------------------------------------- consumer offset store
+    def commit_offset(self, group: str, tp: TopicPartition, offset: int) -> None:
+        with self._lock:
+            self._committed.setdefault(group, {})[tp] = offset
+
+    def committed_offset(self, group: str, tp: TopicPartition) -> int | None:
+        with self._lock:
+            return self._committed.get(group, {}).get(tp)

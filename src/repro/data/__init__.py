@@ -1,0 +1,2 @@
+from repro.data.formats import AvroCodec, FieldSpec, RawCodec, codec_from_control
+from repro.data.pipeline import BatchIterator, ShardedFeeder, StreamDataset, ingest

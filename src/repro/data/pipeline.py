@@ -1,0 +1,211 @@
+"""Log → device data pipeline.
+
+The glue between the distributed log and pjit'd compute:
+
+* :func:`ingest` — the producer-side library the paper ships (§III-D): it
+  encodes a dataset with a codec, appends it to data topic(s) as message
+  sets, then emits the control message with the exact
+  ``[topic:partition:offset:length]`` ranges.
+* :class:`StreamDataset` — the consumer side of Algorithm 1: given a
+  control message, read the ranges back from the log, vector-decode them,
+  and split train/eval by ``validation_rate`` (the paper's take/split).
+* :class:`BatchIterator` — shuffled epoch batching (host-side, numpy).
+* :class:`ShardedFeeder` — places host batches on the mesh with a named
+  sharding (batch axis over ``('pod','data')``) and prefetches one batch
+  ahead on a background thread so host decode overlaps device compute.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Iterator, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.control import ControlMessage, StreamRange, send_control
+from repro.core.log import StreamLog
+from repro.data.formats import AvroCodec, RawCodec, codec_from_control
+
+__all__ = ["BatchIterator", "ShardedFeeder", "StreamDataset", "ingest"]
+
+
+# --------------------------------------------------------------------- ingest
+def ingest(
+    log: StreamLog,
+    topic: str,
+    codec: RawCodec | AvroCodec,
+    arrays: Mapping[str, np.ndarray],
+    deployment_id: str,
+    *,
+    validation_rate: float = 0.0,
+    partition: int | None = None,
+    message_set_size: int = 1024,
+    send_control_message: bool = True,
+) -> ControlMessage:
+    """Producer library: encode + stream a dataset, then announce it.
+
+    Returns the control message (already sent to the control topic unless
+    ``send_control_message=False``). The data lives only in the log —
+    no file system (paper contribution #2).
+    """
+    log.ensure_topic(topic)
+    encoded = codec.encode_batch(arrays)
+    total = len(encoded)
+    ranges: list[StreamRange] = []
+    i = 0
+    cur: tuple[int, int, int] | None = None  # (partition, first, last)
+    while i < total:
+        chunk = encoded[i : i + message_set_size]
+        p, first, last = log.produce_batch(topic, chunk, partition=partition)
+        if cur is not None and cur[0] == p and first == cur[2] + 1:
+            cur = (p, cur[1], last)
+        else:
+            if cur is not None:
+                ranges.append(StreamRange(topic, cur[0], cur[1], cur[2] - cur[1] + 1))
+            cur = (p, first, last)
+        # stick to the chosen partition for the rest of the stream so the
+        # range list stays compact (Kafka sticky partitioner)
+        partition = p
+        i += message_set_size
+    if cur is not None:
+        ranges.append(StreamRange(topic, cur[0], cur[1], cur[2] - cur[1] + 1))
+
+    msg = ControlMessage(
+        deployment_id=deployment_id,
+        topic=topic,
+        input_format=codec.FORMAT,
+        input_config=codec.input_config(),
+        validation_rate=validation_rate,
+        total_msg=total,
+        ranges=ranges,
+    )
+    if send_control_message:
+        send_control(log, msg)
+    return msg
+
+
+# -------------------------------------------------------------- StreamDataset
+class StreamDataset:
+    """Materialize the stream a control message points at (Algorithm 1).
+
+    ``read()`` decodes every range; ``split()`` applies ``validation_rate``
+    — the paper trains on the leading ``1 - rate`` fraction and evaluates on
+    the tail.
+    """
+
+    def __init__(self, log: StreamLog, msg: ControlMessage):
+        self.log = log
+        self.msg = msg
+        self.codec = codec_from_control(msg.input_format, msg.input_config)
+
+    def read(self) -> dict[str, np.ndarray]:
+        mats = []
+        for r in self.msg.ranges:
+            for batch in self.log.iter_range(r.topic, r.partition, r.offset, r.length):
+                mats.append(batch.to_matrix())
+        if not mats:
+            return {f.name: np.zeros((0,) + f.shape, f.dtype) for f in self.codec.fields}
+        mat = np.concatenate(mats, axis=0)
+        return self.codec.decode_matrix(mat)
+
+    def split(self) -> tuple[dict[str, np.ndarray], dict[str, np.ndarray]]:
+        full = self.read()
+        n = self.msg.total_msg
+        n_train = n - int(round(n * self.msg.validation_rate))
+        train = {k: v[:n_train] for k, v in full.items()}
+        evald = {k: v[n_train:] for k, v in full.items()}
+        return train, evald
+
+
+# -------------------------------------------------------------- BatchIterator
+class BatchIterator:
+    """Shuffled, epoch'd minibatches over host arrays (drop-remainder)."""
+
+    def __init__(
+        self,
+        arrays: Mapping[str, np.ndarray],
+        batch_size: int,
+        *,
+        shuffle: bool = True,
+        seed: int = 0,
+        epochs: int | None = None,
+    ):
+        sizes = {v.shape[0] for v in arrays.values()}
+        if len(sizes) != 1:
+            raise ValueError(f"ragged field sizes {sizes}")
+        self.n = sizes.pop()
+        if self.n < batch_size:
+            raise ValueError(f"dataset of {self.n} records < batch_size {batch_size}")
+        self.arrays = dict(arrays)
+        self.batch_size = batch_size
+        self.shuffle = shuffle
+        self.rng = np.random.default_rng(seed)
+        self.epochs = epochs
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        epoch = 0
+        while self.epochs is None or epoch < self.epochs:
+            idx = (
+                self.rng.permutation(self.n) if self.shuffle else np.arange(self.n)
+            )
+            for s in range(0, self.n - self.batch_size + 1, self.batch_size):
+                sel = idx[s : s + self.batch_size]
+                yield {k: v[sel] for k, v in self.arrays.items()}
+            epoch += 1
+
+    def steps_per_epoch(self) -> int:
+        return self.n // self.batch_size
+
+
+# -------------------------------------------------------------- ShardedFeeder
+class ShardedFeeder:
+    """Device placement + 1-deep prefetch.
+
+    The batch axis is sharded over the mesh's data-parallel axes so each
+    device receives only its slice; host decode of batch ``i+1`` overlaps
+    device compute of batch ``i``.
+    """
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        batch_axes: Sequence[str] = ("data",),
+        *,
+        prefetch: int = 1,
+    ):
+        self.mesh = mesh
+        axes = [a for a in batch_axes if a in mesh.axis_names]
+        self.sharding = NamedSharding(mesh, P(tuple(axes)))
+        self.prefetch = prefetch
+
+    def place(self, batch: Mapping[str, np.ndarray]) -> dict[str, jax.Array]:
+        return {k: jax.device_put(v, self.sharding) for k, v in batch.items()}
+
+    def __call__(
+        self, it: Iterator[Mapping[str, np.ndarray]]
+    ) -> Iterator[dict[str, jax.Array]]:
+        if self.prefetch <= 0:
+            for b in it:
+                yield self.place(b)
+            return
+        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+        _DONE = object()
+
+        def _worker() -> None:
+            try:
+                for b in it:
+                    q.put(self.place(b))
+            finally:
+                q.put(_DONE)
+
+        t = threading.Thread(target=_worker, daemon=True)
+        t.start()
+        while True:
+            item = q.get()
+            if item is _DONE:
+                break
+            yield item

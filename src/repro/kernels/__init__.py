@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the model zoo's compute hot spots.
+
+flash_attention / ssd_scan / rglru_scan, each with a pure-jnp oracle in
+ref.py and a model-facing jit wrapper in ops.py. The paper itself (Kafka-ML)
+has no kernel-level contribution — these serve the assigned architectures'
+hot paths (DESIGN.md §2).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan_kernel
+from repro.kernels.ssd_scan import ssd_scan

@@ -1,0 +1,107 @@
+"""jit'd wrappers bridging model-layer calling conventions to the kernels.
+
+The model layers use (B, S, H, D) activation layout and grouped (GQA /
+SSD-group) KV; the kernels want (B, H, S, D) with per-head tensors. These
+wrappers do the (XLA-fused) transposes/repeats, pick interpret mode
+automatically (interpret on CPU, compiled on TPU), and are the only
+entry points the rest of the codebase calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan_kernel
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["attention_op", "rglru_op", "ssd_op", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "block_q", "block_k")
+)
+def attention_op(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, Kv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qt = jnp.moveaxis(q, 1, 2)  # (B, H, S, D)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    if rep != 1:
+        kt = jnp.repeat(kt, rep, axis=1)
+        vt = jnp.repeat(vt, rep, axis=1)
+    out = flash_attention(
+        qt,
+        kt,
+        vt,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=min(block_q, s),
+        block_k=min(block_k, s),
+        interpret=default_interpret(),
+    )
+    return jnp.moveaxis(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_op(
+    x: jax.Array,  # (B, S, H, P) — model layout
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    init_state: jax.Array | None = None,  # (B, H, N, P)
+    *,
+    chunk: int = 256,
+):
+    b, s, h, p = x.shape
+    g = Bm.shape[2]
+    rep = h // g
+    xt = jnp.moveaxis(x, 1, 2)  # (B, H, S, P)
+    dtt = jnp.moveaxis(dt, 1, 2)  # (B, H, S)
+    Bt = jnp.moveaxis(Bm, 1, 2)  # (B, G, S, N)
+    Ct = jnp.moveaxis(Cm, 1, 2)
+    if rep != 1:
+        Bt = jnp.repeat(Bt, rep, axis=1)
+        Ct = jnp.repeat(Ct, rep, axis=1)
+    y, st = ssd_scan(
+        xt, dtt.astype(jnp.float32), A, Bt, Ct, init_state,
+        chunk=chunk, interpret=default_interpret(),
+    )
+    return jnp.moveaxis(y, 1, 2), st
+
+
+@functools.partial(jax.jit, static_argnames=("t_block",))
+def rglru_op(
+    x: jax.Array,  # (B, S, C) gated input (fp32)
+    log_a: jax.Array,  # (B, S, C) fp32
+    h0: jax.Array | None = None,
+    *,
+    t_block: int = 256,
+):
+    return rglru_scan_kernel(
+        x.astype(jnp.float32),
+        log_a.astype(jnp.float32),
+        h0,
+        t_block=min(t_block, x.shape[1]),
+        interpret=default_interpret(),
+    )

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mha(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Naive full-materialization attention."""
+    b, h, s, d = q.shape
+    s_ = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s_ = s_ / math.sqrt(d)
+    if softcap is not None:
+        s_ = softcap * jnp.tanh(s_ / softcap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    s_ = jnp.where(ok[None, None], s_, -1e30)
+    w = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd(
+    x: jax.Array,  # (B, H, S, P)
+    dt: jax.Array,  # (B, H, S) fp32 post-softplus
+    A: jax.Array,  # (H,) fp32 negative
+    Bm: jax.Array,  # (B, H, S, N) pre-repeated per head
+    Cm: jax.Array,  # (B, H, S, N)
+    init_state: jax.Array | None = None,  # (B, H, N, P)
+):
+    """Sequential SSD recurrence (the definitional oracle).
+
+    S_t = exp(dt_t A) S_{t-1} + B_t (dt_t x_t)^T ;  y_t = C_t . S_t
+    Returns (y (B,H,S,P), final_state (B,H,N,P)).
+    """
+    b, h, s, p = x.shape
+    n = Bm.shape[-1]
+    state = (
+        jnp.zeros((b, h, n, p), jnp.float32) if init_state is None else init_state
+    )
+
+    def step(state, t):
+        dA = jnp.exp(dt[:, :, t] * A[None, :])  # (B, H)
+        upd = jnp.einsum(
+            "bhn,bhp->bhnp",
+            Bm[:, :, t].astype(jnp.float32),
+            (x[:, :, t] * dt[:, :, t, None].astype(x.dtype)).astype(jnp.float32),
+        )
+        state = state * dA[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Cm[:, :, t].astype(jnp.float32), state)
+        return state, y
+
+    final, ys = jax.lax.scan(step, state, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype), final
+
+
+def rglru(
+    x: jax.Array,  # (B, S, D) fp32 gated input
+    log_a: jax.Array,  # (B, S, D) fp32 log decay
+    h0: jax.Array | None = None,  # (B, D)
+):
+    """Sequential linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t."""
+    b, s, d = x.shape
+    h = jnp.zeros((b, d), jnp.float32) if h0 is None else h0
+
+    def step(h, t):
+        a = jnp.exp(log_a[:, t])
+        h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * x[:, t]
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h, jnp.arange(s))
+    return jnp.moveaxis(hs, 0, 1), h_last

@@ -1,0 +1,529 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+SPMD-partitions, and compiles on the production mesh — and extract the
+memory/cost/collective numbers the roofline analysis (EXPERIMENTS.md
+§Roofline) reads.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line above executes before any other import so jax sees 512
+placeholder CPU devices. Smoke tests and benches run in normal processes
+and see 1 device.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    python -m repro.launch.dryrun --all --out experiments/dryrun
+    python -m repro.launch.dryrun --all --mesh multi
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models.model import ArchConfig, StreamModel
+from repro.models.policy import Policy
+from repro.train.optimizer import adamw, adamw8bit
+from repro.train.trainer import build_train_step, state_pspecs
+
+# archs whose parameter+optimizer state needs ZeRO-3 over the data axis
+FSDP_ARCHS = {
+    "qwen3-moe-30b-a3b",
+    "arctic-480b",
+    "qwen2-7b",
+    "yi-6b",
+    "mistral-large-123b",
+    "pixtral-12b",
+    "recurrentgemma-9b",
+    "gemma2-2b",   # attention params don't TP-shard (8 heads); ZeRO them
+    "mamba2-2.7b",
+}
+# archs whose optimizer moments must be 8-bit to fit (DESIGN.md §4)
+OPT8BIT_ARCHS = {"arctic-480b", "mistral-large-123b", "qwen3-moe-30b-a3b"}
+# archs whose *serving* weights must be int8-PTQ to fit 16 GB/chip; they
+# also replicate the (tiny) decode token batch so the KV cache and expert
+# d_ff can shard over the data axis too (flash-decode + 2D EP)
+SERVE_INT8_ARCHS = {"arctic-480b", "mistral-large-123b"}
+# pad query heads up to a multiple of the model axis so attention runs the
+# collective-free "heads" strategy instead of context parallelism. Measured
+# (EXPERIMENTS.md §Perf it-A2): a clear win ONLY for arctic (halved its
+# collective bytes); on qwen2/gemma2 the seq-strategy reshard bytes merely
+# became TP all-reduce bytes while temp memory regressed ~2x, so those keep
+# context parallelism (hypothesis partially refuted — recorded).
+HEAD_PAD_ARCHS = {"arctic-480b": 64}
+# gradient-accumulation microbatch count for train_4k: bounds the
+# per-device activation checkpoints (n_layers x B_micro x S x d) to fit
+# 16 GB HBM (EXPERIMENTS.md §Perf it-8)
+MICROBATCH_ARCHS = {
+    "mistral-large-123b": 16,
+    "arctic-480b": 8,
+    "pixtral-12b": 8,
+    "yi-6b": 4,
+    "qwen3-moe-30b-a3b": 4,
+    "mamba2-2.7b": 4,
+    "recurrentgemma-9b": 4,
+    "qwen2-7b": 2,
+    "whisper-tiny": 2,
+}
+# remat policy per arch family for train_4k
+REMAT_ARCHS = {
+    # 'full' = nothing_saveable: per-group backward recompute. 'block'
+    # (dots_with_no_batch_dims_saveable) stacks every projection output
+    # across scan groups in fp32 — measured +20 GB/dev on gemma2
+    # (EXPERIMENTS.md §Perf it-3); 'full' trades ~30% more flops for it.
+    "arctic-480b": "full",
+    "mistral-large-123b": "full",
+    "qwen3-moe-30b-a3b": "full",
+    "qwen2-7b": "full",
+    "yi-6b": "full",
+    "pixtral-12b": "full",
+    "recurrentgemma-9b": "full",
+    "gemma2-2b": "full",
+    "mamba2-2.7b": "full",
+    "whisper-tiny": "full",
+}
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=?"
+)
+SHAPE_RE = re.compile(r"(f8e4m3fn|f8e5m2|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device bytes moved by each collective kind, from optimized HLO.
+
+    For each collective instruction we count the *result* shapes on the
+    line (the per-device tensor that transits the interconnect); -start/
+    -done pairs are counted once via the -start line.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        rhs = ls.split("=", 1)[1]
+        # "<result type> <op-name>(operands...)": match op name before '('
+        head = rhs.split("(", 1)[0]
+        m = COLLECTIVE_RE.search(head)
+        if not m or "-done" in head:
+            continue
+        kind = m.group(1)
+        # result type(s): every shape token in the head (covers tuples)
+        size = sum(_shape_bytes(sm) for sm in SHAPE_RE.finditer(head))
+        out[kind] = out.get(kind, 0) + size
+    return out
+
+
+def policy_for(cfg: ArchConfig, shape: configs.ShapeCell, mesh: Mesh) -> Policy:
+    sizes = mesh_axis_sizes(mesh)
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    fsdp = ("data",) if (cfg.name in FSDP_ARCHS and shape.kind == "train") else ()
+    seq_axis = None
+    weights_int8 = False
+    ep_inner: tuple = ()
+    big_serve = cfg.name in SERVE_INT8_ARCHS and shape.kind in ("prefill", "decode")
+    if big_serve:
+        weights_int8 = True
+    if shape.kind == "decode":
+        dp = 1
+        for a in batch_axes:
+            dp *= sizes[a]
+        # flash-decode (shard_map) streams a seq-sharded cache everywhere a
+        # cache exists; batch stays on data axes when it covers them
+        if shape.global_batch < dp or big_serve:
+            batch_axes = ()
+            seq_axis = tuple(a for a in ("pod", "data", "model") if a in sizes)
+            if big_serve and cfg.moe is not None:
+                ep_inner = tuple(a for a in ("pod", "data") if a in sizes)
+        else:
+            seq_axis = "model"
+        if cfg.n_heads == 0:  # attention-free (mamba2): no kv cache to shard
+            seq_axis = None
+    if big_serve and shape.kind == "prefill" and cfg.moe is not None:
+        # arctic prefill: int8 expert weights still need the data axis
+        fsdp = ("data",)
+    remat = REMAT_ARCHS.get(cfg.name, "none") if shape.kind == "train" else "none"
+    # arctic/mistral-large need full ZeRO (even 8-bit moments of TP-sharded
+    # leaves overflow HBM); everyone else ZeROs only non-TP-shardable params
+    selective = cfg.name not in OPT8BIT_ARCHS
+    return Policy(
+        mesh_axes=sizes,
+        batch_axes=batch_axes,
+        tp_axis="model",
+        fsdp_axes=fsdp,
+        fsdp_selective=selective,
+        seq_axis=seq_axis,
+        remat=remat,
+        weights_int8=weights_int8,
+        ep_inner_axes=ep_inner,
+        kv_cache_dtype="float8_e4m3fn" if (big_serve and shape.kind == "decode") else "bfloat16",
+    )
+
+
+def _optimizer(cfg: ArchConfig):
+    return adamw8bit(1e-4) if cfg.name in OPT8BIT_ARCHS else adamw(1e-4)
+
+
+def _serving_params(model: StreamModel, mesh: Mesh):
+    """(ShapeDtypeStruct tree, shardings) for prefill/decode — int8-PTQ'd
+    when the policy says so."""
+    from repro.models.model import quantize_params, quantized_pspecs
+
+    raw_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = model.param_pspecs()
+    if model.policy.weights_int8:
+        params_sds = jax.eval_shape(quantize_params, raw_sds)
+        pspecs = quantized_pspecs(raw_sds, pspecs)
+    else:
+        params_sds = raw_sds
+    pshard = jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+    return params_sds, pshard
+
+
+def effective_config(arch_id: str):
+    import dataclasses as dc
+
+    cfg = configs.get(arch_id)
+    if arch_id in HEAD_PAD_ARCHS:
+        cfg = dc.replace(cfg, n_heads=HEAD_PAD_ARCHS[arch_id])
+    return cfg
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh: Mesh):
+    """Lower + compile one cell. Returns (compiled, lowered, meta)."""
+    cfg = effective_config(arch_id)
+    shape = configs.SHAPES[shape_name]
+    pol = policy_for(cfg, shape, mesh)
+    model = StreamModel(cfg, pol, mesh)
+    in_specs = configs.input_specs(cfg, shape)
+    batch_sharding = {
+        k: NamedSharding(mesh, P(pol.batch_spec(v.shape[0])))
+        for k, v in in_specs.items()
+    }
+
+    with mesh:
+        if shape.kind == "train":
+            opt = _optimizer(cfg)
+            state_sds = jax.eval_shape(
+                lambda: {
+                    "params": model.init(jax.random.PRNGKey(0)),
+                    "opt": opt.init(
+                        jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+                    ),
+                }
+            )
+            specs = state_pspecs(model, opt)
+            shardings = jax.tree.map(
+                lambda sp: NamedSharding(mesh, sp), specs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            step_fn, _ = build_train_step(
+                model, opt, mesh=None,
+                microbatches=MICROBATCH_ARCHS.get(cfg.name, 1),
+            )
+            jitted = jax.jit(
+                lambda s, b: step_fn(s, b),
+                in_shardings=(shardings, batch_sharding),
+                out_shardings=(shardings, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_sds, in_specs)
+        elif shape.kind == "prefill":
+            params_sds, pshard = _serving_params(model, mesh)
+            fn = jax.jit(
+                lambda p, b: model.prefill(p, b, shape.seq_len),
+                in_shardings=(pshard, batch_sharding),
+            )
+            lowered = fn.lower(params_sds, in_specs)
+        else:  # decode
+            params_sds, pshard = _serving_params(model, mesh)
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cshard = jax.tree.map(
+                lambda sp: NamedSharding(mesh, sp),
+                model.cache_pspecs(shape.global_batch),
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            fn = jax.jit(
+                lambda p, c, t, pos: model.decode_step(p, c, t, pos),
+                in_shardings=(
+                    pshard,
+                    cshard,
+                    batch_sharding["tokens"],
+                    NamedSharding(mesh, P()),
+                ),
+                out_shardings=(None, cshard),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(
+                params_sds,
+                cache_sds,
+                in_specs["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+        compiled = lowered.compile()
+    return compiled, lowered, {"cfg": cfg, "shape": shape, "policy": pol}
+
+
+def analyze(compiled, mesh: Mesh) -> dict:
+    n_dev = mesh.devices.size
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {
+                k: int(getattr(ma, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(ma, k)
+            }
+    except Exception:
+        pass
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    return {
+        "devices": n_dev,
+        "flops_per_device": float(cost.get("flops", -1)) if cost else -1,
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1)) if cost else -1,
+        "transcendentals": float(cost.get("transcendentals", -1)) if cost else -1,
+        "memory_analysis": mem,
+        "collective_bytes_per_device": coll,
+        "hlo_collective_counts": {
+            k: hlo.count(f" {k}") for k in
+            ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+        },
+    }
+
+
+def measure_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str | None):
+    """Depth-extrapolated cost measurement (EXPERIMENTS.md §Roofline).
+
+    XLA's HloCostAnalysis visits a while-loop body ONCE, so the scanned
+    full-depth lowering under-reports flops/bytes/collectives by the trip
+    counts. This lowers 1-group and 2-group variants with every scan
+    UNROLLED (policy.unroll) and microbatching off, then extrapolates
+    linearly in depth:  cost(L) = c1 + (c2 - c1) * (L/p - 1).
+    The full-depth record keeps the authoritative memory_analysis.
+    """
+    import dataclasses as dc
+
+    ok, why = configs.cell_supported(arch_id, shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch_id}__{shape_name}__{mesh_name}"
+    if not ok:
+        return None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg_full = effective_config(arch_id)
+    shape = configs.SHAPES[shape_name]
+    p = len(cfg_full.pattern)
+    t0 = time.time()
+
+    def one(groups: int) -> dict:
+        cfg = dc.replace(cfg_full, n_layers=groups * p)
+        pol = dc.replace(policy_for(cfg, shape, mesh), unroll=True)
+        model = StreamModel(cfg, pol, mesh)
+        in_specs = configs.input_specs(cfg, shape)
+        bshard = {
+            k: NamedSharding(mesh, P(pol.batch_spec(v.shape[0])))
+            for k, v in in_specs.items()
+        }
+        with mesh:
+            if shape.kind == "train":
+                opt = _optimizer(cfg)
+                raw = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+                state_sds = {"params": raw, "opt": jax.eval_shape(opt.init, raw)}
+                specs = state_pspecs(model, opt)
+                sh = jax.tree.map(
+                    lambda sp: NamedSharding(mesh, sp), specs,
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+                step_fn, _ = build_train_step(model, opt, mesh=None, microbatches=1)
+                c = jax.jit(
+                    step_fn, in_shardings=(sh, bshard), out_shardings=(sh, None)
+                ).lower(state_sds, in_specs).compile()
+            elif shape.kind == "prefill":
+                params_sds, pshard = _serving_params(model, mesh)
+                c = jax.jit(
+                    lambda pp, b: model.prefill(pp, b, shape.seq_len),
+                    in_shardings=(pshard, bshard),
+                ).lower(params_sds, in_specs).compile()
+            else:
+                params_sds, pshard = _serving_params(model, mesh)
+                cache_sds = jax.eval_shape(
+                    lambda: model.init_cache(shape.global_batch, shape.seq_len)
+                )
+                cshard = jax.tree.map(
+                    lambda sp: NamedSharding(mesh, sp),
+                    model.cache_pspecs(shape.global_batch),
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+                c = jax.jit(
+                    model.decode_step,
+                    in_shardings=(pshard, cshard, bshard["tokens"], NamedSharding(mesh, P())),
+                    out_shardings=(None, cshard),
+                ).lower(
+                    params_sds, cache_sds, in_specs["tokens"],
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                ).compile()
+        ca = c.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        return {
+            "flops": float(ca.get("flops", 0)),
+            "bytes": float(ca.get("bytes accessed", 0)),
+            "coll": collective_bytes(c.as_text()),
+        }
+
+    try:
+        c1 = one(1)
+        c2 = one(2)
+        g_full = cfg_full.n_layers / p
+
+        def extra(a, b):
+            return max(a + (b - a) * (g_full - 1), 0.0)
+
+        coll_kinds = set(c1["coll"]) | set(c2["coll"])
+        rec = {
+            "cell": tag,
+            "status": "OK",
+            "measure_s": round(time.time() - t0, 1),
+            "groups_full": g_full,
+            "flops_per_device": extra(c1["flops"], c2["flops"]),
+            "bytes_accessed_per_device": extra(c1["bytes"], c2["bytes"]),
+            "collective_bytes_per_device": {
+                k: extra(c1["coll"].get(k, 0), c2["coll"].get(k, 0))
+                for k in coll_kinds
+            },
+            "raw": {"g1": c1, "g2": c2},
+        }
+        print(f"** measured {tag}: flops/dev {rec['flops_per_device']:.3e} "
+              f"bytes/dev {rec['bytes_accessed_per_device']:.3e} ({rec['measure_s']}s)")
+    except Exception as e:
+        rec = {"cell": tag, "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-3000:]}
+        print(f"** measured {tag}: FAIL {rec['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".measured.json"), "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str | None):
+    ok, why = configs.cell_supported(arch_id, shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch_id}__{shape_name}__{mesh_name}"
+    if not ok:
+        rec = {"cell": tag, "status": "SKIP", "reason": why}
+        print(json.dumps(rec))
+        if out_dir:
+            with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=2)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        compiled, lowered, meta = lower_cell(arch_id, shape_name, mesh)
+        stats = analyze(compiled, mesh)
+        rec = {
+            "cell": tag,
+            "status": "OK",
+            "compile_s": round(time.time() - t0, 1),
+            "mesh": list(mesh.devices.shape),
+            **stats,
+        }
+        mem = stats.get("memory_analysis") or {}
+        print(f"== {tag}: OK in {rec['compile_s']}s")
+        print(f"   memory_analysis: {mem}")
+        print(
+            f"   cost: flops/dev={stats['flops_per_device']:.3e} "
+            f"bytes/dev={stats['bytes_accessed_per_device']:.3e}"
+        )
+        print(f"   collectives: {stats['collective_bytes_per_device']}")
+    except Exception as e:
+        rec = {
+            "cell": tag,
+            "status": "FAIL",
+            "compile_s": round(time.time() - t0, 1),
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        print(f"== {tag}: FAIL {rec['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--measure", action="store_true",
+                    help="depth-extrapolated cost measurement instead of full lowering")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    archs = configs.names() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(configs.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    fails = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                if args.measure:
+                    rec = measure_cell(a, s, mp, args.out)
+                    if rec is None:
+                        continue
+                else:
+                    rec = run_cell(a, s, mp, args.out)
+                cells.append(rec)
+                fails += rec["status"] == "FAIL"
+    print(f"\n{len(cells)} cells: "
+          f"{sum(r['status']=='OK' for r in cells)} OK, "
+          f"{sum(r['status']=='SKIP' for r in cells)} SKIP, {fails} FAIL")
+    sys.exit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

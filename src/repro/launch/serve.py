@@ -1,0 +1,83 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Spins up an InferenceDeployment (paper Algorithm 2) for a (reduced)
+architecture: N replicas on a consumer group, prompts streamed through the
+input topic, greedy completions to the output topic.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+import repro.core as core
+from repro.models.model import StreamModel
+from repro.models.policy import Policy
+from repro.serve import InferenceDeployment
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.names())
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--prompts", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch)
+    if cfg.enc_dec or cfg.frontend != "none":
+        raise SystemExit(f"{args.arch}: serve launcher supports text decoders; "
+                         "see examples/serve_lm.py for frontend stubs")
+    model = StreamModel(cfg, Policy())
+    params = model.init(jax.random.PRNGKey(0))
+    s_cache = args.prompt_len + args.gen
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, s_cache))
+    decode = jax.jit(model.decode_step)
+
+    def generate(d):
+        toks = jnp.asarray(d["data"].astype(np.int32))
+        logits, cache = prefill(params, {"tokens": toks})
+        tok = jnp.argmax(logits, -1)[:, None]
+        outs = [tok]
+        for i in range(args.gen - 1):
+            lg, cache = decode(params, cache, tok, jnp.int32(args.prompt_len + i))
+            tok = jnp.argmax(lg[:, 0], -1)[:, None]
+            outs.append(tok)
+        return np.asarray(jnp.concatenate(outs, 1)).astype(np.int32)
+
+    log, registry = core.StreamLog(), core.Registry()
+    spec = registry.register_model(args.arch)
+    c = registry.create_configuration([spec.model_id])
+    dep = registry.deploy(c.config_id, "train")
+    res = registry.upload_result(
+        dep.deployment_id, spec.model_id, {"loss": 0.0},
+        input_format="RAW",
+        input_config={"data_type": "int32", "data_reshape": [args.prompt_len],
+                      "label_type": "int32", "label_reshape": []},
+    )
+    log.create_topic("prompts", core.LogConfig(num_partitions=args.replicas * 2))
+    infer = InferenceDeployment(
+        log, registry, res.result_id, predict_fn=generate,
+        input_topic="prompts", output_topic="completions",
+        replicas=args.replicas,
+    )
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (args.prompts, args.prompt_len)).astype(np.int32)
+    per = max(args.prompts // (args.replicas * 2), 1)
+    for p in range(args.replicas * 2):
+        chunk = prompts[p * per : (p + 1) * per]
+        if len(chunk):
+            log.produce_batch("prompts", [r.tobytes() for r in chunk], partition=p)
+    served = infer.drain()
+    print(f"served {served} prompts across "
+          f"{ {r.replica_id: r.stats.processed for r in infer.replicas} }")
+    print(f"{log.end_offset('completions', 0)} completions on the output topic")
+
+
+if __name__ == "__main__":
+    main()

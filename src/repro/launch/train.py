@@ -1,0 +1,108 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Builds the (reduced or full) architecture, streams a synthetic corpus into
+the distributed log, and runs the pjit training job on the local device
+mesh with checkpoint/restart. On a real TPU pod slice this same entry
+point runs under ``jax.distributed.initialize()`` with the production mesh
+(``--mesh production``); on this CPU container use the default local mesh
+and ``--reduced``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+import repro.core as core
+import repro.data as data
+from repro.data.formats import RawCodec
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import StreamModel
+from repro.models.policy import Policy
+from repro.train import adamw, checkpoint as ck, cosine_schedule
+from repro.train.trainer import build_train_step, make_state, state_pspecs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.names())
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", choices=["local", "production", "production-multi"],
+                    default="local")
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
+    if args.mesh == "local":
+        n = jax.device_count()
+        mesh = jax.make_mesh((n,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "production-multi")
+    pol = Policy.for_mesh(mesh)
+    model = StreamModel(cfg, pol, mesh)
+    print(f"arch={cfg.name} params={cfg.param_count():,} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    # stream a synthetic corpus through the log (the paper's pipeline)
+    log, registry = core.StreamLog(), core.Registry()
+    spec = registry.register_model(args.arch)
+    config = registry.create_configuration([spec.model_id])
+    dep = registry.deploy(config.config_id, "train")
+    rng = np.random.default_rng(0)
+    corpus = rng.integers(0, cfg.vocab, (max(args.batch * 8, 64), args.seq)).astype(np.int32)
+    codec = RawCodec("int32", (args.seq,), "int32", ())
+    log.create_topic("corpus")
+    msg = data.ingest(log, "corpus", codec,
+                      {"data": corpus, "label": np.zeros(len(corpus), np.int32)},
+                      dep.deployment_id)
+    got, _ = core.poll_control(log, dep.deployment_id)
+    train_arrays, _ = data.StreamDataset(log, got).split()
+
+    opt = adamw(cosine_schedule(3e-4, 10, args.steps))
+    step_fn, shardings = build_train_step(
+        model, opt, mesh=mesh, microbatches=args.microbatches
+    )
+    with mesh:
+        state = make_state(model, opt, jax.random.PRNGKey(0))
+        if shardings is not None:
+            state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
+        start = 0
+        mgr = ck.CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+        if args.resume and mgr and mgr.latest() is not None:
+            state, offsets, meta = ck.restore(args.ckpt_dir, state, shardings=shardings)
+            start = int(meta.get("next_step", 0))
+            print(f"resumed from step {start}")
+        it = iter(data.BatchIterator(train_arrays, args.batch, seed=0, epochs=None))
+        feeder = data.ShardedFeeder(mesh, pol.batch_axes or ("data",))
+        for i in range(start, args.steps):
+            host = next(it)
+            batch = feeder.place({"tokens": host["data"]})
+            state, metrics = step_fn(state, batch)
+            if (i + 1) % 10 == 0 or i + 1 == args.steps:
+                print(f"step {i+1}: loss {float(metrics['loss']):.4f}")
+                if mgr:
+                    mgr.save_async(i + 1, state,
+                                   offsets={str(r): r.end for r in msg.ranges},
+                                   meta={"next_step": i + 1})
+        if mgr:
+            mgr.wait()
+    registry.upload_result(dep.deployment_id, spec.model_id,
+                           {"loss": float(metrics["loss"])},
+                           artifact_path=args.ckpt_dir)
+    print("done; result registered")
+
+
+if __name__ == "__main__":
+    main()

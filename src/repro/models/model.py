@@ -1,0 +1,774 @@
+"""Model assembler: ArchConfig -> scanned, policy-sharded transformer.
+
+One class covers all ten assigned architectures:
+
+* ``pattern`` cycles block kinds over depth — ``("attn",)`` dense,
+  ``("local","attn")`` gemma2, ``("rec","rec","local")`` recurrentgemma,
+  ``("ssm",)`` mamba2, ``("encdec",)`` whisper decoder.
+* repeated groups are **scanned** (weights stacked on a leading ``groups``
+  dim) so HLO size / compile time are depth-independent; a non-divisible
+  tail gets its own short stack.
+* every init function has a twin pspec function; ``param_pspecs`` mirrors
+  ``init`` exactly (tree-structure equality is property-tested).
+* caches are stacked per slot: attention KV, SSD state, RG-LRU state, and
+  (whisper) precomputed cross-attention KV.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.layers import AttnParams, wsc
+from repro.models.moe import MoEParams, moe_ffn, moe_init, moe_pspecs
+from repro.models.policy import Policy
+from repro.models.rglru import (
+    RGLRUParams,
+    rglru_init,
+    rglru_init_state,
+    rglru_mixer,
+    rglru_pspecs,
+)
+from repro.models.ssm import (
+    SSMParams,
+    ssm_init,
+    ssm_init_state,
+    ssm_mixer,
+    ssm_pspecs,
+)
+
+__all__ = ["ArchConfig", "StreamModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    pattern: tuple[str, ...] = ("attn",)
+    window: int | None = None
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    attn_bias: bool = False
+    rope_theta: float = 10000.0
+    mlp_kind: str = "gated"  # gated | plain | none
+    mlp_act: str = "silu"
+    norm: str = "rms"  # rms | ln
+    norm_plus_one: bool = False
+    post_norms: bool = False  # gemma2 sandwich norms
+    embed_scale: bool = False
+    tie_embeddings: bool = False
+    moe: MoEParams | None = None
+    ssm: SSMParams | None = None
+    rglru: RGLRUParams | None = None
+    enc_dec: bool = False
+    enc_layers: int = 0
+    enc_seq: int = 0
+    frontend: str = "none"  # none | frames | patches
+    frontend_len: int = 0
+    norm_eps: float = 1e-6
+    learned_pos: bool = False
+    max_learned_pos: int = 32768
+    q_block: int = 512
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // 128) * 128
+
+    def attn_params(self, kind: str) -> AttnParams:
+        return AttnParams(
+            n_heads=self.n_heads,
+            n_kv=self.n_kv_heads,
+            head_dim=self.hd,
+            rope_theta=self.rope_theta,
+            use_rope=not self.learned_pos,
+            causal=kind != "bidir",
+            window=self.window if kind == "local" else None,
+            softcap=self.attn_softcap,
+            bias=self.attn_bias,
+            q_block=self.q_block,
+            cross=kind == "cross",
+        )
+
+    # ------------------------------------------------------------ accounting
+    def param_count(self) -> int:
+        shapes = jax.eval_shape(
+            lambda: StreamModel(self, Policy()).init(jax.random.PRNGKey(0))
+        )
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        per_expert = 3 * self.d_model * self.moe.d_ff
+        moe_total = self.n_layers * self.moe.n_experts * per_expert
+        moe_active = self.n_layers * self.moe.top_k * per_expert
+        return total - moe_total + moe_active
+
+
+_Q8_MIN_SIZE = 1 << 16
+
+
+def _is_q8(x) -> bool:
+    return isinstance(x, dict) and "q8" in x
+
+
+def _should_quantize(leaf) -> bool:
+    return (
+        hasattr(leaf, "ndim")
+        and leaf.ndim >= 2
+        and jnp.issubdtype(leaf.dtype, jnp.floating)
+        and int(np.prod(leaf.shape)) >= _Q8_MIN_SIZE
+    )
+
+
+_Q8_SUBTREES = ("slots", "tail", "encoder")
+
+
+def quantize_params(params):
+    """Post-training int8 weight quantization for serving (DESIGN.md §4).
+
+    Every large (>=64Ki elements) float matrix inside the layer stacks
+    becomes {"q8": int8 codes, "scale": fp32 per-row (trailing-dim absmax)
+    scales}. Per-row quantization makes dequantization a pure broadcast
+    multiply — no reshape — so it is transparent to ANY sharding (a
+    256-block variant forced XLA to replicate arctic's expert weights:
+    +88 GB/dev of all-gather, EXPERIMENTS.md §Perf it-B1). Embeddings and
+    norms stay bf16. Halves (vs bf16) the weight-streaming memory term —
+    and makes arctic-480b / mistral-large-123b decode fit v5e HBM.
+    """
+
+    def one(leaf):
+        if not _should_quantize(leaf):
+            return leaf
+        x = leaf.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+        safe = jnp.where(scale == 0, 1.0, scale)
+        codes = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+        return {"q8": codes, "scale": scale}
+
+    out = dict(params)
+    for key in _Q8_SUBTREES:
+        if key in out:
+            out[key] = jax.tree.map(one, out[key])
+    return out
+
+
+def quantized_pspecs(params_sds, pspecs):
+    """Transform a param pspec tree to match ``quantize_params`` output."""
+    from jax.sharding import PartitionSpec
+
+    def one(leaf, spec):
+        if not _should_quantize(leaf):
+            return spec
+        base = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        return {"q8": spec, "scale": PartitionSpec(*base[:-1], None)}
+
+    out = dict(pspecs)
+    for key in _Q8_SUBTREES:
+        if key in out:
+            out[key] = jax.tree.map(one, params_sds[key], pspecs[key])
+    return out
+
+
+def _dq_leaf(leaf, dtype):
+    if _is_q8(leaf):
+        # broadcast multiply: sharding-transparent, fuses into the matmul
+        return (leaf["q8"].astype(jnp.float32) * leaf["scale"]).astype(dtype)
+    return leaf
+
+
+def _dq_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: _dq_leaf(x, dtype), tree, is_leaf=_is_q8
+    )
+
+
+def _norm_init(L_: int, d: int, norm: str, dtype):
+    if norm == "ln":
+        return {"w": jnp.ones((L_, d), dtype), "b": jnp.zeros((L_, d), dtype)}
+    init = jnp.zeros if False else jnp.ones
+    return {"w": jnp.ones((L_, d), dtype)}
+
+
+def _norm_pspecs(norm: str):
+    return {"w": P(None, None), "b": P(None, None)} if norm == "ln" else {"w": P(None, None)}
+
+
+class StreamModel:
+    """Functional model wrapper; all state is explicit."""
+
+    def __init__(self, cfg: ArchConfig, policy: Policy, mesh=None):
+        self.cfg = cfg
+        self.policy = policy
+        if mesh is not None:
+            object.__setattr__(policy, "_mesh_obj", mesh)
+        self.mesh = mesh
+        p = len(cfg.pattern)
+        self.n_groups = cfg.n_layers // p
+        self.tail = cfg.n_layers - self.n_groups * p  # leftover layers
+
+    # ------------------------------------------------------------------ init
+    def _block_init(self, rng, n: int, kind: str, dtype) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 8)
+        blk: dict[str, Any] = {"norm1": _norm_init(n, cfg.d_model, cfg.norm, dtype)}
+        if kind in ("attn", "local", "bidir"):
+            blk["mixer"] = L.attention_init(ks[0], n, cfg.d_model, cfg.attn_params(kind), dtype)
+        elif kind == "ssm":
+            blk["mixer"] = ssm_init(ks[0], n, cfg.d_model, cfg.ssm, dtype)
+        elif kind == "rec":
+            blk["mixer"] = rglru_init(ks[0], n, cfg.d_model, cfg.rglru, dtype)
+        elif kind == "encdec":
+            blk["mixer"] = L.attention_init(ks[0], n, cfg.d_model, cfg.attn_params("attn"), dtype)
+            blk["norm_x"] = _norm_init(n, cfg.d_model, cfg.norm, dtype)
+            blk["cross"] = L.attention_init(ks[3], n, cfg.d_model, cfg.attn_params("cross"), dtype)
+        else:
+            raise ValueError(f"unknown block kind {kind}")
+        if cfg.post_norms:
+            blk["post1"] = _norm_init(n, cfg.d_model, cfg.norm, dtype)
+        if cfg.mlp_kind != "none" or cfg.moe is not None:
+            blk["norm2"] = _norm_init(n, cfg.d_model, cfg.norm, dtype)
+            if cfg.moe is not None:
+                blk["moe"] = moe_init(ks[1], n, cfg.d_model, cfg.moe, dtype)
+                if cfg.moe.dense_residual:
+                    blk["mlp"] = L.mlp_init(ks[2], n, cfg.d_model, cfg.d_ff, "gated", dtype)
+            else:
+                blk["mlp"] = L.mlp_init(
+                    ks[2], n, cfg.d_model, cfg.d_ff, "gated" if cfg.mlp_kind == "gated" else "plain", dtype
+                )
+            if cfg.post_norms:
+                blk["post2"] = _norm_init(n, cfg.d_model, cfg.norm, dtype)
+        return blk
+
+    def _block_pspecs(self, kind: str) -> dict:
+        cfg, pol = self.cfg, self.policy
+        blk: dict[str, Any] = {"norm1": _norm_pspecs(cfg.norm)}
+        if kind in ("attn", "local", "bidir"):
+            blk["mixer"] = L.attention_pspecs(pol, cfg.d_model, cfg.attn_params(kind))
+        elif kind == "ssm":
+            blk["mixer"] = ssm_pspecs(pol, cfg.d_model, cfg.ssm)
+        elif kind == "rec":
+            blk["mixer"] = rglru_pspecs(pol, cfg.d_model, cfg.rglru)
+        elif kind == "encdec":
+            blk["mixer"] = L.attention_pspecs(pol, cfg.d_model, cfg.attn_params("attn"))
+            blk["norm_x"] = _norm_pspecs(cfg.norm)
+            blk["cross"] = L.attention_pspecs(pol, cfg.d_model, cfg.attn_params("cross"))
+        if cfg.post_norms:
+            blk["post1"] = _norm_pspecs(cfg.norm)
+        if cfg.mlp_kind != "none" or cfg.moe is not None:
+            blk["norm2"] = _norm_pspecs(cfg.norm)
+            if cfg.moe is not None:
+                blk["moe"] = moe_pspecs(pol, cfg.d_model, cfg.moe)
+                if cfg.moe.dense_residual:
+                    blk["mlp"] = L.mlp_pspecs(pol, cfg.d_model, cfg.d_ff, "gated")
+            else:
+                blk["mlp"] = L.mlp_pspecs(
+                    pol, cfg.d_model, cfg.d_ff, "gated" if cfg.mlp_kind == "gated" else "plain"
+                )
+            if cfg.post_norms:
+                blk["post2"] = _norm_pspecs(cfg.norm)
+        return blk
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(self.policy.param_dtype)
+        ks = jax.random.split(rng, 8)
+        params: dict[str, Any] = {
+            "embed": L.embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype),
+            "final_norm": _norm_init(1, cfg.d_model, cfg.norm, dtype),
+        }
+        params["slots"] = {
+            f"s{i}": self._block_init(jax.random.fold_in(ks[1], i), self.n_groups, k, dtype)
+            for i, k in enumerate(cfg.pattern)
+        }
+        if self.tail:
+            params["tail"] = {
+                f"s{i}": self._block_init(jax.random.fold_in(ks[2], i), 1, cfg.pattern[i], dtype)
+                for i in range(self.tail)
+            }
+        if not cfg.tie_embeddings:
+            params["unembed"] = L._normal(
+                ks[3], (cfg.d_model, cfg.vocab_padded), 1.0 / math.sqrt(cfg.d_model), dtype
+            )
+        if cfg.learned_pos:
+            params["pos_embed"] = L._normal(
+                ks[4], (cfg.max_learned_pos, cfg.d_model), 0.02, dtype
+            )
+        if cfg.enc_dec:
+            params["encoder"] = {
+                "slots": {
+                    "s0": self._block_init(ks[5], cfg.enc_layers, "bidir", dtype)
+                },
+                "final_norm": _norm_init(1, cfg.d_model, cfg.norm, dtype),
+            }
+        return params
+
+    def param_pspecs(self) -> dict:
+        cfg, pol = self.cfg, self.policy
+        vtp = pol.tp(cfg.vocab_padded)
+        specs: dict[str, Any] = {
+            "embed": P(vtp, pol.fsdp(cfg.d_model, has_tp=vtp is not None)),
+            "final_norm": _norm_pspecs(cfg.norm),
+        }
+        specs["slots"] = {
+            f"s{i}": self._block_pspecs(k) for i, k in enumerate(cfg.pattern)
+        }
+        if self.tail:
+            specs["tail"] = {
+                f"s{i}": self._block_pspecs(cfg.pattern[i]) for i in range(self.tail)
+            }
+        if not cfg.tie_embeddings:
+            specs["unembed"] = P(
+                pol.fsdp(cfg.d_model, has_tp=vtp is not None), vtp
+            )
+        if cfg.learned_pos:
+            specs["pos_embed"] = P(None, pol.fsdp(cfg.d_model))
+        if cfg.enc_dec:
+            specs["encoder"] = {
+                "slots": {"s0": self._block_pspecs("bidir")},
+                "final_norm": _norm_pspecs(cfg.norm),
+            }
+        return specs
+
+    # ----------------------------------------------------------------- norms
+    def _norm(self, p, x):
+        if self.cfg.norm == "ln":
+            return L.layer_norm(x, p["w"], p["b"], self.cfg.norm_eps)
+        return L.rms_norm(x, p["w"], self.cfg.norm_eps, plus_one=self.cfg.norm_plus_one)
+
+    # ------------------------------------------------------------ full-seq fwd
+    def _apply_block(
+        self, blk: dict, kind: str, x, positions, enc_out=None, state=None
+    ):
+        """One block; params have NO leading group dim here. Returns (x, new_state)."""
+        cfg, pol = self.cfg, self.policy
+        if pol.weights_int8:
+            blk = _dq_tree(blk, jnp.dtype(pol.compute_dtype))
+        h = self._norm(blk["norm1"], x)
+        new_state = state
+        decode = state is not None and x.shape[1] == 1
+        if kind in ("attn", "local", "bidir"):
+            ap = cfg.attn_params(kind)
+            if decode:
+                out, nk, nv = L.decode_attention(
+                    blk["mixer"], h, state["k"], state["v"], state["pos"], ap, pol,
+                    ring=kind == "local",
+                    cache_seq_spec=pol.seq_axis,
+                )
+                new_state = {"k": nk, "v": nv, "pos": state["pos"] + 1}
+            elif state is not None:  # prefill: fill the cache while attending
+                out, k, v = L.attention(blk["mixer"], h, ap, pol, positions, return_kv=True)
+                new_state = _fill_kv_cache(state, k, v)
+            else:
+                out = L.attention(blk["mixer"], h, ap, pol, positions)
+        elif kind == "ssm":
+            out, new_state = ssm_mixer(blk["mixer"], h, cfg.ssm, pol, state, cfg.norm_eps)
+        elif kind == "rec":
+            out, new_state = rglru_mixer(blk["mixer"], h, cfg.rglru, pol, state)
+        elif kind == "encdec":
+            ap = cfg.attn_params("attn")
+            if decode:
+                out, nk, nv = L.decode_attention(
+                    blk["mixer"], h, state["k"], state["v"], state["pos"], ap, pol,
+                    cache_seq_spec=pol.seq_axis,
+                )
+                new_state = dict(state, k=nk, v=nv, pos=state["pos"] + 1)
+            elif state is not None:
+                out, k, v = L.attention(blk["mixer"], h, ap, pol, positions, return_kv=True)
+                new_state = dict(state, **_fill_kv_cache(state, k, v))
+            else:
+                out = L.attention(blk["mixer"], h, ap, pol, positions)
+            x = x + (self._norm(blk["post1"], out) if cfg.post_norms else out)
+            hx = self._norm(blk["norm_x"], x)
+            capx = cfg.attn_params("cross")
+            if decode:
+                out, _, _ = L.decode_attention(
+                    blk["cross"], hx, state["xk"], state["xv"], state["pos"], capx, pol
+                )
+            else:
+                out = L.attention(blk["cross"], hx, capx, pol, positions, kv_source=enc_out)
+                if state is not None:  # cache the encoder projections once
+                    xk = jnp.einsum("bsd,dhk->bshk", enc_out, blk["cross"]["wk"])
+                    xv = jnp.einsum("bsd,dhk->bshk", enc_out, blk["cross"]["wv"])
+                    new_state = dict(new_state, xk=xk.astype(state["xk"].dtype), xv=xv.astype(state["xv"].dtype))
+            x = x + out
+            out = None
+        if out is not None:
+            x = x + (self._norm(blk["post1"], out) if cfg.post_norms else out)
+
+        aux = jnp.float32(0.0)
+        if cfg.mlp_kind != "none" or cfg.moe is not None:
+            h2 = self._norm(blk["norm2"], x)
+            if cfg.moe is not None:
+                dense = (
+                    (lambda t: L.mlp(blk["mlp"], t, "gated", cfg.mlp_act))
+                    if cfg.moe.dense_residual
+                    else None
+                )
+                y, aux = moe_ffn(blk["moe"], h2, cfg.moe, pol, dense_mlp=dense)
+            else:
+                y = L.mlp(blk["mlp"], h2, "gated" if cfg.mlp_kind == "gated" else "plain", cfg.mlp_act)
+            x = x + (self._norm(blk["post2"], y) if cfg.post_norms else y)
+        return x, new_state, aux
+
+    def _run_stack(self, params, x, positions, enc_out=None, caches=None):
+        """Scan the grouped stack (+tail). caches: None (train/prefill w/o
+        cache) or dict of stacked per-slot states; returns (x, new_caches, aux)."""
+        cfg = self.cfg
+        pat = cfg.pattern
+        use_cache = caches is not None
+
+        def group_body(carry, xs):
+            xc, aux_acc = carry
+            blkstack, cache_in = xs
+            new_cache = {}
+            for i, kind in enumerate(pat):
+                st = cache_in.get(f"s{i}") if use_cache else None
+                xc, nst, aux = self._apply_block(
+                    {k: v for k, v in blkstack[f"s{i}"].items()}, kind, xc, positions, enc_out, st
+                )
+                if use_cache:
+                    new_cache[f"s{i}"] = nst
+            return (xc, aux_acc + aux), new_cache if use_cache else 0.0
+
+        body = group_body
+        if self.policy.remat in ("block", "full"):
+            body = jax.checkpoint(
+                group_body,
+                policy=jax.checkpoint_policies.nothing_saveable
+                if self.policy.remat == "full"
+                else jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                prevent_cse=False,
+            )
+
+        slot_stacks = params["slots"]
+        cache_stacks = caches["slots"] if use_cache else jax.tree.map(lambda _: 0.0, jnp.zeros(self.n_groups))
+        xs = (slot_stacks, caches["slots"] if use_cache else None)
+        if self.n_groups > 0:
+            unroll = True if self.policy.unroll else 1
+            if use_cache:
+                (x, aux), new_slot_caches = jax.lax.scan(
+                    body, (x, jnp.float32(0.0)), (slot_stacks, caches["slots"]),
+                    unroll=unroll,
+                )
+            else:
+                dummy = jnp.zeros((self.n_groups,))
+                (x, aux), _ = jax.lax.scan(
+                    lambda c, xs_: (body(c, (xs_[0], {}))[0], 0.0),
+                    (x, jnp.float32(0.0)),
+                    (slot_stacks, dummy),
+                    unroll=unroll,
+                )
+                new_slot_caches = None
+        else:
+            aux = jnp.float32(0.0)
+            new_slot_caches = caches["slots"] if use_cache else None
+
+        new_caches = {"slots": new_slot_caches} if use_cache else None
+        # tail layers (pattern remainder), unscanned
+        if self.tail:
+            new_tail = {}
+            for i in range(self.tail):
+                blk = jax.tree.map(lambda a: a[0], params["tail"][f"s{i}"])
+                st = caches["tail"][f"s{i}"] if use_cache else None
+                x, nst, a2 = self._apply_block(blk, pat[i], x, positions, enc_out, st)
+                aux = aux + a2
+                if use_cache:
+                    new_tail[f"s{i}"] = nst
+            if use_cache:
+                new_caches["tail"] = new_tail
+        return x, new_caches, aux
+
+    # ------------------------------------------------------------- embeddings
+    def _embed_tokens(self, params, tokens):
+        cfg = self.cfg
+        embed = _dq_leaf(params["embed"], jnp.dtype(self.policy.compute_dtype))
+        x = jnp.take(embed, tokens, axis=0)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        dt = jnp.dtype(self.policy.compute_dtype)
+        x = self._norm(jax.tree.map(lambda a: a[0], params["final_norm"]), x)
+        w = (
+            _dq_leaf(params["embed"], dt).T
+            if cfg.tie_embeddings
+            else _dq_leaf(params.get("unembed"), dt)
+        )
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+        logits = L.softcap(logits, cfg.final_softcap)
+        pol = self.policy
+        return wsc(
+            logits.astype(jnp.float32),
+            P(pol.batch_spec(x.shape[0]), None, pol.tp(cfg.vocab_padded)),
+        )
+
+    def _encode(self, params, frames):
+        """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+        cfg = self.cfg
+        pos = jnp.arange(frames.shape[1])
+        frames = frames.astype(jnp.dtype(self.policy.compute_dtype))
+        x = frames + _sinusoid(frames.shape[1], cfg.d_model, frames.dtype)
+        enc = params["encoder"]
+        x, _, _ = StreamModel(
+            dataclasses.replace(cfg, pattern=("bidir",), n_layers=cfg.enc_layers, moe=None, enc_dec=False),
+            self.policy,
+            self.mesh,
+        )._run_stack(enc, x, pos)
+        return self._norm(jax.tree.map(lambda a: a[0], enc["final_norm"]), x)
+
+    # ------------------------------------------------------------- public API
+    def forward(self, params, batch):
+        """Full forward to logits. batch: tokens (B,S) [+ patch_embeds | frames]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        if cfg.frontend == "patches":
+            x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        if cfg.learned_pos:
+            x = x + params["pos_embed"][:s][None]
+        x = wsc(x, P(self.policy.batch_spec(x.shape[0]), None, None))
+        enc_out = self._encode(params, batch["frames"]) if cfg.enc_dec else None
+        x, _, aux = self._run_stack(params, x, positions, enc_out)
+        return self._logits(params, x), aux
+
+    def hidden(self, params, batch):
+        """Forward to final hidden states (pre-unembed). Returns (h, aux)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        if cfg.frontend == "patches":
+            x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        if cfg.learned_pos:
+            x = x + params["pos_embed"][:s][None]
+        x = wsc(x, P(self.policy.batch_spec(x.shape[0]), None, None))
+        enc_out = self._encode(params, batch["frames"]) if cfg.enc_dec else None
+        x, _, aux = self._run_stack(params, x, positions, enc_out)
+        return x, aux
+
+    def loss(self, params, batch, *, loss_chunk: int = 1024):
+        """Next-token CE with **chunked** unembed+softmax.
+
+        Full-vocab logits for a (256, 4096) batch over a 256k vocab are
+        ~0.5 TB in bf16 (1 TB fp32) — they must never be materialized.
+        The unembed matmul + logsumexp + pick run inside a checkpointed
+        scan over sequence chunks, so the live set is one
+        (B, chunk, vocab) block; the backward recomputes per chunk.
+        The label pick is a one-hot einsum (vocab-sharded friendly: partial
+        sums + a tiny psum, never a cross-shard gather).
+        """
+        cfg = self.cfg
+        h, aux = self.hidden(params, batch)
+        h = self._norm(jax.tree.map(lambda a: a[0], params["final_norm"]), h)
+        tokens = batch["tokens"].astype(jnp.int32)
+        front = cfg.frontend_len if cfg.frontend == "patches" else 0
+        pred_h = h[:, front:-1] if front == 0 else h[:, front - 1 : -1]
+        labels = tokens[:, 1:] if front == 0 else tokens
+        b, n, d = pred_h.shape
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+        chunk = min(loss_chunk, n)
+        n_main = (n // chunk) * chunk
+        pol = self.policy
+        vspec = pol.tp(cfg.vocab_padded)
+
+        def chunk_nll(hc, lc):
+            logits = jnp.einsum("bsd,dv->bsv", hc, w)
+            logits = L.softcap(logits, cfg.final_softcap)
+            logits = wsc(logits, P(pol.batch_spec(b), None, vspec))
+            logits = logits.astype(jnp.float32)
+            mask = (lc < cfg.vocab).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            onehot = jax.nn.one_hot(lc, cfg.vocab_padded, dtype=logits.dtype)
+            picked = jnp.einsum("bsv,bsv->bs", logits, onehot)
+            return jnp.sum((lse - picked) * mask), jnp.sum(mask)
+
+        chunk_nll = jax.checkpoint(chunk_nll, prevent_cse=False)
+
+        def scan_body(carry, xs):
+            hc, lc = xs
+            nll, cnt = chunk_nll(hc, lc)
+            return (carry[0] + nll, carry[1] + cnt), None
+
+        hc_main = pred_h[:, :n_main].reshape(b, n_main // chunk, chunk, d)
+        lc_main = labels[:, :n_main].reshape(b, n_main // chunk, chunk)
+        (tot, cnt), _ = jax.lax.scan(
+            scan_body,
+            (jnp.float32(0.0), jnp.float32(0.0)),
+            (jnp.moveaxis(hc_main, 1, 0), jnp.moveaxis(lc_main, 1, 0)),
+            unroll=True if pol.unroll else 1,
+        )
+        if n_main < n:  # ragged tail
+            nll_t, cnt_t = chunk_nll(pred_h[:, n_main:], labels[:, n_main:])
+            tot, cnt = tot + nll_t, cnt + cnt_t
+        loss = tot / jnp.maximum(cnt, 1.0)
+        return loss + aux, {"loss": loss, "aux": aux}
+
+    # ------------------------------------------------------------------ cache
+    def _slot_cache(self, kind: str, n: int, b: int, s_cache: int, dtype):
+        cfg = self.cfg
+
+        def stack(tree):
+            return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tree)
+
+        if kind in ("attn", "local"):
+            sz = min(cfg.window, s_cache) if kind == "local" and cfg.window else s_cache
+            kv = jnp.zeros((b, sz, cfg.n_kv_heads, cfg.hd), dtype)
+            return stack({"k": kv, "v": kv, "pos": jnp.int32(0)})
+        if kind == "ssm":
+            return stack(ssm_init_state(b, cfg.ssm))
+        if kind == "rec":
+            return stack(rglru_init_state(b, cfg.rglru))
+        if kind == "encdec":
+            kv = jnp.zeros((b, s_cache, cfg.n_kv_heads, cfg.hd), dtype)
+            xkv = jnp.zeros((b, cfg.enc_seq, cfg.n_kv_heads, cfg.hd), dtype)
+            return stack({"k": kv, "v": kv, "pos": jnp.int32(0), "xk": xkv, "xv": xkv})
+        raise ValueError(kind)
+
+    def init_cache(self, batch_size: int, s_cache: int, dtype=None):
+        if dtype is None:
+            dtype = jnp.dtype(self.policy.kv_cache_dtype)
+        pat = self.cfg.pattern
+        caches = {
+            "slots": {
+                f"s{i}": self._slot_cache(k, self.n_groups, batch_size, s_cache, dtype)
+                for i, k in enumerate(pat)
+            }
+        }
+        if self.tail:
+            caches["tail"] = {
+                f"s{i}": jax.tree.map(
+                    lambda a: a[0], self._slot_cache(pat[i], 1, batch_size, s_cache, dtype)
+                )
+                for i in range(self.tail)
+            }
+        return caches
+
+    def cache_pspecs(self, batch_size: int):
+        pol, cfg = self.policy, self.cfg
+        batch = pol.batch_spec(batch_size)
+        seq = pol.seq_axis
+        kv_tp = pol.tp(cfg.n_kv_heads)
+
+        def attn_spec():
+            return {
+                "k": P(None, batch, seq, kv_tp, None),
+                "v": P(None, batch, seq, kv_tp, None),
+                "pos": P(None),
+            }
+
+        def slot_spec(kind):
+            if kind in ("attn", "local"):
+                return attn_spec()
+            if kind == "ssm":
+                return {
+                    "conv": P(None, batch, None, pol.tp(cfg.ssm.d_inner)),
+                    "ssd": P(None, batch, pol.tp(cfg.ssm.n_heads), None, None),
+                }
+            if kind == "rec":
+                return {
+                    "conv": P(None, batch, None, pol.tp(cfg.rglru.d_rnn)),
+                    "h": P(None, batch, pol.tp(cfg.rglru.d_rnn)),
+                }
+            if kind == "encdec":
+                sp = attn_spec()
+                sp["xk"] = P(None, batch, None, kv_tp, None)
+                sp["xv"] = P(None, batch, None, kv_tp, None)
+                return sp
+            raise ValueError(kind)
+
+        specs = {"slots": {f"s{i}": slot_spec(k) for i, k in enumerate(cfg.pattern)}}
+        if self.tail:
+            specs["tail"] = {
+                f"s{i}": jax.tree.map(
+                    lambda sp: P(*sp[1:]), slot_spec(cfg.pattern[i]), is_leaf=lambda x: isinstance(x, P)
+                )
+                for i in range(self.tail)
+            }
+        return specs
+
+    def prefill(self, params, batch, s_cache: int, cache_dtype=jnp.bfloat16):
+        """Run the full prompt, populate a cache of size s_cache, return the
+        last-position logits — the serving engine's first step."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = self._embed_tokens(params, tokens)
+        if cfg.frontend == "patches":
+            x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        if cfg.learned_pos:
+            x = x + params["pos_embed"][:s][None]
+        x = wsc(x, P(self.policy.batch_spec(b), None, None))
+        enc_out = self._encode(params, batch["frames"]) if cfg.enc_dec else None
+        caches = self.init_cache(b, s_cache, cache_dtype)
+        x, new_caches, _ = self._run_stack(params, x, positions, enc_out, caches)
+        return self._logits(params, x[:, -1:, :])[:, 0], new_caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        """One decode step. tokens: (B, 1) int32; pos: scalar int32 position."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens)
+        if cfg.learned_pos:
+            x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0)[None]
+        positions = jnp.reshape(pos, (1,))
+        x = wsc(x, P(self.policy.batch_spec(x.shape[0]), None, None))
+        x, new_caches, _ = self._run_stack(params, x, positions, None, caches)
+        return self._logits(params, x), new_caches
+
+
+def _fill_kv_cache(state, k, v):
+    """Write prefill K/V (B,S,Kv,D) into a cache buffer (B,sz,Kv,D).
+
+    For window (ring) caches sz < S: keep the last sz positions, rotated so
+    that slot == position % sz, matching the decode-time ring writes.
+    """
+    sz = state["k"].shape[1]
+    b, s = k.shape[0], k.shape[1]
+    if s >= sz:
+        k_last = k[:, s - sz :]
+        v_last = v[:, s - sz :]
+        shift = s % sz
+        if shift:
+            k_last = jnp.roll(k_last, shift, axis=1)
+            v_last = jnp.roll(v_last, shift, axis=1)
+        nk, nv = k_last.astype(state["k"].dtype), v_last.astype(state["v"].dtype)
+    else:
+        nk = jax.lax.dynamic_update_slice_in_dim(state["k"], k.astype(state["k"].dtype), 0, axis=1)
+        nv = jax.lax.dynamic_update_slice_in_dim(state["v"], v.astype(state["v"].dtype), 0, axis=1)
+    return {"k": nk, "v": nv, "pos": jnp.int32(s)}
+
+
+def _sinusoid(s: int, d: int, dtype):
+    pos = np.arange(s)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype)[None]

@@ -1,0 +1,232 @@
+"""Mixture-of-Experts FFN — expert parallelism via shard_map.
+
+Design (DESIGN.md §4): activations are replicated across the ``model`` axis
+(they are batch-sharded on the data axes), experts are sharded over
+``model``. Each model shard therefore already *has* every token; it locally
+selects the (token, k) pairs routed to its resident experts, computes them
+under a capacity bound, and contributes a partial output. One
+``psum('model')`` combines — the same collective volume as a standard
+tensor-parallel FFN all-reduce, with zero dispatch all-to-all.
+
+Inside the shard each expert's tokens are gathered into an (E_local, C, d)
+buffer via a sort-free rank computation (searchsorted over the sorted
+expert ids), the classic capacity-factor dispatch: tokens beyond C per
+expert are dropped (their combine weight is zero).
+
+arctic-style *dense residual*: a dense MLP runs in parallel with the MoE
+and the two outputs are summed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _normal, wsc
+from repro.models.policy import Policy
+
+__all__ = ["MoEParams", "moe_ffn", "moe_init", "moe_pspecs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEParams:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # arctic: dense MLP summed with MoE out
+    router_aux_weight: float = 0.01
+
+
+def moe_init(rng, L: int, d: int, mp: MoEParams, dtype) -> dict:
+    ks = jax.random.split(rng, 5)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(mp.d_ff)
+    p = {
+        "router": _normal(ks[0], (L, d, mp.n_experts), s_in, jnp.float32),
+        "w_in": _normal(ks[1], (L, mp.n_experts, d, mp.d_ff), s_in, dtype),
+        "w_gate": _normal(ks[2], (L, mp.n_experts, d, mp.d_ff), s_in, dtype),
+        "w_out": _normal(ks[3], (L, mp.n_experts, mp.d_ff, d), s_out, dtype),
+    }
+    return p
+
+
+def moe_pspecs(policy: Policy, d: int, mp: MoEParams) -> dict:
+    e = policy.tp(mp.n_experts)
+    f = policy.fsdp(d, has_tp=e is not None)
+    inner = policy.ep_inner(mp.d_ff)  # 2D EP: shard each expert's d_ff too
+    return {
+        "router": P(None, None, None),
+        "w_in": P(None, e, f, inner),
+        "w_gate": P(None, e, f, inner),
+        "w_out": P(None, e, inner, f),
+    }
+
+
+def _capacity(mp: MoEParams, n_tokens: int) -> int:
+    c = int(math.ceil(mp.top_k * n_tokens * mp.capacity_factor / mp.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def _local_moe(
+    x2: jax.Array,  # (T, d) local tokens (flattened batch*seq)
+    probs: jax.Array,  # (T, E) fp32 router probabilities
+    w_in: jax.Array,  # (E_loc, d, f)
+    w_gate: jax.Array,
+    w_out: jax.Array,  # (E_loc, f, d)
+    *,
+    mp: MoEParams,
+    e_start: jax.Array,  # first global expert id on this shard
+    capacity: int,
+):
+    """Per-shard expert compute. Returns the partial output (T, d)."""
+    t, d = x2.shape
+    e_loc = w_in.shape[0]
+    topw, tope = jax.lax.top_k(probs, mp.top_k)  # (T, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)  # renormalize
+    flat_e = tope.reshape(-1)  # (T*k,) global expert ids
+    flat_w = topw.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), mp.top_k)
+
+    # capacity rank within each expert (global ranks — identical on every
+    # shard, so drops are consistent): sort by expert id, rank = position -
+    # first-position-of-that-expert.
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    first = jnp.searchsorted(e_sorted, e_sorted, side="left")
+    rank_sorted = jnp.arange(flat_e.shape[0]) - first
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+    local_e = flat_e - e_start  # local expert index, valid iff in [0, e_loc)
+    keep = (local_e >= 0) & (local_e < e_loc) & (rank < capacity)
+    slot = jnp.where(keep, local_e * capacity + rank, e_loc * capacity)  # drop row
+
+    # dispatch via token-id scatter: scatter (T*k,) int32 ids, then gather
+    # only the (E_loc*C, d) rows that will actually be computed — this
+    # avoids materializing the full (T*k, d) selection (12x the dispatch
+    # traffic for top-8, EXPERIMENTS.md §Perf it-C1). Slot id T points at
+    # an all-zero pad row.
+    slot_tok = jnp.full((e_loc * capacity + 1,), t, jnp.int32)
+    slot_tok = slot_tok.at[slot].set(jnp.where(keep, flat_tok, t))
+    x2p = jnp.concatenate([x2, jnp.zeros((1, d), x2.dtype)])
+    xe = x2p[slot_tok[:-1]].reshape(e_loc, capacity, d)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, w_in)
+    g = jnp.einsum("ecd,edf->ecf", xe, w_gate)
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, w_out)
+
+    # combine: gather slots back and weight
+    ye_flat = jnp.concatenate([ye.reshape(e_loc * capacity, d), jnp.zeros((1, d), ye.dtype)])
+    contrib = ye_flat[slot] * (flat_w * keep).astype(ye.dtype)[:, None]
+    out = jnp.zeros((t, d), ye.dtype).at[flat_tok].add(contrib)
+    return out
+
+
+def moe_ffn(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    mp: MoEParams,
+    policy: Policy,
+    dense_mlp=None,  # callable(x) -> (B,S,d) for the arctic dense residual
+):
+    """MoE FFN with EP over the model axis. Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    # load-balancing aux loss (Switch): E * sum(frac_tokens * frac_probs)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tok = jnp.mean(
+        jax.nn.one_hot(top1, mp.n_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_prob = jnp.mean(probs, axis=(0, 1))
+    aux = mp.n_experts * jnp.sum(frac_tok * frac_prob) * mp.router_aux_weight
+
+    tp = policy.tp_axis
+    tp_size = policy.size(tp)
+    mesh = policy.mesh_axes
+    n_tokens = b * s  # global; per data-shard count below
+    dp = policy.dp_degree
+    capacity = _capacity(mp, max(n_tokens // max(dp, 1), 1))
+
+    if tp is None or tp_size == 1 or mp.n_experts % max(tp_size, 1) != 0:
+        # no EP: single-shard dispatch (test/smoke path)
+        out = _local_moe(
+            x.reshape(-1, d),
+            probs.reshape(-1, mp.n_experts),
+            p["w_in"],
+            p["w_gate"],
+            p["w_out"],
+            mp=mp,
+            e_start=jnp.int32(0),
+            capacity=capacity,
+        ).reshape(b, s, d)
+    else:
+        out = _ep_moe(x, probs, p, mp, policy, capacity)
+
+    if mp.dense_residual and dense_mlp is not None:
+        out = out + dense_mlp(x)
+    return out, aux
+
+
+def _ep_moe(x, probs, p, mp: MoEParams, policy: Policy, capacity: int):
+    """shard_map over the full mesh: batch axes shard tokens, model axis
+    shards experts; each shard computes its experts' partial sums, then
+    psum over the model axis."""
+    from jax.experimental.shard_map import shard_map
+
+    b, s, d = x.shape
+    mesh = policy._mesh_obj  # set by the model wrapper before tracing
+    batch = policy.batch_spec(b)
+    tp = policy.tp_axis
+    e_loc = mp.n_experts // policy.size(tp)
+
+    fsdp = policy.fsdp(d, has_tp=policy.tp(mp.n_experts) is not None)
+    inner = policy.ep_inner(mp.d_ff)  # d_ff sharded within each expert
+    inner_axes = (inner,) if isinstance(inner, str) else tuple(inner or ())
+    if set(inner_axes) & set(policy.batch_axes):
+        raise ValueError(
+            "2D expert parallelism requires replicated tokens on the inner "
+            f"axes; got inner={inner_axes} overlapping batch={policy.batch_axes}"
+        )
+    reduce_axes = (tp,) + inner_axes
+
+    def body(x_l, probs_l, w_in, w_gate, w_out):
+        if fsdp is not None:  # ZeRO-3: gather the expert weights' d dim
+            w_in = jax.lax.all_gather(w_in, fsdp, axis=1, tiled=True)
+            w_gate = jax.lax.all_gather(w_gate, fsdp, axis=1, tiled=True)
+            w_out = jax.lax.all_gather(w_out, fsdp, axis=2, tiled=True)
+        e_start = jax.lax.axis_index(tp) * e_loc
+        bl, sl, dl = x_l.shape
+        out = _local_moe(
+            x_l.reshape(-1, dl),
+            probs_l.reshape(-1, mp.n_experts),
+            w_in,
+            w_gate,
+            w_out,
+            mp=mp,
+            e_start=e_start,
+            capacity=capacity,
+        )
+        # partial over experts (tp) and, in 2D EP, over each expert's d_ff
+        out = jax.lax.psum(out, reduce_axes)
+        return out.reshape(bl, sl, dl)
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(batch, None, None),
+            P(batch, None, None),
+            P(tp, fsdp, inner),
+            P(tp, fsdp, inner),
+            P(tp, inner, fsdp),
+        ),
+        out_specs=P(batch, None, None),
+        check_rep=False,
+    )(x, probs, p["w_in"], p["w_gate"], p["w_out"])

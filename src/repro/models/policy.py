@@ -1,0 +1,150 @@
+"""Parallelism policy: how tensors map onto the production mesh.
+
+One policy object threads through param init, forward, and the launcher so
+that ``in_shardings`` for pjit and ``with_sharding_constraint`` annotations
+inside the model always agree.
+
+Axes (DESIGN.md §4):
+  * ``batch_axes``  — data parallel: activations' batch dim ( ('pod','data') )
+  * ``tp_axis``     — tensor parallel: heads / d_ff / experts / vocab
+  * ``fsdp_axes``   — ZeRO-3 style parameter sharding on top of TP (big archs)
+  * ``seq_axis``    — shard a decode KV cache on sequence (long-context cells
+                      where batch < data-parallel degree)
+
+Sharding is *best effort by divisibility*: a dimension is sharded over an
+axis only when evenly divisible (e.g. gemma2's 8 query heads cannot split
+over a 16-way model axis → heads stay replicated, d_ff still splits).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Policy", "logical_to_pspec"]
+
+
+@dataclass(frozen=True)
+class Policy:
+    # mesh axis name -> size; decisions are divisibility-driven
+    mesh_axes: Mapping[str, int] = field(default_factory=dict)
+    batch_axes: tuple[str, ...] = ("data",)
+    tp_axis: str | None = "model"
+    fsdp_axes: tuple[str, ...] = ()
+    seq_axis: str | tuple | None = None
+    remat: str = "none"  # none | block | full
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # serving extras (DESIGN.md §4): int8 post-training-quantized weights,
+    # and a second sharding axis *inside* each expert's d_ff (2D EP) —
+    # both needed to fit arctic-480b / mistral-large-123b decode on 256
+    # v5e chips.
+    weights_int8: bool = False
+    ep_inner_axes: tuple[str, ...] = ()
+    kv_cache_dtype: str = "bfloat16"  # fp8 halves decode cache footprint
+    fsdp_selective: bool = True  # see Policy.fsdp
+    # measurement mode: unroll every lax.scan so XLA cost_analysis counts
+    # loop bodies times their trip count (HloCostAnalysis visits a while
+    # body once) — used by the dry-run's 1/2-group roofline variants
+    unroll: bool = False
+
+    def ep_inner(self, dim_size: int):
+        if not self.ep_inner_axes:
+            return None
+        return self._axis_if_divides(tuple(self.ep_inner_axes), dim_size)
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, **kw) -> "Policy":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        batch = tuple(a for a in ("pod", "data") if a in sizes)
+        kw.setdefault("batch_axes", batch)
+        kw.setdefault("tp_axis", "model" if "model" in sizes else None)
+        return cls(mesh_axes=sizes, **kw)
+
+    # ------------------------------------------------------------ axis sizes
+    def size(self, axis: str | Sequence[str] | None) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, str):
+            return self.mesh_axes.get(axis, 1)
+        n = 1
+        for a in axis:
+            n *= self.mesh_axes.get(a, 1)
+        return n
+
+    @property
+    def dp_degree(self) -> int:
+        return self.size(self.batch_axes)
+
+    # --------------------------------------------------------- spec builders
+    def _axis_if_divides(self, axis, dim_size: int):
+        """Return ``axis`` if it exists and evenly divides ``dim_size``."""
+        if axis is None:
+            return None
+        if isinstance(axis, tuple):
+            ok = all(a in self.mesh_axes for a in axis)
+            return axis if ok and dim_size % self.size(axis) == 0 else None
+        if axis not in self.mesh_axes:
+            return None
+        return axis if dim_size % self.size(axis) == 0 else None
+
+    def batch_spec(self, batch_size: int):
+        """Largest prefix of batch_axes that divides the batch."""
+        axes: list[str] = []
+        for a in self.batch_axes:
+            trial = axes + [a]
+            if batch_size % self.size(tuple(trial)) == 0:
+                axes = trial
+            else:
+                break
+        return tuple(axes) if axes else None
+
+    def tp(self, dim_size: int):
+        return self._axis_if_divides(self.tp_axis, dim_size)
+
+    def fsdp(self, dim_size: int, has_tp: bool = False):
+        """ZeRO-3 spec for a param dim. With ``fsdp_selective`` (default),
+        params that already have a tensor-parallel dim are NOT fsdp-sharded:
+        their per-device footprint is already /tp, and skipping the
+        per-layer all-gather cut measured train collective bytes 156->10
+        GB/dev on qwen2-7b (EXPERIMENTS.md §Perf it-A1). Full-ZeRO archs
+        (arctic, mistral-large: optimizer state cannot fit otherwise) set
+        fsdp_selective=False."""
+        if not self.fsdp_axes:
+            return None
+        if has_tp and self.fsdp_selective:
+            return None
+        return self._axis_if_divides(tuple(self.fsdp_axes), dim_size)
+
+    def seq(self, dim_size: int):
+        return self._axis_if_divides(self.seq_axis, dim_size)
+
+    def with_mesh_axes(self, sizes: Mapping[str, int]) -> "Policy":
+        return replace(self, mesh_axes=dict(sizes))
+
+
+def logical_to_pspec(policy: Policy, dims: Sequence[tuple[str, int]]) -> P:
+    """Build a PartitionSpec from (logical_name, size) dims.
+
+    Logical names: ``batch, seq, heads, kv_heads, head_dim, embed(=d_model,
+    FSDP target), ff, experts, vocab, state, none``.
+    """
+    spec = []
+    for name, size in dims:
+        if name == "batch":
+            spec.append(policy.batch_spec(size))
+        elif name == "seq":
+            spec.append(policy.seq(size))
+        elif name in ("heads", "kv_heads", "ff", "vocab", "experts"):
+            spec.append(policy.tp(size))
+        elif name == "embed":
+            spec.append(policy.fsdp(size))
+        elif name in ("none", "layers", "head_dim", "state"):
+            spec.append(None)
+        else:
+            raise ValueError(f"unknown logical dim {name!r}")
+    return P(*spec)

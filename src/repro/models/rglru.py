@@ -1,0 +1,159 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill runs the recurrence with ``jax.lax.associative_scan``
+(log-depth; channel-parallel); decode is the one-step update. The gate
+projections are block-diagonal (Griffin's choice) with blocks aligned to
+the tensor-parallel shards, so the whole recurrence is collective-free —
+only the block's out-projection psums.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _normal, wsc
+from repro.models.policy import Policy
+from repro.models.ssm import causal_conv
+
+__all__ = ["RGLRUParams", "rglru_init", "rglru_mixer", "rglru_pspecs", "rglru_scan"]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUParams:
+    d_rnn: int
+    conv_width: int = 4
+    n_blocks: int = 16  # block-diagonal gate projections
+
+    @property
+    def block_dim(self) -> int:
+        return self.d_rnn // self.n_blocks
+
+
+def rglru_init(rng, L: int, d: int, rp: RGLRUParams, dtype) -> dict:
+    ks = jax.random.split(rng, 8)
+    s = 1.0 / math.sqrt(d)
+    bd = rp.block_dim
+    sb = 1.0 / math.sqrt(bd)
+    # Lambda init so a^c in (0.9, 0.999) — Griffin appendix
+    u = jax.random.uniform(ks[6], (L, rp.d_rnn), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * _C)))
+    return {
+        "w_x_branch": _normal(ks[0], (L, d, rp.d_rnn), s, dtype),
+        "w_gate_branch": _normal(ks[1], (L, d, rp.d_rnn), s, dtype),
+        "conv": _normal(ks[2], (L, rp.conv_width, rp.d_rnn), 0.5, dtype),
+        "w_a": _normal(ks[3], (L, rp.n_blocks, bd, bd), sb, dtype),
+        "b_a": jnp.zeros((L, rp.d_rnn), jnp.float32),
+        "w_i": _normal(ks[4], (L, rp.n_blocks, bd, bd), sb, dtype),
+        "b_i": jnp.zeros((L, rp.d_rnn), jnp.float32),
+        "Lambda": lam,
+        "w_out": _normal(ks[5], (L, rp.d_rnn, d), 1.0 / math.sqrt(rp.d_rnn), dtype),
+    }
+
+
+def rglru_pspecs(policy: Policy, d: int, rp: RGLRUParams) -> dict:
+    tp_r = policy.tp(rp.d_rnn)
+    tp_b = policy.tp(rp.n_blocks)
+    f = policy.fsdp(d, has_tp=tp_r is not None)
+    return {
+        "w_x_branch": P(None, f, tp_r),
+        "w_gate_branch": P(None, f, tp_r),
+        "conv": P(None, None, tp_r),
+        "w_a": P(None, tp_b, None, None),
+        "b_a": P(None, tp_r),
+        "w_i": P(None, tp_b, None, None),
+        "b_i": P(None, tp_r),
+        "Lambda": P(None, tp_r),
+        "w_out": P(None, tp_r, f),
+    }
+
+
+def _block_diag_proj(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B,S,D), w: (nb, bd, bd) block-diagonal, b: (D,)."""
+    bsz, s, dd = x.shape
+    nb, bd, _ = w.shape
+    xb = x.reshape(bsz, s, nb, bd)
+    y = jnp.einsum("bsnd,nde->bsne", xb, w).reshape(bsz, s, dd)
+    return y.astype(jnp.float32) + b
+
+
+def rglru_scan(
+    x: jax.Array,  # (B, S, D) gated input, fp32
+    log_a: jax.Array,  # (B, S, D) fp32 log decay, <= 0
+    h0: jax.Array | None = None,  # (B, D)
+):
+    """First-order linear recurrence via associative scan.
+
+    h_t = a_t h_{t-1} + b_t with b_t = sqrt(1-a_t^2) x_t.
+    Returns (h (B,S,D) fp32, h_last (B,D)).
+    """
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 0.0)) * x
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_mixer(
+    p: dict,
+    xin: jax.Array,  # (B, S, d)
+    rp: RGLRUParams,
+    policy: Policy,
+    state: dict | None = None,  # decode: {"conv": (B,W-1,D), "h": (B,D)}
+):
+    """Griffin recurrent block (without residual). Returns (y, new_state)."""
+    b, s, d = xin.shape
+    batch = policy.batch_spec(b)
+    tp = policy.tp_axis
+
+    xb = jnp.einsum("bsd,de->bse", xin, p["w_x_branch"])
+    gate = jnp.einsum("bsd,de->bse", xin, p["w_gate_branch"])
+    xb = wsc(xb, P(batch, None, tp))
+
+    conv_state = state["conv"] if state is not None else None
+    xb, new_conv = causal_conv(xb, p["conv"], conv_state)
+
+    r = jax.nn.sigmoid(_block_diag_proj(xb, p["w_a"], p["b_a"]))
+    i = jax.nn.sigmoid(_block_diag_proj(xb, p["w_i"], p["b_i"]))
+    log_a = -_C * jax.nn.softplus(p["Lambda"]) * r  # (B,S,D) fp32
+    gated = i * xb.astype(jnp.float32)
+
+    h0 = state["h"] if state is not None else None
+    if s == 1 and state is not None:
+        a = jnp.exp(log_a[:, 0])
+        h_last = a * h0 + jnp.sqrt(jnp.maximum(1 - a * a, 0.0)) * gated[:, 0]
+        h = h_last[:, None]
+    else:
+        h, h_last = rglru_scan(gated, log_a, h0)
+
+    y = h.astype(xin.dtype) * jax.nn.gelu(gate, approximate=True)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    out = wsc(out, P(batch, None, None))
+    return out, {"conv": new_conv, "h": h_last}
+
+
+def rglru_init_state(b: int, rp: RGLRUParams, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((b, rp.conv_width - 1, rp.d_rnn), dtype),
+        "h": jnp.zeros((b, rp.d_rnn), jnp.float32),
+    }

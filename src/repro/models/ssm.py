@@ -1,0 +1,284 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked, TP over heads.
+
+The SSD algorithm (arXiv:2405.21060) splits the sequence into chunks of
+length Q: within a chunk the recurrence is computed as a (masked) attention
+-like quadratic form; across chunks a tiny (N x P per head) state is
+carried by a scan. This maps cleanly to the TPU: the intra-chunk einsums
+are MXU matmuls, the inter-chunk scan carries (B, H, N, P) through
+``lax.scan`` (or the Pallas kernel in repro.kernels.ssd_scan for the fused
+hot path).
+
+Sharding: heads over the model axis (80 heads / 16 = 5 local for
+mamba2-2.7b); B/C projections are group-shared (G=1) and replicated; the
+only collective is the out-projection's row-parallel psum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _normal, rms_norm, wsc
+from repro.models.policy import Policy
+
+__all__ = ["SSMParams", "ssd_chunked", "ssm_decode_step", "ssm_init", "ssm_mixer", "ssm_pspecs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMParams:
+    d_inner: int  # expand * d_model
+    head_dim: int = 64  # P
+    state_dim: int = 128  # N
+    n_groups: int = 1  # G (B/C shared across heads within a group)
+    conv_width: int = 4
+    chunk: int = 256  # Q
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_init(rng, L: int, d: int, sp: SSMParams, dtype) -> dict:
+    ks = jax.random.split(rng, 10)
+    s = 1.0 / math.sqrt(d)
+    gn = sp.n_groups * sp.state_dim
+    h = sp.n_heads
+    return {
+        "w_z": _normal(ks[0], (L, d, sp.d_inner), s, dtype),
+        "w_x": _normal(ks[1], (L, d, sp.d_inner), s, dtype),
+        "w_B": _normal(ks[2], (L, d, gn), s, dtype),
+        "w_C": _normal(ks[3], (L, d, gn), s, dtype),
+        "w_dt": _normal(ks[4], (L, d, h), s, dtype),
+        "conv_x": _normal(ks[5], (L, sp.conv_width, sp.d_inner), 0.5, dtype),
+        "conv_bc": _normal(ks[6], (L, sp.conv_width, 2 * gn), 0.5, dtype),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32), (L, h))
+        ),
+        "D": jnp.ones((L, h), jnp.float32),
+        "dt_bias": jnp.zeros((L, h), jnp.float32),
+        "norm_w": jnp.ones((L, sp.d_inner), dtype),
+        "w_out": _normal(ks[7], (L, sp.d_inner, d), 1.0 / math.sqrt(sp.d_inner), dtype),
+    }
+
+
+def ssm_pspecs(policy: Policy, d: int, sp: SSMParams) -> dict:
+    tp_in = policy.tp(sp.d_inner)
+    tp_h = policy.tp(sp.n_heads)
+    f_in = policy.fsdp(d, has_tp=tp_in is not None)
+    f_h = policy.fsdp(d, has_tp=tp_h is not None)
+    f = policy.fsdp(d)
+    return {
+        "w_z": P(None, f_in, tp_in),
+        "w_x": P(None, f_in, tp_in),
+        "w_B": P(None, f, None),
+        "w_C": P(None, f, None),
+        "w_dt": P(None, f_h, tp_h),
+        "conv_x": P(None, None, tp_in),
+        "conv_bc": P(None, None, None),
+        "A_log": P(None, tp_h),
+        "D": P(None, tp_h),
+        "dt_bias": P(None, tp_h),
+        "norm_w": P(None, tp_in),
+        "w_out": P(None, tp_in, f_in),
+    }
+
+
+def causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B, S, C), w: (W, C).
+
+    With ``state`` (B, W-1, C) the conv is stateful (decode); returns
+    (y, new_state).
+    """
+    b, s, c = x.shape
+    wd = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((b, wd - 1, c), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, C)
+    y = sum(
+        xp[:, i : i + s, :] * w[i][None, None, :] for i in range(wd)
+    )
+    new_state = xp[:, -(wd - 1) :, :] if wd > 1 else jnp.zeros((b, 0, c), x.dtype)
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise decay logs within a chunk.
+
+    dA: (..., Q). Returns (..., Q, Q): out[i, j] = sum_{j < t <= i} dA[t],
+    -inf above the diagonal.
+    """
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) fp32, post-softplus
+    A: jax.Array,  # (H,) fp32, negative
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    chunk: int,
+    init_state: jax.Array | None = None,  # (B, H, N, P)
+    unroll: bool = False,
+):
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,N,P)).
+
+    Pure-jnp; the Pallas kernel in repro.kernels.ssd_scan fuses the same
+    computation for the TPU hot path (validated against this function).
+    """
+    b, s0, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    q = min(chunk, s0)
+    if s0 % q:  # pad tail: dt=0 => decay 1 and zero contribution (causal-safe)
+        pad = q - s0 % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = x.shape[1]
+    nc = s // q
+    rep = h // g
+
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Br = Bm.reshape(b, nc, q, g, n)
+    Cr = Cm.reshape(b, nc, q, g, n)
+    dA = dtr * A[None, None, None, :]  # (B, nc, Q, H) log-decay, <= 0
+    dAc = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+    dAtot = dAc[:, :, -1, :]  # (B, nc, H)
+
+    # intra-chunk (quadratic within chunk)
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))  # (B, nc, H, Q, Q)
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cr, Br)  # (B, nc, G, Q, Q)
+    CB = jnp.repeat(CB, rep, axis=2) if g != h else CB  # (B, nc, H, Q, Q)
+    scores = CB * Lmat * dtr[:, :, None, :, :].transpose(0, 1, 4, 2, 3)
+    # scores[b,c,h,i,j] = C_i B_j exp(segsum) dt_j
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores.astype(x.dtype), xr)
+
+    # chunk -> state contribution: S_c = sum_j exp(dA_end - dAc_j) B_j dt_j x_j
+    decay_to_end = jnp.exp(dAtot[:, :, None, :] - dAc)  # (B, nc, Q, H)
+    Bh = jnp.repeat(Br, rep, axis=3) if g != h else Br  # (B, nc, Q, H, N)
+    chunk_states = jnp.einsum(
+        "bcqhn,bcqhp->bchnp",
+        Bh,
+        xr * (dtr * decay_to_end)[..., None].astype(x.dtype),
+    )  # (B, nc, H, N, P)
+
+    # inter-chunk scan
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(state, inp):
+        cs, dtot = inp  # (B,H,N,P), (B,H)
+        prev = state
+        new = prev * jnp.exp(dtot)[:, :, None, None] + cs.astype(jnp.float32)
+        return new, prev
+
+    (final_state, prev_states) = jax.lax.scan(
+        step,
+        init_state,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(dAtot, 1, 0)),
+        unroll=True if unroll else 1,
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, N, P)
+
+    # inter-chunk output: y_j += C_j exp(dAc_j) . state_prev
+    Cin = jnp.repeat(Cr, rep, axis=3) if g != h else Cr  # (B,nc,Q,H,N)
+    y_inter = jnp.einsum(
+        "bcqhn,bchnp->bcqhp",
+        (Cin * jnp.exp(dAc)[..., None]).astype(x.dtype),
+        prev_states.astype(x.dtype),
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s0]
+    return y, final_state
+
+
+def ssm_mixer(
+    p: dict,
+    xin: jax.Array,  # (B, S, d)
+    sp: SSMParams,
+    policy: Policy,
+    state: dict | None = None,  # decode: {"conv": (B,W-1,C), "ssd": (B,H,N,P)}
+    norm_eps: float = 1e-5,
+):
+    """Full Mamba-2 block (without the residual add). Returns (y, new_state)."""
+    b, s, d = xin.shape
+    batch = policy.batch_spec(b)
+    tp = policy.tp_axis
+    gn = sp.n_groups * sp.state_dim
+
+    z = jnp.einsum("bsd,de->bse", xin, p["w_z"])
+    xh = jnp.einsum("bsd,de->bse", xin, p["w_x"])
+    bc = jnp.einsum(
+        "bsd,de->bse", xin, jnp.concatenate([p["w_B"], p["w_C"]], axis=-1)
+    )
+    dt_raw = jnp.einsum("bsd,dh->bsh", xin, p["w_dt"])
+    xh = wsc(xh, P(batch, None, tp))
+
+    conv_state = state["conv"] if state is not None else None
+    cs_x = conv_state[:, :, : sp.d_inner] if conv_state is not None else None
+    cs_bc = conv_state[:, :, sp.d_inner :] if conv_state is not None else None
+    xh, ns_x = causal_conv(xh, p["conv_x"], cs_x)
+    bc, ns_bc = causal_conv(bc, p["conv_bc"], cs_bc)
+    new_conv = jnp.concatenate([ns_x, ns_bc], axis=-1)
+
+    Bm = bc[..., :gn].reshape(b, s, sp.n_groups, sp.state_dim)
+    Cm = bc[..., gn:].reshape(b, s, sp.n_groups, sp.state_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xheads = xh.reshape(b, s, sp.n_heads, sp.head_dim)
+    xheads = wsc(xheads, P(batch, None, tp, None))
+    init_ssd = state["ssd"] if state is not None else None
+
+    if s == 1 and state is not None:
+        y, new_ssd = _ssd_step(xheads, dt, A, Bm, Cm, init_ssd)
+    else:
+        y, new_ssd = ssd_chunked(
+            xheads, dt, A, Bm, Cm, sp.chunk, init_ssd, unroll=policy.unroll
+        )
+
+    y = y + xheads * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, s, sp.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    out = wsc(out, P(batch, None, None))
+    return out, {"conv": new_conv, "ssd": new_ssd}
+
+
+def _ssd_step(x, dt, A, Bm, Cm, state):
+    """Single-token recurrent update (decode).
+
+    x: (B,1,H,P), dt: (B,1,H), state: (B,H,N,P).
+    """
+    b, _, h, p = x.shape
+    g = Bm.shape[2]
+    rep = h // g
+    dA = jnp.exp(dt[:, 0, :] * A[None, :])  # (B, H)
+    Bh = jnp.repeat(Bm[:, 0], rep, axis=1) if g != h else Bm[:, 0]  # (B,H,N)
+    Ch = jnp.repeat(Cm[:, 0], rep, axis=1) if g != h else Cm[:, 0]
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh.astype(jnp.float32), (x[:, 0] * dt[:, 0, :, None].astype(x.dtype)).astype(jnp.float32))
+    new_state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), new_state)
+    return y[:, None].astype(x.dtype), new_state
+
+
+def ssm_decode_step(p, xin, sp, policy, state, norm_eps=1e-5):
+    return ssm_mixer(p, xin, sp, policy, state=state, norm_eps=norm_eps)
+
+
+def ssm_init_state(b: int, sp: SSMParams, dtype=jnp.float32) -> dict:
+    conv_c = sp.d_inner + 2 * sp.n_groups * sp.state_dim
+    return {
+        "conv": jnp.zeros((b, sp.conv_width - 1, conv_c), dtype),
+        "ssd": jnp.zeros((b, sp.n_heads, sp.state_dim, sp.head_dim), jnp.float32),
+    }

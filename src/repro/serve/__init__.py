@@ -1,0 +1,7 @@
+from repro.serve.engine import (
+    InferenceDeployment,
+    InferenceReplica,
+    build_prefill_step,
+    build_serve_step,
+)
+from repro.serve.lm_engine import LMEngine, Request, serve_stream

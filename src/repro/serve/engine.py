@@ -1,0 +1,190 @@
+"""Inference serving — the paper's Algorithm 2 + Replication Controller.
+
+An :class:`InferenceDeployment` runs N replicas of a trained model. All
+replicas join one consumer group on the input topic, so Kafka's partition
+assignment load-balances request batches across them (paper §III-E); a
+replica that stops heartbeating loses its partitions to the survivors
+(fault tolerance) and committed offsets mean no request is lost.
+
+Each replica is Algorithm 2 verbatim:
+
+    model <- downloadTrainedModelFromBackend(model_url)
+    deserializer <- getDeserializer(input_configuration)   # from the
+        control message captured at training time (paper §IV-E autoconfig)
+    loop: read stream -> decode -> predict -> send to output topic
+
+``predict_fn`` is pluggable: the COPD MLP forward, or an LM decode loop
+built by :func:`build_serve_step` (the pjit'd single-token step used by
+the dry-run and the serving examples).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.consumer import ConsumerGroup
+from repro.core.log import StreamLog
+from repro.core.registry import Registry, TrainedResult
+from repro.data.formats import codec_from_control
+from repro.models.model import StreamModel
+
+__all__ = ["InferenceDeployment", "InferenceReplica", "build_serve_step", "build_prefill_step"]
+
+
+# ----------------------------------------------------------- pjit serve steps
+def build_serve_step(model: StreamModel, mesh: Mesh | None = None):
+    """Single-token decode step, sharded: (params, cache, tokens, pos) ->
+    (logits, cache). Cache is donated (updated in place device-side)."""
+
+    def step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(1,))
+    pspecs = model.param_pspecs()
+    pshard = jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+    return jax.jit(step, donate_argnums=(1,)), pshard
+
+
+def build_prefill_step(model: StreamModel, s_cache: int, mesh: Mesh | None = None):
+    def step(params, batch):
+        return model.prefill(params, batch, s_cache)
+
+    return jax.jit(step, static_argnums=())
+
+
+# ------------------------------------------------------------------- replicas
+@dataclasses.dataclass
+class ReplicaStats:
+    processed: int = 0
+    batches: int = 0
+    errors: int = 0
+
+
+class InferenceReplica:
+    """One containerized inference worker (paper Algorithm 2)."""
+
+    def __init__(
+        self,
+        replica_id: str,
+        log: StreamLog,
+        group: ConsumerGroup,
+        result: TrainedResult,
+        predict_fn: Callable[[Mapping[str, np.ndarray]], np.ndarray],
+        output_topic: str,
+    ):
+        self.replica_id = replica_id
+        self.log = log
+        self.consumer = group.join(replica_id)
+        # getDeserializer(input_configuration): auto-configured from the
+        # training control message (paper §IV-E)
+        self.codec = codec_from_control(result.input_format, result.input_config)
+        self.predict_fn = predict_fn
+        self.output_topic = output_topic
+        self.stats = ReplicaStats()
+        self.alive = True
+
+    def poll_once(self, max_records: int = 256) -> int:
+        """One loop iteration: read -> decode -> predict -> produce."""
+        if not self.alive or self.replica_id not in self.consumer.group.members:
+            return 0
+        done = 0
+        for batch in self.consumer.poll(max_records):
+            mat = batch.to_matrix()
+            # inference streams carry only the data fields; tolerate
+            # full-record streams by slicing the data prefix
+            data_bytes = sum(f.nbytes for f in getattr(self.codec, "data_fields", self.codec.fields[:-1]))
+            decoded = _decode_data(self.codec, mat, data_bytes)
+            preds = self.predict_fn(decoded)
+            preds = np.asarray(preds)
+            out = [preds[i].tobytes() for i in range(preds.shape[0])]
+            self.log.ensure_topic(self.output_topic)
+            self.log.produce_batch(self.output_topic, out, partition=0)
+            self.stats.processed += len(out)
+            self.stats.batches += 1
+            done += len(out)
+        self.consumer.commit()
+        return done
+
+    def kill(self) -> None:
+        """Simulated crash: stops heartbeating (the group expires it)."""
+        self.alive = False
+
+
+def _decode_data(codec, mat: np.ndarray, data_bytes: int) -> dict[str, np.ndarray]:
+    if mat.shape[1] == codec.record_bytes:
+        full = codec.decode_matrix(mat)
+        names = [f.name for f in getattr(codec, "data_fields", codec.fields[:-1])]
+        return {k: full[k] for k in names}
+    # data-only records
+    out: dict[str, np.ndarray] = {}
+    off = 0
+    for f in getattr(codec, "data_fields", codec.fields[:-1]):
+        chunk = np.ascontiguousarray(mat[:, off : off + f.nbytes])
+        out[f.name] = chunk.view(np.dtype(f.dtype)).reshape((mat.shape[0],) + f.shape)
+        off += f.nbytes
+    return out
+
+
+class InferenceDeployment:
+    """The Replication Controller: N replicas on one consumer group."""
+
+    def __init__(
+        self,
+        log: StreamLog,
+        registry: Registry,
+        result_id: str,
+        predict_fn,
+        *,
+        input_topic: str,
+        output_topic: str,
+        replicas: int = 2,
+        session_timeout_s: float = 5.0,
+        clock=None,
+    ):
+        self.log = log
+        self.result = registry.result(result_id)
+        self.group = ConsumerGroup(
+            log,
+            group_id=f"infer-{result_id}",
+            topics=[input_topic],
+            session_timeout_s=session_timeout_s,
+            clock=clock,
+        )
+        self.replicas = [
+            InferenceReplica(
+                f"replica-{i}", log, self.group, self.result, predict_fn, output_topic
+            )
+            for i in range(replicas)
+        ]
+        self.input_topic = input_topic
+        self.output_topic = output_topic
+
+    def poll_all(self) -> int:
+        """Drive every live replica one iteration (the K8s 'tick')."""
+        for r in self.replicas:  # live replicas heartbeat, dead ones don't
+            if r.alive and r.replica_id in self.group.members:
+                self.group.heartbeat(r.replica_id)
+        self.group.expire_dead_members()
+        return sum(r.poll_once() for r in self.replicas)
+
+    def kill_replica(self, idx: int) -> None:
+        self.replicas[idx].kill()
+
+    def drain(self, max_iters: int = 100) -> int:
+        total = 0
+        for _ in range(max_iters):
+            got = self.poll_all()
+            total += got
+            if got == 0:
+                break
+        return total

@@ -1,0 +1,4 @@
+from repro.train import checkpoint
+from repro.train.compression import compressed_psum_mean, int8_decode, int8_encode
+from repro.train.optimizer import Optimizer, adamw, adamw8bit, cosine_schedule
+from repro.train.trainer import TrainingJob, build_train_step, dp_train_step, make_state

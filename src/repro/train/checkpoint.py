@@ -1,0 +1,189 @@
+"""Checkpoint/restart — fault tolerance for training jobs.
+
+The Kafka-ML angle (paper §II, §V): the *data* needs no checkpointing — it
+lives in the distributed log and is re-readable by offset. What must be
+checkpointed is (a) the model/optimizer state and (b) the **stream
+offsets** consumed so far. A restarted job restores the latest checkpoint
+and resumes reading the log at the saved offsets: exactly-once training
+semantics on top of the log's at-least-once delivery.
+
+Properties:
+* atomic: write to a tmp dir, fsync, rename — a crash mid-save never
+  corrupts the latest checkpoint;
+* async: the host copy + write happens on a background thread so the
+  device stays busy (device->host transfer is the only sync part);
+* retention: keep the newest ``keep`` checkpoints;
+* **elastic**: arrays are stored mesh-independent (dense host numpy) and
+  re-sharded at load onto whatever mesh/policy the restarted job uses —
+  restart on 256 chips from a 512-chip checkpoint re-shards transparently.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "latest_step", "restore", "save"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_key_str(k) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            # np.savez cannot round-trip ml_dtypes; store as fp32 (lossless
+            # for bf16/fp8) — restore() casts back to the template dtype
+            arr = np.asarray(jax.numpy.asarray(leaf).astype(jax.numpy.float32))
+        out[key] = arr
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"[{k.idx}]"
+    return str(k)
+
+
+def save(
+    ckpt_dir: str,
+    step: int,
+    state: Any,
+    *,
+    offsets: Mapping[str, int] | None = None,
+    meta: Mapping[str, Any] | None = None,
+) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "offsets": dict(offsets or {}),
+        "meta": dict(meta or {}),
+        "treedef": None,  # restored against a template tree
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(ckpt_dir)
+        if (m := _STEP_RE.match(d)) and os.path.isdir(os.path.join(ckpt_dir, d))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    template: Any,
+    step: int | None = None,
+    *,
+    shardings: Any = None,
+) -> tuple[Any, dict[str, int], dict[str, Any]]:
+    """Restore (state, offsets, meta).
+
+    ``template`` provides the pytree structure (e.g. from eval_shape);
+    ``shardings`` (same treedef, optional) re-shards each leaf onto the
+    *current* mesh — the elastic-restart path.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    z = np.load(os.path.join(path, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    shard_flat = (
+        jax.tree.leaves(shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        if shardings is not None
+        else [None] * len(flat)
+    )
+    for (pathk, leaf), sh in zip(flat, shard_flat):
+        key = "/".join(_key_str(k) for k in pathk)
+        arr = z[key]
+        want_dtype = getattr(leaf, "dtype", arr.dtype)
+        if arr.dtype != want_dtype:
+            # cast via jnp: numpy lacks direct casts to ml_dtypes (bf16, fp8)
+            arr = np.asarray(jax.numpy.asarray(arr).astype(want_dtype))
+        if sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    state = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves
+    )
+    return state, dict(manifest.get("offsets", {})), dict(manifest.get("meta", {}))
+
+
+class CheckpointManager:
+    """Async checkpointing with retention.
+
+    ``save_async`` snapshots device arrays to host (sync) then writes on a
+    daemon thread; ``wait`` joins the in-flight write (used before exit and
+    in tests).
+    """
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save_async(self, step: int, state: Any, *, offsets=None, meta=None) -> None:
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)  # device->host now
+
+        def _write():
+            save(self.ckpt_dir, step, host_state, offsets=offsets, meta=meta)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1))
+            for d in os.listdir(self.ckpt_dir)
+            if (m := _STEP_RE.match(d))
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+    def latest(self) -> int | None:
+        return latest_step(self.ckpt_dir)

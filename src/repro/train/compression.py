@@ -1,0 +1,69 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Scheme (DESIGN.md §4): two-phase compressed all-reduce under shard_map —
+
+  1. ``psum_scatter`` the bf16 gradients over the DP axis (bandwidth:
+     1x size in bf16 — already half of an fp32 ring all-reduce's reduce
+     phase);
+  2. blockwise int8-quantize the reduced shard and ``all_gather`` codes +
+     fp32 block scales (bandwidth: ~0.25x fp32).
+
+Net wire bytes vs fp32 all-reduce: (2 + 1.06)/8 ≈ 0.38x. Lossy only in
+phase 2 (each replica sees identically quantized values, so replicas stay
+bit-identical — no divergence). Used by the manual-DP trainer
+(``repro.train.trainer.dp_train_step``); the pjit/SPMD path keeps XLA's
+fused bf16 all-reduce (EXPERIMENTS.md discusses the trade).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compressed_psum_mean", "int8_encode", "int8_decode"]
+
+_BLOCK = 256
+
+
+def int8_encode(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Flatten -> pad -> per-block absmax int8. Returns (codes, scales)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    npad = -(-n // _BLOCK) * _BLOCK
+    if npad != n:
+        flat = jnp.pad(flat, (0, npad - n))
+    blocks = flat.reshape(-1, _BLOCK).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return codes, scale[:, 0]
+
+
+def int8_decode(codes: jax.Array, scales: jax.Array, shape, dtype) -> jax.Array:
+    out = codes.astype(jnp.float32) * scales[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def compressed_psum_mean(grads, axis: str):
+    """Mean-all-reduce a gradient pytree over ``axis`` (inside shard_map).
+
+    reduce-scatter in bf16, int8-quantize the owned shard, all-gather codes.
+    Leaves too small to scatter evenly fall back to plain psum.
+    """
+    n = jax.lax.axis_size(axis)
+
+    def one(g):
+        flat = g.reshape(-1).astype(jnp.bfloat16)
+        if flat.shape[0] % (n * _BLOCK) != 0:
+            return (jax.lax.psum(g.astype(jnp.float32), axis) / n).astype(g.dtype)
+        shard = jax.lax.psum_scatter(flat, axis, scatter_dimension=0, tiled=True)
+        shard = (shard.astype(jnp.float32) / n).astype(jnp.float32)
+        codes, scales = int8_encode(shard)
+        codes_g = jax.lax.all_gather(codes, axis, axis=0, tiled=True)
+        scales_g = jax.lax.all_gather(scales, axis, axis=0, tiled=True)
+        return int8_decode(codes_g, scales_g, g.shape, g.dtype)
+
+    return jax.tree.map(one, grads)

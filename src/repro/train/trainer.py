@@ -1,0 +1,322 @@
+"""Training jobs — the paper's Algorithm 1 on a JAX mesh.
+
+Two layers:
+
+* :func:`build_train_step` — the pjit'd SPMD step for the model zoo:
+  in/out shardings derived from model + optimizer pspecs, optional
+  microbatch gradient accumulation, donated state.
+* :class:`TrainingJob` — the Kafka-ML training Job (paper §IV-C): fetch
+  model spec from the registry, block on the control topic for its
+  deployment_id, read the stream (train/eval split per validation_rate),
+  train, upload trained artifact + metrics back to the registry.
+  Checkpoints embed the stream offsets; ``resume=True`` restarts exactly
+  where a killed job died (fault tolerance, paper §II/§V).
+
+Plus :func:`dp_train_step` — a manual-DP (shard_map) step with int8
+compressed gradient all-reduce for the pure data-parallel regime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Iterator, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.control import ControlMessage, poll_control
+from repro.core.log import StreamLog
+from repro.core.registry import Registry
+from repro.data.pipeline import BatchIterator, ShardedFeeder, StreamDataset
+from repro.models.model import StreamModel
+from repro.models.policy import Policy
+from repro.train import checkpoint as ckpt_lib
+from repro.train.compression import compressed_psum_mean
+from repro.train.optimizer import Optimizer, adamw
+
+__all__ = ["TrainingJob", "build_train_step", "dp_train_step", "make_state"]
+
+
+# ------------------------------------------------------------- SPMD pjit step
+def make_state(model: StreamModel, opt: Optimizer, rng) -> dict:
+    params = model.init(rng)
+    return {"params": params, "opt": opt.init(params)}
+
+
+def state_pspecs(model: StreamModel, opt: Optimizer) -> dict:
+    pspecs = model.param_pspecs()
+    return {"params": pspecs, "opt": opt.state_pspecs(pspecs)}
+
+
+def _to_microbatches(x: jax.Array, k: int, dp: int) -> jax.Array:
+    """(B, ...) -> (k, B/k, ...) such that every microbatch spans every
+    data shard.
+
+    A plain reshape would turn the (contiguously) batch-sharded dim into a
+    sharded *microbatch* dim — each accumulation step would then live on
+    1/dp of the devices. Instead split per-shard rows across microbatches:
+    shard d's rows [d*B/dp, ...) are dealt round-robin to the k steps, so
+    each (B/k)-row microbatch keeps the full P(batch_axes) sharding.
+    (This permutes which rows share a microbatch; rows are i.i.d. samples.)
+    """
+    b = x.shape[0]
+    bl = b // (dp * k)
+    y = x.reshape((dp, k, bl) + x.shape[1:])
+    y = jnp.moveaxis(y, 1, 0)  # (k, dp, bl, ...)
+    return y.reshape((k, dp * bl) + x.shape[1:])
+
+
+def build_train_step(
+    model: StreamModel,
+    opt: Optimizer,
+    *,
+    microbatches: int = 1,
+    donate: bool = True,
+    mesh: Mesh | None = None,
+):
+    """Returns (step_fn, state_shardings). step_fn(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def step(state, batch):
+        b0 = jax.tree.leaves(batch)[0].shape[0]
+        dp = model.policy.dp_degree
+        k = min(microbatches, max(b0 // max(dp, 1), 1))  # each microbatch must cover DP
+        if k > 1:
+
+            def micro(acc, mb):
+                (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state["params"], mb
+                )
+                acc_g, acc_loss = acc
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / k, acc_g, g
+                )
+                return (acc_g, acc_loss + loss / k), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+            mbs = jax.tree.map(lambda x: _to_microbatches(x, k, dp), batch)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zeros, jnp.float32(0.0)), mbs,
+                unroll=True if model.policy.unroll else 1,
+            )
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch
+            )
+        new_params, new_opt = opt.update(grads, state["opt"], state["params"])
+        return {"params": new_params, "opt": new_opt}, {
+            **metrics,
+            "loss": metrics["loss"],
+        }
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0,) if donate else ()), None
+
+    specs = state_pspecs(model, opt)
+    shardings = jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    batch_sharding = NamedSharding(mesh, P(model.policy.batch_axes))
+    fn = jax.jit(
+        step,
+        in_shardings=(shardings, batch_sharding),
+        out_shardings=(shardings, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return fn, shardings
+
+
+# --------------------------------------------------------- manual-DP variant
+def dp_train_step(
+    loss_fn: Callable,
+    opt: Optimizer,
+    mesh: Mesh,
+    axis: str = "data",
+    compress: bool = True,
+):
+    """Pure data parallelism with explicit (optionally int8-compressed)
+    gradient all-reduce — params replicated, batch sharded over ``axis``."""
+    from jax.experimental.shard_map import shard_map
+
+    def local_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p, b: loss_fn(p, b), has_aux=True
+        )(state["params"], batch)
+        if compress:
+            grads = compressed_psum_mean(grads, axis)
+        else:
+            n = jax.lax.axis_size(axis)
+            grads = jax.tree.map(
+                lambda g: (jax.lax.psum(g.astype(jnp.float32), axis) / n).astype(g.dtype),
+                grads,
+            )
+        loss = jax.lax.pmean(loss, axis)
+        new_params, new_opt = opt.update(grads, state["opt"], state["params"])
+        return {"params": new_params, "opt": new_opt}, {"loss": loss}
+
+    rep = P()
+    state_specs = None  # replicated everywhere
+
+    def wrapped(state, batch):
+        return shard_map(
+            local_step,
+            mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: rep, state), jax.tree.map(lambda _: P(axis), batch)),
+            out_specs=(jax.tree.map(lambda _: rep, state), {"loss": rep}),
+            check_rep=False,
+        )(state, batch)
+
+    return jax.jit(wrapped, donate_argnums=(0,))
+
+
+# ------------------------------------------------------------- Training Job
+@dataclasses.dataclass
+class TrainResult:
+    metrics: dict[str, float]
+    eval_metrics: dict[str, float]
+    steps: int
+    control: ControlMessage
+
+
+class TrainingJob:
+    """Paper §IV-C Algorithm 1, with checkpoint/restart fault tolerance.
+
+    One Job trains one model of a deployed configuration. ``run`` blocks
+    on the control topic until a control message targets this deployment,
+    then trains over the referenced stream ranges.
+    """
+
+    def __init__(
+        self,
+        log: StreamLog,
+        registry: Registry,
+        deployment_id: str,
+        model_id: str,
+        *,
+        loss_fn: Callable,  # (params, batch) -> (loss, metrics)
+        init_fn: Callable,  # rng -> params
+        opt: Optimizer | None = None,
+        ckpt_dir: str | None = None,
+        ckpt_every: int = 50,
+        seed: int = 0,
+    ):
+        self.log = log
+        self.registry = registry
+        self.deployment_id = deployment_id
+        self.model_id = model_id
+        self.loss_fn = loss_fn
+        self.init_fn = init_fn
+        self.opt = opt or adamw(1e-3)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.seed = seed
+        self.manager = (
+            ckpt_lib.CheckpointManager(ckpt_dir) if ckpt_dir is not None else None
+        )
+
+    # ---------------------------------------------------------------- control
+    def wait_for_control(self, poll_interval: float = 0.0, max_polls: int = 1000):
+        """Algorithm 1's readControlStreams loop."""
+        offset = 0
+        for _ in range(max_polls):
+            msg, offset = poll_control(self.log, self.deployment_id, offset)
+            if msg is not None:
+                return msg
+            if poll_interval:
+                time.sleep(poll_interval)
+        raise TimeoutError(
+            f"no control message for deployment {self.deployment_id!r}"
+        )
+
+    # ------------------------------------------------------------------- run
+    def run(
+        self,
+        *,
+        batch_size: int,
+        epochs: int = 1,
+        resume: bool = False,
+        max_steps: int | None = None,
+        crash_after: int | None = None,  # fault-injection hook for tests
+    ) -> TrainResult:
+        msg = self.wait_for_control()
+        ds = StreamDataset(self.log, msg)
+        train_arrays, eval_arrays = ds.split()
+
+        params = self.init_fn(jax.random.PRNGKey(self.seed))
+        state = {"params": params, "opt": self.opt.init(params)}
+        start_step = 0
+        if resume and self.manager is not None and self.manager.latest() is not None:
+            state, offsets, meta = ckpt_lib.restore(self.ckpt_dir, state)
+            start_step = int(meta.get("next_step", 0))
+
+        @jax.jit
+        def step_fn(state, batch):
+            (loss, metrics), grads = jax.value_and_grad(self.loss_fn, has_aux=True)(
+                state["params"], batch
+            )
+            new_params, new_opt = self.opt.update(grads, state["opt"], state["params"])
+            return {"params": new_params, "opt": new_opt}, metrics
+
+        it = BatchIterator(
+            train_arrays, batch_size, seed=self.seed, epochs=None, shuffle=True
+        )
+        steps_per_epoch = it.steps_per_epoch()
+        total = max_steps if max_steps is not None else epochs * steps_per_epoch
+
+        metrics = {}
+        stream = iter(it)
+        # deterministic resume: fast-forward the shuffled stream
+        for _ in range(start_step):
+            next(stream)
+        for step_i in range(start_step, total):
+            batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+            state, m = step_fn(state, batch)
+            metrics = {k: float(v) for k, v in m.items()}
+            done = step_i + 1
+            if self.manager is not None and done % self.ckpt_every == 0:
+                self.manager.save_async(
+                    done,
+                    state,
+                    offsets={str(r): r.end for r in msg.ranges},
+                    meta={"next_step": done, "deployment_id": self.deployment_id},
+                )
+            if crash_after is not None and done >= crash_after:
+                self.manager and self.manager.wait()
+                raise RuntimeError(f"injected crash after step {done}")
+        if self.manager is not None:
+            self.manager.save_async(
+                total, state, offsets={str(r): r.end for r in msg.ranges},
+                meta={"next_step": total, "deployment_id": self.deployment_id},
+            )
+            self.manager.wait()
+
+        eval_metrics = {}
+        if msg.validation_rate > 0 and next(iter(eval_arrays.values())).shape[0] > 0:
+            eb = {k: jnp.asarray(v) for k, v in eval_arrays.items()}
+            _, em = self.loss_fn(state["params"], eb)
+            eval_metrics = {k: float(v) for k, v in em.items()}
+
+        artifact = None
+        if self.ckpt_dir is not None:
+            artifact = self.ckpt_dir
+        self.registry.upload_result(
+            self.deployment_id,
+            self.model_id,
+            metrics,
+            eval_metrics,
+            input_format=msg.input_format,
+            input_config=msg.input_config,
+            artifact_path=artifact,
+        )
+        self._final_state = state
+        return TrainResult(metrics, eval_metrics, total, msg)

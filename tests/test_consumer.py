@@ -1,0 +1,89 @@
+"""Consumer groups: assignment properties, rebalance, offsets, failure."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consumer import ConsumerGroup, range_assign
+from repro.core.log import LogConfig, StreamLog, TopicPartition
+
+
+# ------------------------------------------------------- assignment properties
+@settings(max_examples=100, deadline=None)
+@given(
+    n_members=st.integers(0, 10),
+    n_parts=st.integers(0, 32),
+)
+def test_property_range_assign_partition_exactly_once_and_balanced(n_members, n_parts):
+    members = [f"m{i}" for i in range(n_members)]
+    parts = [TopicPartition("t", p) for p in range(n_parts)]
+    a = range_assign(members, parts)
+    assigned = [tp for v in a.values() for tp in v]
+    # every partition exactly once
+    assert sorted(assigned, key=lambda tp: tp.partition) == parts or not members
+    if members:
+        loads = [len(v) for v in a.values()]
+        assert max(loads) - min(loads) <= 1  # balanced
+    # deterministic
+    assert range_assign(members, parts) == a
+
+
+def _mklog(partitions=4):
+    log = StreamLog()
+    log.create_topic("t", LogConfig(num_partitions=partitions))
+    return log
+
+
+class TestGroup:
+    def test_join_leave_rebalance_generations(self):
+        log = _mklog()
+        g = ConsumerGroup(log, "g", ["t"])
+        c1 = g.join("a")
+        gen1 = g.generation
+        c2 = g.join("b")
+        assert g.generation == gen1 + 1
+        assert len(g.assignment("a")) == 2 and len(g.assignment("b")) == 2
+        g.leave("a")
+        assert len(g.assignment("b")) == 4
+
+    def test_poll_and_commit_at_least_once(self):
+        log = _mklog(2)
+        g = ConsumerGroup(log, "g", ["t"])
+        c = g.join("a")
+        log.produce_batch("t", [b"1", b"2"], partition=0)
+        got = sum(len(b) for b in c.poll())
+        assert got == 2
+        # without commit, a fresh member re-reads
+        g.leave("a")
+        c2 = g.join("a2")
+        assert sum(len(b) for b in c2.poll()) == 2
+        c2.commit()
+        g.leave("a2")
+        c3 = g.join("a3")
+        assert sum(len(b) for b in c3.poll()) == 0  # committed
+
+    def test_heartbeat_expiry_moves_partitions(self):
+        t = [0.0]
+        log = _mklog(4)
+        g = ConsumerGroup(log, "g", ["t"], session_timeout_s=5.0, clock=lambda: t[0])
+        ca = g.join("a")
+        cb = g.join("b")
+        assert len(g.assignment("a")) == 2
+        t[0] = 3.0
+        g.heartbeat("b")
+        t[0] = 7.0  # 'a' last heartbeat at 0 -> expired; 'b' at 3 -> alive
+        dead = g.expire_dead_members()
+        assert dead == ["a"]
+        assert len(g.assignment("b")) == 4
+
+    def test_rebalance_resets_positions_to_committed(self):
+        log = _mklog(1)
+        g = ConsumerGroup(log, "g", ["t"])
+        c = g.join("a")
+        log.produce_batch("t", [b"1", b"2", b"3"])
+        c.poll()
+        c.commit()
+        log.produce_batch("t", [b"4"])
+        g.join("b")  # rebalance
+        total = sum(len(b) for b in c.poll()) + sum(len(b) for b in g.join("b2").poll())
+        # after rebalance everyone restarts from committed offset 3
+        assert total >= 1

@@ -1,0 +1,92 @@
+"""Control plane: message roundtrip, §V stream-reuse, control logger."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.control import (
+    CONTROL_TOPIC,
+    ControlLogger,
+    ControlMessage,
+    StreamRange,
+    poll_control,
+    send_control,
+)
+from repro.core.log import StreamLog
+
+
+def test_stream_range_parse_roundtrip():
+    r = StreamRange("kafka-ml", 0, 0, 70000)  # the paper's own example
+    assert str(r) == "[kafka-ml:0:0:70000]"
+    assert StreamRange.parse(str(r)) == r
+    assert StreamRange.parse("kafka-ml:0:0:70000") == r
+    with pytest.raises(ValueError):
+        StreamRange.parse("nope")
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dep=st.text(st.characters(codec="ascii", exclude_characters=':[]"\\'), min_size=1, max_size=20),
+    topic=st.text(st.characters(codec="ascii", exclude_characters=':[]"\\'), min_size=1, max_size=20),
+    vr=st.floats(0.0, 1.0),
+    ranges=st.lists(
+        st.tuples(st.integers(0, 7), st.integers(0, 10_000), st.integers(1, 10_000)),
+        min_size=0,
+        max_size=5,
+    ),
+)
+def test_property_control_message_roundtrip(dep, topic, vr, ranges):
+    rs = [StreamRange(topic, p, o, l) for p, o, l in ranges]
+    msg = ControlMessage(
+        deployment_id=dep,
+        topic=topic,
+        input_format="RAW",
+        input_config={"data_type": "uint8", "data_reshape": [28, 28],
+                      "label_type": "uint8", "label_reshape": []},
+        validation_rate=vr,
+        total_msg=sum(r.length for r in rs),
+        ranges=rs,
+    )
+    back = ControlMessage.from_bytes(msg.to_bytes())
+    assert back.deployment_id == dep and back.ranges == rs
+    assert abs(back.validation_rate - vr) < 1e-12
+
+
+def test_control_message_validation():
+    with pytest.raises(ValueError):
+        ControlMessage("d", "t", "RAW", {}, validation_rate=1.5, total_msg=0)
+    with pytest.raises(ValueError):
+        ControlMessage("d", "t", "XML", {}, validation_rate=0.0, total_msg=0)
+    with pytest.raises(ValueError):  # total_msg must match ranges
+        ControlMessage("d", "t", "RAW", {}, 0.0, 5, [StreamRange("t", 0, 0, 3)])
+
+
+def test_poll_control_filters_by_deployment():
+    log = StreamLog()
+    m1 = ControlMessage("dep-1", "t", "RAW", {}, 0.0, 0)
+    m2 = ControlMessage("dep-2", "t", "RAW", {}, 0.0, 0)
+    send_control(log, m1)
+    send_control(log, m2)
+    got, off = poll_control(log, "dep-2")
+    assert got.deployment_id == "dep-2"
+    got_none, _ = poll_control(log, "dep-3")
+    assert got_none is None
+
+
+def test_stream_reuse_via_retarget():
+    """Paper §V Fig. 8: the same data stream re-announced to a new
+    deployment with a tens-of-bytes control message."""
+    log = StreamLog()
+    ranges = [StreamRange("data", 0, 0, 1000)]
+    m1 = ControlMessage("D1", "data", "RAW",
+                        {"data_type": "uint8", "data_reshape": [4],
+                         "label_type": "uint8", "label_reshape": []},
+                        0.1, 1000, ranges)
+    send_control(log, m1)
+    logger = ControlLogger(log)
+    assert len(logger.history) == 1
+    m2 = logger.replay(m1, "D2")
+    assert m2.ranges == m1.ranges and m2.deployment_id == "D2"
+    assert len(m2.to_bytes()) < 300  # "tens of bytes", not the data stream
+    got, _ = poll_control(log, "D2")
+    assert got is not None and got.ranges == ranges
+    assert logger.latest_for("D2").deployment_id == "D2"

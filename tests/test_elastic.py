@@ -1,0 +1,71 @@
+"""Elastic scaling: checkpoints are mesh-independent — a job restarted on a
+DIFFERENT mesh shape restores, re-shards, and continues identically."""
+
+import subprocess
+import sys
+import textwrap
+
+
+def test_elastic_restart_across_mesh_shapes(tmp_path):
+    """Save sharded state on a (2,4) mesh in one process; restore onto a
+    (4,2) mesh in another; training continues with identical loss.
+
+    Runs in subprocesses because XLA_FLAGS (host device count) must be set
+    before jax initializes.
+    """
+    script = textwrap.dedent("""
+        import os, sys
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        import repro.configs as C
+        from repro.models.model import StreamModel
+        from repro.models.policy import Policy
+        from repro.train.optimizer import adamw
+        from repro.train.trainer import build_train_step, make_state, state_pspecs
+        from repro.train import checkpoint as ck
+
+        mode, ckdir, shape0, shape1 = sys.argv[1:5]
+        shape = tuple(int(x) for x in (shape0, shape1))
+        mesh = jax.make_mesh(shape, ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = C.get_reduced("yi-6b")
+        pol = Policy.for_mesh(mesh, param_dtype="float32", compute_dtype="float32")
+        model = StreamModel(cfg, pol, mesh)
+        opt = adamw(1e-3)
+        step_fn, shardings = build_train_step(model, opt, mesh=mesh, donate=False)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)).astype(np.int32))}
+        with mesh:
+            if mode == "save":
+                state = make_state(model, opt, jax.random.PRNGKey(0))
+                state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
+                state, m = step_fn(state, batch)
+                ck.save(ckdir, 1, state, meta={"loss": float(m["loss"])})
+                state, m = step_fn(state, batch)   # reference second step
+                print(f"LOSS2={float(m['loss']):.10f}")
+            else:
+                template = jax.eval_shape(lambda: make_state(model, opt, jax.random.PRNGKey(0)))
+                state, _, meta = ck.restore(ckdir, template, shardings=shardings)
+                # verify actually sharded on THIS mesh
+                leaf = jax.tree.leaves(state["params"])[0]
+                assert len(leaf.sharding.device_set) == 8
+                state, m = step_fn(state, batch)
+                print(f"LOSS2={float(m['loss']):.10f}")
+    """)
+    f = tmp_path / "elastic.py"
+    f.write_text(script)
+    ck = str(tmp_path / "ck")
+
+    def run(mode, s0, s1):
+        out = subprocess.run(
+            [sys.executable, str(f), mode, ck, s0, s1],
+            capture_output=True, text=True, env={**__import__("os").environ, "PYTHONPATH": "src"},
+            timeout=600,
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        return [l for l in out.stdout.splitlines() if l.startswith("LOSS2=")][0]
+
+    ref = run("save", "2", "4")
+    got = run("restore", "4", "2")  # different mesh factorization
+    assert ref == got, (ref, got)

@@ -1,0 +1,86 @@
+"""Supervisor: the back-end deploy loop with bounded restart (paper §IV-B)."""
+
+import numpy as np
+import pytest
+
+import repro.core as core
+import repro.data as data
+from repro.configs import copd_mlp
+from repro.core.supervisor import Supervisor
+from repro.data.formats import AvroCodec, FieldSpec
+from repro.train import TrainingJob, adamw
+
+
+def _stack(tmp_path, n_models=2):
+    log, reg = core.StreamLog(), core.Registry()
+    specs = [reg.register_model("copd-mlp") for _ in range(n_models)]
+    cfg = reg.create_configuration([s.model_id for s in specs])
+    dep = reg.deploy(cfg.config_id, "train",
+                     training_kwargs={"batch_size": 10, "max_steps": 40})
+    codec = AvroCodec(
+        [FieldSpec("data", "float32", (copd_mlp.N_FEATURES,))],
+        [FieldSpec("label", "int32", ())],
+    )
+    log.create_topic("copd")
+    data.ingest(log, "copd", codec, copd_mlp.synth_dataset(), dep.deployment_id,
+                validation_rate=0.2)
+    return log, reg, dep
+
+
+def test_supervisor_runs_whole_configuration(tmp_path):
+    log, reg, dep = _stack(tmp_path)
+
+    def factory(dep_, spec_, ckpt_dir):
+        return TrainingJob(log, reg, dep_.deployment_id, spec_.model_id,
+                           loss_fn=copd_mlp.loss_fn, init_fn=copd_mlp.init,
+                           opt=adamw(1e-2), ckpt_dir=ckpt_dir, ckpt_every=10)
+
+    sup = Supervisor(log, reg, factory, ckpt_root=str(tmp_path))
+    outcomes = sup.reconcile()
+    assert len(outcomes) == 2 and all(o.ok for o in outcomes)
+    assert reg.deployment(dep.deployment_id).status == "finished"
+    # both models (one configuration, ONE stream) uploaded results
+    assert len(reg.results_for(dep.deployment_id)) == 2
+    assert sup.pending_deployments() == []  # nothing left to reconcile
+
+
+def test_supervisor_restarts_crashed_job_from_checkpoint(tmp_path):
+    log, reg, dep = _stack(tmp_path, n_models=1)
+    crashes = {"left": 1}  # first attempt dies mid-run
+
+    def factory(dep_, spec_, ckpt_dir):
+        crash_after = 15 if crashes["left"] > 0 else None
+        crashes["left"] = max(crashes["left"] - 1, 0)
+
+        class Wrapped(TrainingJob):
+            def run(self, **kw):
+                return super().run(crash_after=crash_after, **kw)
+
+        return Wrapped(log, reg, dep_.deployment_id, spec_.model_id,
+                       loss_fn=copd_mlp.loss_fn, init_fn=copd_mlp.init,
+                       opt=adamw(1e-2), ckpt_dir=ckpt_dir, ckpt_every=10)
+
+    sup = Supervisor(log, reg, factory, ckpt_root=str(tmp_path), max_restarts=2)
+    outcomes = sup.reconcile()
+    assert len(outcomes) == 1
+    assert outcomes[0].ok and outcomes[0].attempts == 2  # crash -> resume -> done
+    assert reg.deployment(dep.deployment_id).status == "finished"
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    log, reg, dep = _stack(tmp_path, n_models=1)
+
+    def factory(dep_, spec_, ckpt_dir):
+        class AlwaysCrash(TrainingJob):
+            def run(self, **kw):
+                return super().run(crash_after=5, **kw)
+
+        return AlwaysCrash(log, reg, dep_.deployment_id, spec_.model_id,
+                           loss_fn=copd_mlp.loss_fn, init_fn=copd_mlp.init,
+                           opt=adamw(1e-2), ckpt_dir=ckpt_dir, ckpt_every=10)
+
+    sup = Supervisor(log, reg, factory, ckpt_root=str(tmp_path), max_restarts=1)
+    outcomes = sup.reconcile()
+    assert not outcomes[0].ok and outcomes[0].attempts == 2
+    assert "injected crash" in outcomes[0].error
+    assert reg.deployment(dep.deployment_id).status == "failed"
