@@ -1,0 +1,75 @@
+"""Replication microbenchmark: append throughput vs replication factor/acks.
+
+Quantifies what the replicated substrate costs relative to the bare
+single-broker log — the durability/latency trade-off the paper inherits
+from Kafka (§II). Prints ``name,us_per_call,derived`` CSV rows like
+:mod:`benchmarks.run`:
+
+    PYTHONPATH=src python -m benchmarks.replication
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.cluster import BrokerCluster, ClusterProducer
+from repro.core.log import LogConfig, StreamLog
+
+RECORD_BYTES = 1024
+BATCH = 256
+BATCHES = 200  # 200 * 256 * 1KiB = 50 MiB per config
+
+
+def _row(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def _throughput(append_batch, n_batches: int = BATCHES) -> dict[str, float]:
+    payload = [bytes(RECORD_BYTES) for _ in range(BATCH)]
+    append_batch(payload)  # warm topic structures
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        append_batch(payload)
+    dt = time.perf_counter() - t0
+    msgs = n_batches * BATCH
+    return {
+        "s_per_batch": dt / n_batches,
+        "msgs_per_s": msgs / dt,
+        "MB_per_s": msgs * RECORD_BYTES / dt / 1e6,
+    }
+
+
+def bench_bare_log() -> dict[str, float]:
+    log = StreamLog()
+    log.create_topic("bench", LogConfig(num_partitions=1))
+    return _throughput(lambda vs: log.produce_batch("bench", vs, partition=0))
+
+
+def bench_cluster(rf: int, acks: int | str, brokers: int = 3) -> dict[str, float]:
+    cluster = BrokerCluster(brokers, default_acks=acks)
+    cluster.create_topic(
+        "bench", LogConfig(num_partitions=1, replication_factor=rf)
+    )
+    prod = ClusterProducer(cluster, acks=acks)
+    return _throughput(lambda vs: prod.send_batch("bench", vs, partition=0))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    base = bench_bare_log()
+    _row(
+        "replication_bare_streamlog", base["s_per_batch"],
+        f"{base['MB_per_s']:.0f}MB/s",
+    )
+    for rf in (1, 2, 3):
+        for acks in (0, 1, "all"):
+            r = bench_cluster(rf, acks)
+            rel = base["MB_per_s"] / r["MB_per_s"]
+            _row(
+                f"replication_rf{rf}_acks{acks}", r["s_per_batch"],
+                f"{r['MB_per_s']:.0f}MB/s_{rel:.2f}x_vs_bare",
+            )
+
+
+if __name__ == "__main__":
+    main()

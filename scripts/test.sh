@@ -1,0 +1,17 @@
+#!/usr/bin/env sh
+# Two-tier test runner: fail fast on the quick tier, then run everything.
+#   scripts/test.sh          # fast tier, then full suite
+#   scripts/test.sh --fast   # fast tier only
+set -e
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== fast tier (pytest -m 'not slow') =="
+python -m pytest -x -q -m "not slow"
+
+if [ "$1" = "--fast" ]; then
+    exit 0
+fi
+
+echo "== full suite (slow tests included) =="
+python -m pytest -q -m "slow"

@@ -1,4 +1,16 @@
 """Core: the paper's contribution — stream-driven ML pipeline management."""
+from repro.core.cluster import (
+    Broker,
+    BrokerCluster,
+    BrokerUnavailable,
+    ClusterConsumer,
+    ClusterError,
+    ClusterProducer,
+    NotEnoughReplicasError,
+    NotLeaderError,
+    PartitionMeta,
+    PartitionOffline,
+)
 from repro.core.control import (
     CONTROL_TOPIC,
     ControlLogger,
@@ -13,6 +25,7 @@ from repro.core.log import (
     OffsetOutOfRange,
     Record,
     RecordBatch,
+    StreamBackend,
     StreamLog,
     TopicPartition,
 )

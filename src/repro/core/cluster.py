@@ -1,0 +1,882 @@
+"""Replicated broker cluster — multi-broker StreamLog with ISR replication.
+
+The paper's fault-tolerance and high-availability claims (abstract, §II,
+§V) rest on Kafka's *replicated* distributed log: every partition lives on
+``replication_factor`` brokers, one of which is the **leader** (serves all
+produce/fetch traffic) while the rest are **followers** that replicate the
+leader's log by fetching from it. This module supplies that substrate for
+the JAX-side reproduction:
+
+* :class:`BrokerCluster` — N in-process brokers, each backed by its own
+  :class:`~repro.core.log.StreamLog`. Topics are created with per-partition
+  **replica sets** (round-robin placement), a deterministic **preferred
+  leader**, an **in-sync-replica (ISR)** set, and a **high watermark** (HW):
+  the largest offset known to be on every ISR member. Consumers only ever
+  see records below the HW, so an acknowledged-and-visible record can never
+  be un-read by a failover.
+* **Producer acks** (paper §II's durability/latency trade-off):
+  ``acks=0`` fire-and-forget, ``acks=1`` leader-only append, ``acks='all'``
+  append + synchronous ISR replication + HW advance before the call
+  returns. An ``acks='all'`` record survives the loss of any single broker
+  *provided the ISR held >= 2 members when it was acknowledged* — as in
+  Kafka, set ``min_insync_replicas=2`` to make the broker reject appends
+  whenever that precondition doesn't hold (topics created without an
+  explicit config get ``min(2, rf)``).
+* **Leader election** — when a broker dies or is network-partitioned, every
+  partition it led elects the lowest-id in-sync survivor (deterministic),
+  bumps the partition **epoch** (fences stale clients), and shrinks the
+  ISR. A rejoining broker truncates its log to the HW (discarding unacked
+  suffix records, Kafka's log reconciliation) and re-fetches from the new
+  leader until it is back in sync.
+* :class:`ClusterProducer` / :class:`ClusterConsumer` — failover-aware
+  clients: they cache partition metadata, route to the cached leader, and
+  on :class:`NotLeaderError` / :class:`BrokerUnavailable` refresh metadata
+  and retry — exactly the real Kafka client protocol loop.
+
+The cluster also implements the full :class:`~repro.core.log.StreamBackend`
+surface (``produce_batch``/``read``/``read_range``/offset store/…), so the
+data pipeline, consumer groups, control plane, trainer and serving engine
+all run unchanged against either a bare ``StreamLog`` or a cluster — see
+DESIGN.md §"Cluster".
+
+The consumer-offset store (Kafka's ``__consumer_offsets``) is held by the
+cluster controller and mirrored onto every live broker, i.e. replicated at
+the full cluster width, so committed offsets survive any broker loss.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, replace
+from typing import Callable, Iterator, Sequence
+
+from repro.core.log import (
+    LogConfig,
+    OffsetOutOfRange,
+    RecordBatch,
+    StreamLog,
+    TopicPartition,
+    default_partition,
+)
+
+__all__ = [
+    "Broker",
+    "BrokerCluster",
+    "BrokerUnavailable",
+    "ClusterConsumer",
+    "ClusterError",
+    "ClusterProducer",
+    "NotEnoughReplicasError",
+    "NotLeaderError",
+    "PartitionMeta",
+    "PartitionOffline",
+]
+
+_REPLICA_FETCH_CHUNK = 4096
+
+
+# ------------------------------------------------------------------ errors
+class ClusterError(RuntimeError):
+    """Base class for cluster-level failures."""
+
+
+class NotLeaderError(ClusterError):
+    """The addressed broker is not the current leader for the partition.
+
+    Carries a ``leader_hint`` (the current leader's broker id, or None)
+    so clients can refresh their metadata cache and retry — Kafka's
+    NOT_LEADER_OR_FOLLOWER error code.
+    """
+
+    def __init__(self, topic: str, partition: int, leader_hint: int | None):
+        super().__init__(
+            f"not leader for {topic}:{partition} (current leader: {leader_hint})"
+        )
+        self.topic = topic
+        self.partition = partition
+        self.leader_hint = leader_hint
+
+
+class BrokerUnavailable(ClusterError):
+    """The addressed broker is dead or unreachable."""
+
+
+class PartitionOffline(ClusterError):
+    """No eligible (in-sync, live) leader candidate exists."""
+
+
+class NotEnoughReplicasError(ClusterError):
+    """acks=all rejected: live ISR smaller than ``min_insync_replicas``."""
+
+
+# ------------------------------------------------------------------- broker
+@dataclass
+class Broker:
+    """One broker: an id plus its local :class:`StreamLog` replica store.
+
+    ``alive`` models a crash (process gone); ``reachable`` models a network
+    partition (process up but unreachable). Either way the broker is *down*
+    from the cluster's point of view.
+    """
+
+    broker_id: int
+    log: StreamLog
+    alive: bool = True
+    reachable: bool = True
+
+    @property
+    def up(self) -> bool:
+        return self.alive and self.reachable
+
+
+@dataclass(frozen=True)
+class PartitionMeta:
+    """Client-visible metadata for one partition (Kafka MetadataResponse)."""
+
+    topic: str
+    partition: int
+    leader: int | None
+    epoch: int
+    replicas: tuple[int, ...]
+    isr: frozenset[int]
+    high_watermark: int
+
+
+class _PartitionCtl:
+    """Controller-side replication state for one partition."""
+
+    __slots__ = (
+        "topic",
+        "partition",
+        "replicas",
+        "leader",
+        "epoch",
+        "isr",
+        "hw",
+        "epoch_starts",
+        "synced_epoch",
+    )
+
+    def __init__(self, topic: str, partition: int, replicas: list[int]):
+        self.topic = topic
+        self.partition = partition
+        self.replicas = list(replicas)
+        self.leader: int | None = replicas[0]
+        self.epoch = 0
+        self.isr: set[int] = set(replicas)
+        self.hw = 0
+        # Kafka's leader-epoch checkpoint: epoch -> first offset written in
+        # that epoch. A rejoining replica truncates to the start of the
+        # first epoch it missed — records above may be a deposed leader's
+        # divergent unacked suffix, even below the since-advanced HW.
+        self.epoch_starts: dict[int, int] = {0: 0}
+        # last epoch each replica fully caught up in
+        self.synced_epoch: dict[int, int] = {b: 0 for b in replicas}
+
+    def meta(self) -> PartitionMeta:
+        return PartitionMeta(
+            topic=self.topic,
+            partition=self.partition,
+            leader=self.leader,
+            epoch=self.epoch,
+            replicas=tuple(self.replicas),
+            isr=frozenset(self.isr),
+            high_watermark=self.hw,
+        )
+
+
+# ------------------------------------------------------------------ cluster
+class BrokerCluster:
+    """N replicated brokers behind a single :class:`StreamBackend` surface.
+
+    Drop-in for :class:`StreamLog` in every upper layer; additionally
+    exposes the broker-level protocol (``broker_append``/``broker_fetch``
+    with leader checks and epoch fencing) used by the failover-aware
+    clients, plus chaos hooks (``kill_broker``/``partition_broker``/
+    ``restart_broker``/``heal_broker``) used by the fault-tolerance tests.
+    """
+
+    def __init__(
+        self,
+        num_brokers: int = 3,
+        *,
+        default_replication_factor: int | None = None,
+        default_acks: int | str = "all",
+        allow_unclean_election: bool = False,
+        clock: Callable[[], float] | None = None,
+    ):
+        if num_brokers < 1:
+            raise ValueError("need at least one broker")
+        self._clock = clock or time.time
+        self.brokers: dict[int, Broker] = {
+            i: Broker(i, StreamLog(clock=self._clock)) for i in range(num_brokers)
+        }
+        self.default_replication_factor = (
+            num_brokers if default_replication_factor is None
+            else default_replication_factor
+        )
+        self.default_acks = default_acks
+        self.allow_unclean_election = allow_unclean_election
+        self._meta: dict[tuple[str, int], _PartitionCtl] = {}
+        self._configs: dict[str, LogConfig] = {}
+        self._committed: dict[str, dict[TopicPartition, int]] = {}
+        self._topic_seq = 0  # staggers replica placement across topics
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------------ admin
+    def create_topic(self, name: str, cfg: LogConfig | None = None) -> None:
+        with self._lock:
+            if name in self._configs:
+                raise ValueError(f"topic {name!r} already exists")
+            cfg = replace(cfg) if cfg is not None else LogConfig()
+            n = len(self.brokers)
+            if cfg.replication_factor is None:
+                # unspecified -> cluster default (as Kafka's broker-side
+                # default.replication.factor), so a config written for
+                # partitioning/retention never opts out of replication
+                cfg.replication_factor = self.default_replication_factor
+            rf = cfg.replication_factor
+            if rf < 1 or rf > n:
+                raise ValueError(
+                    f"replication_factor {rf} not in [1, {n}] for {name!r}"
+                )
+            if cfg.min_insync_replicas is None:
+                # default topics enforce the durability the docs promise:
+                # acks=all is only accepted while >= 2 replicas are in sync
+                # (so the ack implies single-broker-loss survival)
+                cfg.min_insync_replicas = min(2, rf)
+            self._configs[name] = cfg
+            # every broker materializes the topic locally; only replica-set
+            # members ever hold data for a given partition. Spill files are
+            # namespaced per broker — replicas seal segments with identical
+            # (topic, partition, base_offset) names and must not clobber
+            # each other's files.
+            for br in self.brokers.values():
+                local = replace(cfg)
+                if cfg.spill_dir is not None:
+                    local.spill_dir = os.path.join(
+                        cfg.spill_dir, f"broker-{br.broker_id}"
+                    )
+                br.log.ensure_topic(name, local)
+            seed = self._topic_seq
+            self._topic_seq += 1
+            for p in range(cfg.num_partitions):
+                start = (p + seed) % n
+                replicas = [(start + j) % n for j in range(rf)]
+                ctl = _PartitionCtl(name, p, replicas)
+                if not self.brokers[ctl.leader].up:
+                    self._elect(ctl)
+                self._meta[(name, p)] = ctl
+
+    def ensure_topic(self, name: str, cfg: LogConfig | None = None) -> None:
+        with self._lock:
+            if name not in self._configs:
+                self.create_topic(name, cfg)
+
+    def delete_topic(self, name: str) -> None:
+        with self._lock:
+            cfg = self._configs.pop(name, None)
+            if cfg is None:
+                return
+            for p in range(cfg.num_partitions):
+                self._meta.pop((name, p), None)
+            for br in self.brokers.values():
+                br.log.delete_topic(name)
+
+    def topics(self) -> list[str]:
+        with self._lock:
+            return sorted(self._configs)
+
+    def num_partitions(self, topic: str) -> int:
+        with self._lock:
+            try:
+                return self._configs[topic].num_partitions
+            except KeyError:
+                raise KeyError(f"unknown topic {topic!r}") from None
+
+    # --------------------------------------------------------------- metadata
+    def _ctl(self, topic: str, partition: int) -> _PartitionCtl:
+        try:
+            return self._meta[(topic, partition)]
+        except KeyError:
+            if topic not in self._configs:
+                raise KeyError(f"unknown topic {topic!r}") from None
+            raise IndexError(f"{topic} has no partition {partition}") from None
+
+    def metadata(self, topic: str) -> dict[int, PartitionMeta]:
+        """MetadataResponse: partition -> (leader, epoch, replicas, isr, hw)."""
+        with self._lock:
+            n = self.num_partitions(topic)
+            return {p: self._ctl(topic, p).meta() for p in range(n)}
+
+    def leader_for(self, topic: str, partition: int) -> int | None:
+        with self._lock:
+            return self._ctl(topic, partition).leader
+
+    def describe(self) -> dict[str, dict[int, PartitionMeta]]:
+        with self._lock:
+            return {t: self.metadata(t) for t in self.topics()}
+
+    # ------------------------------------------------------------ replication
+    def _leader_broker(self, ctl: _PartitionCtl) -> Broker:
+        if ctl.leader is None:
+            raise PartitionOffline(f"{ctl.topic}:{ctl.partition} has no leader")
+        br = self.brokers[ctl.leader]
+        if not br.up:
+            # the controller notices the dead leader lazily (e.g. a client
+            # addressed the partition before any explicit failure event)
+            self._elect(ctl)
+            if ctl.leader is None:
+                raise PartitionOffline(
+                    f"{ctl.topic}:{ctl.partition} has no leader"
+                )
+            br = self.brokers[ctl.leader]
+        return br
+
+    def _replicate_partition(self, ctl: _PartitionCtl) -> None:
+        """One follower-fetch pass: copy leader records to live followers,
+        refresh ISR membership, and advance the high watermark."""
+        leader = self._leader_broker(ctl)
+        leo = leader.log.end_offset(ctl.topic, ctl.partition)
+        for bid in ctl.replicas:
+            if bid == ctl.leader:
+                continue
+            br = self.brokers[bid]
+            if not br.up:
+                ctl.isr.discard(bid)
+                continue
+            local_end = br.log.end_offset(ctl.topic, ctl.partition)
+            last_synced = ctl.synced_epoch.get(bid, -1)
+            if last_synced < ctl.epoch:
+                # leader-epoch reconciliation: this replica missed one or
+                # more elections, so records above the first missed epoch's
+                # start may be a divergent unacked suffix from its own time
+                # as leader — even below the since-advanced HW. Truncate to
+                # that point before fetching.
+                cut = min(
+                    (
+                        start
+                        for e, start in ctl.epoch_starts.items()
+                        if e > last_synced
+                    ),
+                    default=None,
+                )
+                if cut is not None and cut < local_end:
+                    local_end = br.log.truncate_to(ctl.topic, ctl.partition, cut)
+            if local_end > leo:
+                # deposed leader with an unacked suffix: reconcile
+                local_end = br.log.truncate_to(ctl.topic, ctl.partition, leo)
+            lstart = leader.log.start_offset(ctl.topic, ctl.partition)
+            if local_end < lstart:
+                # fell behind the leader's retention point while down:
+                # drop everything and re-fetch from the leader's log start
+                local_end = br.log.reset_to(ctl.topic, ctl.partition, lstart)
+            while local_end < leo:
+                values, keys, timestamps = leader.log.replica_fetch(
+                    ctl.topic, ctl.partition, local_end, _REPLICA_FETCH_CHUNK
+                )
+                if not values:
+                    break
+                br.log.replica_append(
+                    ctl.topic, ctl.partition, values, keys, timestamps
+                )
+                local_end += len(values)
+            if local_end == leo:
+                ctl.isr.add(bid)
+                ctl.synced_epoch[bid] = ctl.epoch
+            else:
+                ctl.isr.discard(bid)
+        ctl.isr.add(ctl.leader)
+        ctl.synced_epoch[ctl.leader] = ctl.epoch
+        isr_ends = [
+            self.brokers[b].log.end_offset(ctl.topic, ctl.partition)
+            for b in ctl.isr
+        ]
+        # HW never regresses below what consumers may already have read
+        ctl.hw = max(ctl.hw, min(isr_ends)) if isr_ends else ctl.hw
+
+    def replicate_all(self) -> None:
+        """Drive one replication pass for every partition (the background
+        follower-fetch loop, collapsed into an explicit tick)."""
+        with self._lock:
+            for ctl in self._meta.values():
+                try:
+                    self._replicate_partition(ctl)
+                except PartitionOffline:
+                    continue  # no live leader to fetch from — skip, not abort
+
+    # ----------------------------------------------------------- elections
+    def _elect(self, ctl: _PartitionCtl) -> None:
+        """Deterministic leader election: lowest-id live ISR member wins.
+
+        Only called when the current leader is down or the partition has
+        no leader (every broker-down event and lazy-discovery path).
+        """
+        candidates = sorted(
+            b for b in ctl.isr if self.brokers[b].up and b != ctl.leader
+        )
+        if not candidates and self.allow_unclean_election:
+            # last resort: any live replica, acked records may be lost
+            candidates = sorted(
+                b for b in ctl.replicas if self.brokers[b].up
+            )
+        old = ctl.leader
+        if not candidates:
+            ctl.leader = None
+            ctl.epoch += 1
+            return
+        ctl.leader = candidates[0]
+        ctl.epoch += 1
+        # live ISR survivors stay in-sync (they reconcile against the new
+        # leader on the next replication pass)
+        ctl.isr = {b for b in ctl.isr if self.brokers[b].up} | {ctl.leader}
+        new_leo = self.brokers[ctl.leader].log.end_offset(ctl.topic, ctl.partition)
+        ctl.epoch_starts[ctl.epoch] = new_leo
+        ctl.synced_epoch[ctl.leader] = ctl.epoch
+        # at acks=all the new leader holds every record below the HW, so the
+        # HW is stable; an unclean (or acks<all) election may regress it
+        ctl.hw = min(ctl.hw, new_leo)
+        # a deposed-but-live old leader (healed network partition) is
+        # reconciled as a follower on the next replication pass
+
+    # ------------------------------------------------------------ chaos hooks
+    def kill_broker(self, broker_id: int) -> None:
+        """Hard-crash a broker: every partition it led fails over."""
+        with self._lock:
+            self.brokers[broker_id].alive = False
+            self._on_broker_down(broker_id)
+
+    def partition_broker(self, broker_id: int) -> None:
+        """Network-partition a broker away from the cluster."""
+        with self._lock:
+            self.brokers[broker_id].reachable = False
+            self._on_broker_down(broker_id)
+
+    def _on_broker_down(self, broker_id: int) -> None:
+        for ctl in self._meta.values():
+            if broker_id in ctl.isr and broker_id != ctl.leader:
+                ctl.isr.discard(broker_id)
+            if ctl.leader == broker_id:
+                self._elect(ctl)
+
+    def restart_broker(self, broker_id: int) -> None:
+        """Bring a crashed broker back; it rejoins as a follower."""
+        with self._lock:
+            self.brokers[broker_id].alive = True
+            self._rejoin(broker_id)
+
+    def heal_broker(self, broker_id: int) -> None:
+        """Heal a network partition; the broker rejoins as a follower."""
+        with self._lock:
+            self.brokers[broker_id].reachable = True
+            self._rejoin(broker_id)
+
+    def _rejoin(self, broker_id: int) -> None:
+        br = self.brokers[broker_id]
+        for ctl in self._meta.values():
+            if broker_id not in ctl.replicas:
+                continue
+            if ctl.leader is None:
+                # partition was offline — the rejoining replica restores it
+                self._elect(ctl)
+                continue
+            if ctl.leader == broker_id:
+                continue
+            # catch up as a follower; _replicate_partition performs the
+            # leader-epoch truncation before fetching
+            self._replicate_partition(ctl)
+        # mirror the (cluster-wide replicated) offset store back onto it
+        for group, offsets in self._committed.items():
+            for tp, off in offsets.items():
+                br.log.commit_offset(group, tp, off)
+
+    def live_brokers(self) -> list[int]:
+        with self._lock:
+            return sorted(b.broker_id for b in self.brokers.values() if b.up)
+
+    # ------------------------------------------- broker-level client protocol
+    def _check_leader(self, broker_id: int, ctl: _PartitionCtl) -> Broker:
+        br = self.brokers.get(broker_id)
+        if br is None or not br.up:
+            raise BrokerUnavailable(f"broker {broker_id} is down")
+        if ctl.leader != broker_id:
+            raise NotLeaderError(ctl.topic, ctl.partition, ctl.leader)
+        return br
+
+    def broker_append(
+        self,
+        broker_id: int,
+        topic: str,
+        partition: int,
+        values: Sequence[bytes],
+        *,
+        keys: Sequence[bytes | None] | None = None,
+        acks: int | str | None = None,
+        epoch: int | None = None,
+    ) -> tuple[int, int]:
+        """Leader-side ProduceRequest. Returns ``(first, last)`` offsets.
+
+        ``acks='all'`` replicates to every live ISR follower and advances
+        the high watermark before returning — the acknowledged records are
+        then on every ISR member, so they survive any single broker loss
+        whenever the ISR held >= 2 members at ack time
+        (``min_insync_replicas=2`` makes that a hard precondition).
+        """
+        acks = self.default_acks if acks is None else acks
+        if acks not in (0, 1, "all", -1):
+            raise ValueError(f"bad acks {acks!r}; want 0, 1, or 'all'")
+        with self._lock:
+            ctl = self._ctl(topic, partition)
+            br = self._check_leader(broker_id, ctl)
+            if epoch is not None and epoch != ctl.epoch:
+                raise NotLeaderError(topic, partition, ctl.leader)
+            if acks in ("all", -1):
+                cfg = self._configs[topic]
+                live_isr = [b for b in ctl.isr if self.brokers[b].up]
+                if len(live_isr) < cfg.min_insync_replicas:
+                    raise NotEnoughReplicasError(
+                        f"{topic}:{partition} ISR {sorted(live_isr)} below "
+                        f"min.insync.replicas={cfg.min_insync_replicas}"
+                    )
+            _, first, last = br.log.produce_batch(
+                topic, values, keys=keys, partition=partition
+            )
+            if acks in ("all", -1):
+                self._replicate_partition(ctl)
+            return first, last
+
+    def broker_fetch(
+        self,
+        broker_id: int,
+        topic: str,
+        partition: int,
+        offset: int,
+        max_records: int = 1024,
+    ) -> RecordBatch:
+        """Leader-side FetchRequest, capped at the high watermark."""
+        with self._lock:
+            ctl = self._ctl(topic, partition)
+            br = self._check_leader(broker_id, ctl)
+            self._replicate_partition(ctl)  # opportunistic HW advance
+            return self._read_visible(br, ctl, offset, max_records)
+
+    def _read_visible(
+        self, leader: Broker, ctl: _PartitionCtl, offset: int, max_records: int
+    ) -> RecordBatch:
+        leo = leader.log.end_offset(ctl.topic, ctl.partition)
+        if offset > leo:
+            raise OffsetOutOfRange(
+                f"{ctl.topic}:{ctl.partition} offset {offset} > end {leo}"
+            )
+        visible = max(ctl.hw - offset, 0)
+        n = min(max_records, visible)
+        if n <= 0:
+            return RecordBatch(
+                topic=ctl.topic,
+                partition=ctl.partition,
+                first_offset=offset,
+                values=[],
+                timestamps=[],
+            )
+        return leader.log.read(ctl.topic, ctl.partition, offset, n)
+
+    # ------------------------------------- StreamBackend facade (StreamLog)
+    # Everything below makes the cluster a drop-in for StreamLog: internal
+    # routing retries through leader changes, so the pipeline/trainer/server
+    # survive a broker loss mid-call without knowing about brokers at all.
+    def _routed_append(
+        self,
+        topic: str,
+        values: Sequence[bytes],
+        keys: Sequence[bytes | None] | None,
+        partition: int | None,
+        acks: int | str | None = None,
+    ) -> tuple[int, int, int]:
+        # No retry loop needed here: everything runs under the controller
+        # lock, and _leader_broker elects through a dead leader before the
+        # append — that lazy election is what makes the facade failover-safe.
+        # (ClusterProducer retries because its *cached* metadata can go
+        # stale; the facade reads live state.)
+        with self._lock:
+            nparts = self.num_partitions(topic)
+            if partition is None:
+                partition = default_partition(
+                    keys, nparts, int(self._clock() * 1000)
+                )
+            ctl = self._ctl(topic, partition)
+            leader = self._leader_broker(ctl)
+            first, last = self.broker_append(
+                leader.broker_id, topic, partition, values, keys=keys, acks=acks
+            )
+            return partition, first, last
+
+    def produce(
+        self,
+        topic: str,
+        value: bytes,
+        *,
+        key: bytes | None = None,
+        partition: int | None = None,
+        acks: int | str | None = None,
+    ) -> tuple[int, int]:
+        p, first, _ = self._routed_append(topic, [value], [key], partition, acks)
+        return p, first
+
+    def produce_batch(
+        self,
+        topic: str,
+        values: Sequence[bytes],
+        *,
+        keys: Sequence[bytes | None] | None = None,
+        partition: int | None = None,
+        acks: int | str | None = None,
+    ) -> tuple[int, int, int]:
+        return self._routed_append(topic, values, keys, partition, acks)
+
+    def read(
+        self, topic: str, partition: int, offset: int, max_records: int = 1024
+    ) -> RecordBatch:
+        with self._lock:
+            ctl = self._ctl(topic, partition)
+            leader = self._leader_broker(ctl)
+            self._replicate_partition(ctl)
+            return self._read_visible(leader, ctl, offset, max_records)
+
+    def read_range(
+        self, topic: str, partition: int, offset: int, length: int
+    ) -> RecordBatch:
+        batch = self.read(topic, partition, offset, length)
+        if len(batch) < length:
+            # read() just ran a replication pass; the ctl HW is current
+            with self._lock:
+                hw = self._ctl(topic, partition).hw
+            raise OffsetOutOfRange(
+                f"{topic}:{partition} range [{offset}, {offset + length}) extends "
+                f"past high watermark {hw}"
+            )
+        return batch
+
+    def iter_range(
+        self,
+        topic: str,
+        partition: int,
+        offset: int,
+        length: int,
+        chunk: int = 4096,
+    ) -> Iterator[RecordBatch]:
+        done = 0
+        while done < length:
+            take = min(chunk, length - done)
+            yield self.read_range(topic, partition, offset + done, take)
+            done += take
+
+    def start_offset(self, topic: str, partition: int) -> int:
+        with self._lock:
+            ctl = self._ctl(topic, partition)
+            leader = self._leader_broker(ctl)
+            return leader.log.start_offset(topic, partition)
+
+    def end_offset(self, topic: str, partition: int) -> int:
+        """Consumer-visible end: the high watermark (not the leader LEO)."""
+        with self._lock:
+            ctl = self._ctl(topic, partition)
+            self._leader_broker(ctl)  # refresh leadership if stale
+            self._replicate_partition(ctl)
+            return ctl.hw
+
+    def log_end_offset(self, topic: str, partition: int) -> int:
+        """Leader log end offset (includes not-yet-replicated records)."""
+        with self._lock:
+            ctl = self._ctl(topic, partition)
+            leader = self._leader_broker(ctl)
+            return leader.log.end_offset(topic, partition)
+
+    def size_bytes(self, topic: str, partition: int | None = None) -> int:
+        with self._lock:
+            if partition is not None:
+                ctl = self._ctl(topic, partition)
+                return self._leader_broker(ctl).log.size_bytes(topic, partition)
+            return sum(
+                self.size_bytes(topic, p)
+                for p in range(self.num_partitions(topic))
+            )
+
+    # -------------------------------------------------- consumer offset store
+    # Kafka's `__consumer_offsets`, replicated at cluster width: commits
+    # fan out to every live broker (and are re-mirrored on rejoin), and
+    # reads are served from a live broker's replica — so committed offsets
+    # survive any broker loss. The controller dict is the recovery fallback
+    # for the no-live-broker window.
+    def commit_offset(self, group: str, tp: TopicPartition, offset: int) -> None:
+        with self._lock:
+            self._committed.setdefault(group, {})[tp] = offset
+            for br in self.brokers.values():
+                if br.up:
+                    br.log.commit_offset(group, tp, offset)
+
+    def committed_offset(self, group: str, tp: TopicPartition) -> int | None:
+        with self._lock:
+            for bid in sorted(self.brokers):
+                if self.brokers[bid].up:
+                    return self.brokers[bid].log.committed_offset(group, tp)
+            return self._committed.get(group, {}).get(tp)
+
+
+# ------------------------------------------------------------------ clients
+class _MetadataCache:
+    """Client-side partition→leader cache shared by producer and consumer.
+
+    ``leader`` serves from cache (refreshing a whole topic on miss);
+    ``note_leader_hint`` applies a NotLeaderError's hint; ``invalidate``
+    drops an entry so the next lookup refreshes. ``metadata_refreshes``
+    counts round-trips, the client-observable cost of failover.
+    """
+
+    def __init__(self, cluster: BrokerCluster):
+        self.cluster = cluster
+        self._leaders: dict[tuple[str, int], int | None] = {}
+        self.metadata_refreshes = 0
+
+    def leader(self, topic: str, partition: int) -> int:
+        key = (topic, partition)
+        if key not in self._leaders:
+            self.metadata_refreshes += 1
+            for p, meta in self.cluster.metadata(topic).items():
+                self._leaders[(topic, p)] = meta.leader
+        leader = self._leaders.get(key)
+        if leader is None:
+            raise PartitionOffline(f"{topic}:{partition} has no leader")
+        return leader
+
+    def note_leader_hint(self, topic: str, partition: int, hint: int | None) -> None:
+        self._leaders[(topic, partition)] = hint
+
+    def invalidate(self, topic: str, partition: int) -> None:
+        self._leaders.pop((topic, partition), None)
+
+
+class ClusterProducer:
+    """Failover-aware producer: metadata cache + leader routing + retry.
+
+    The client-side half of the Kafka produce protocol: it routes every
+    batch to the cached leader broker, and when the cluster answers
+    :class:`NotLeaderError` (stale cache after an election) or
+    :class:`BrokerUnavailable` (cached leader died), it refreshes metadata
+    and retries — so a broker loss mid-stream costs one round-trip, not the
+    stream.
+    """
+
+    def __init__(
+        self,
+        cluster: BrokerCluster,
+        *,
+        acks: int | str = "all",
+        retries: int = 5,
+    ):
+        self.cluster = cluster
+        self.acks = acks
+        self.retries = retries
+        self._meta = _MetadataCache(cluster)
+        self._sticky: dict[str, int] = {}
+
+    @property
+    def metadata_refreshes(self) -> int:
+        return self._meta.metadata_refreshes
+
+    def _pick_partition(self, topic: str, key: bytes | None) -> int:
+        n = self.cluster.num_partitions(topic)
+        if key is not None:
+            return default_partition([key], n, 0)  # same key→partition map
+        # sticky partitioner: stay on one partition per topic per producer
+        return self._sticky.setdefault(topic, hash(id(self)) % n)
+
+    def send(
+        self,
+        topic: str,
+        value: bytes,
+        *,
+        key: bytes | None = None,
+        partition: int | None = None,
+    ) -> tuple[int, int]:
+        p, first, _ = self.send_batch(topic, [value], keys=[key], partition=partition)
+        return p, first
+
+    def send_batch(
+        self,
+        topic: str,
+        values: Sequence[bytes],
+        *,
+        keys: Sequence[bytes | None] | None = None,
+        partition: int | None = None,
+    ) -> tuple[int, int, int]:
+        if partition is None:
+            k = keys[0] if keys else None
+            partition = self._pick_partition(topic, k)
+        last_err: ClusterError | None = None
+        for _ in range(self.retries + 1):
+            try:
+                leader = self._meta.leader(topic, partition)
+                first, last = self.cluster.broker_append(
+                    leader, topic, partition, values, keys=keys, acks=self.acks
+                )
+                return partition, first, last
+            except NotLeaderError as e:
+                self._meta.note_leader_hint(topic, partition, e.leader_hint)
+                last_err = e
+            except (BrokerUnavailable, PartitionOffline) as e:
+                self._meta.invalidate(topic, partition)
+                last_err = e
+        raise last_err  # exhausted retries
+
+
+class ClusterConsumer:
+    """Failover-aware fetcher: routes reads to the partition leader and
+    retries through elections; offsets commit to the replicated store."""
+
+    def __init__(self, cluster: BrokerCluster, *, group_id: str | None = None,
+                 retries: int = 5):
+        self.cluster = cluster
+        self.group_id = group_id
+        self.retries = retries
+        self._meta = _MetadataCache(cluster)
+
+    @property
+    def metadata_refreshes(self) -> int:
+        return self._meta.metadata_refreshes
+
+    def fetch(
+        self, topic: str, partition: int, offset: int, max_records: int = 1024
+    ) -> RecordBatch:
+        last_err: ClusterError | None = None
+        for _ in range(self.retries + 1):
+            try:
+                leader = self._meta.leader(topic, partition)
+                return self.cluster.broker_fetch(
+                    leader, topic, partition, offset, max_records
+                )
+            except NotLeaderError as e:
+                self._meta.note_leader_hint(topic, partition, e.leader_hint)
+                last_err = e
+            except (BrokerUnavailable, PartitionOffline) as e:
+                self._meta.invalidate(topic, partition)
+                last_err = e
+        raise last_err
+
+    def position_bounds(self, topic: str, partition: int) -> tuple[int, int]:
+        """(log start, high watermark) for the partition."""
+        return (
+            self.cluster.start_offset(topic, partition),
+            self.cluster.end_offset(topic, partition),
+        )
+
+    def commit(self, tp: TopicPartition, offset: int) -> None:
+        if self.group_id is None:
+            raise ValueError("consumer has no group_id")
+        self.cluster.commit_offset(self.group_id, tp, offset)
+
+    def committed(self, tp: TopicPartition) -> int | None:
+        if self.group_id is None:
+            raise ValueError("consumer has no group_id")
+        return self.cluster.committed_offset(self.group_id, tp)

@@ -12,6 +12,12 @@ This module implements the group coordinator: deterministic *range*
 assignment (Kafka's default), generation-numbered rebalances on
 join/leave/failure, heartbeat-based failure detection, and offset commit
 backed by the log's offset store.
+
+Groups run against any :class:`~repro.core.log.StreamBackend` — a bare
+:class:`StreamLog` or a replicated :class:`~repro.core.cluster.BrokerCluster`.
+On a cluster, reads route to partition leaders through elections and
+committed offsets live in the cluster-replicated offset store, so a group
+resumes from its committed offsets on the new leader after a broker loss.
 """
 
 from __future__ import annotations
@@ -21,7 +27,12 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
-from repro.core.log import OffsetOutOfRange, RecordBatch, StreamLog, TopicPartition
+from repro.core.log import (
+    OffsetOutOfRange,
+    RecordBatch,
+    StreamBackend,
+    TopicPartition,
+)
 
 __all__ = ["ConsumerGroup", "GroupConsumer", "range_assign"]
 
@@ -57,11 +68,11 @@ class _Member:
 
 
 class ConsumerGroup:
-    """Group coordinator for one consumer group over a :class:`StreamLog`."""
+    """Group coordinator for one consumer group over a :class:`StreamBackend`."""
 
     def __init__(
         self,
-        log: StreamLog,
+        log: StreamBackend,
         group_id: str,
         topics: Sequence[str],
         *,

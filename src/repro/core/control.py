@@ -21,6 +21,12 @@ consumes every control message and records it in the registry so that
 (1) streams can be replayed to new deployments, and (2) inference
 deployments auto-configure their input format from the training stream's
 metadata (paper §IV-E).
+
+The control plane accepts any :class:`~repro.core.log.StreamBackend`. On a
+:class:`~repro.core.cluster.BrokerCluster` the control topic is created at
+the cluster's default replication factor, so control messages — and with
+them the §V stream-replay capability — survive broker loss alongside the
+data they describe.
 """
 
 from __future__ import annotations
@@ -30,7 +36,7 @@ import re
 from dataclasses import dataclass, field
 from typing import Any
 
-from repro.core.log import StreamLog, TopicPartition
+from repro.core.log import StreamBackend, TopicPartition
 
 __all__ = [
     "CONTROL_TOPIC",
@@ -139,13 +145,13 @@ class ControlMessage:
         )
 
 
-def send_control(log: StreamLog, msg: ControlMessage) -> None:
+def send_control(log: StreamBackend, msg: ControlMessage) -> None:
     log.ensure_topic(CONTROL_TOPIC)
     log.produce(CONTROL_TOPIC, msg.to_bytes(), key=msg.deployment_id.encode())
 
 
 def poll_control(
-    log: StreamLog, deployment_id: str, from_offset: int = 0
+    log: StreamBackend, deployment_id: str, from_offset: int = 0
 ) -> tuple[ControlMessage | None, int]:
     """Scan the control topic for the first message targeting ``deployment_id``.
 
@@ -157,12 +163,14 @@ def poll_control(
     off = from_offset
     while off < end:
         batch = log.read(CONTROL_TOPIC, 0, off, 256)
+        if not len(batch):
+            break  # visible end moved below `end` (cluster HW regression)
         for i, v in enumerate(batch.values):
             msg = ControlMessage.from_bytes(v)
             if msg.deployment_id == deployment_id:
                 return msg, batch.first_offset + i + 1
         off = batch.next_offset
-    return None, end
+    return None, off
 
 
 class ControlLogger:
@@ -174,7 +182,7 @@ class ControlLogger:
     stream their model was trained on.
     """
 
-    def __init__(self, log: StreamLog):
+    def __init__(self, log: StreamBackend):
         self._log = log
         self._next_offset = 0
         self._history: list[ControlMessage] = []
@@ -185,6 +193,8 @@ class ControlLogger:
         fresh: list[ControlMessage] = []
         while self._next_offset < end:
             batch = self._log.read(CONTROL_TOPIC, 0, self._next_offset, 256)
+            if not len(batch):
+                break  # visible end moved below `end` (cluster HW regression)
             fresh.extend(ControlMessage.from_bytes(v) for v in batch.values)
             self._next_offset = batch.next_offset
         self._history.extend(fresh)

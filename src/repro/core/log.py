@@ -30,7 +30,7 @@ import os
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Iterator, Sequence
+from typing import Callable, Iterator, Protocol, Sequence
 
 import numpy as np
 
@@ -39,6 +39,7 @@ __all__ = [
     "OffsetOutOfRange",
     "Record",
     "RecordBatch",
+    "StreamBackend",
     "StreamLog",
     "TopicPartition",
 ]
@@ -46,6 +47,18 @@ __all__ = [
 
 class OffsetOutOfRange(LookupError):
     """Requested offset is below the log start (evicted) or past the end."""
+
+
+def default_partition(
+    keys: Sequence[bytes | None] | None, nparts: int, now_ms: int
+) -> int:
+    """Default partitioner shared by every backend: key-hash when the batch
+    is keyed, else a time-slot (sticky round-robin-ish). Keeping one
+    implementation means a key maps to the same partition on a bare
+    StreamLog and on a BrokerCluster."""
+    if keys is not None and keys and keys[0] is not None:
+        return hash(bytes(keys[0])) % nparts
+    return now_ms % nparts
 
 
 @dataclass(frozen=True)
@@ -83,7 +96,13 @@ class LogConfig:
     retention_bytes: int | None = None
     retention_ms: int | None = None
     segment_bytes: int = 8 * 1024 * 1024  # roll segments at this size
-    replication_factor: int = 1  # bookkeeping only (single-host broker)
+    # replication: honored by repro.core.cluster.BrokerCluster; a bare
+    # single-host StreamLog keeps these as bookkeeping only. None means
+    # "backend default" (1 on a bare log; the cluster's configured defaults
+    # on a BrokerCluster) — so a config written for partitioning/retention
+    # never silently opts a cluster topic out of replication.
+    replication_factor: int | None = None
+    min_insync_replicas: int | None = None  # acks=all needs this many in ISR
     # disk spill: sealed (rolled) segments move their payload to an
     # mmap-backed file under spill_dir; reads stay zero-copy (memoryview
     # over the map). Host RAM then holds only the active segment + indexes.
@@ -110,6 +129,7 @@ class _Segment:
         "count",
         "created_ms",
         "_spill_file",
+        "logical_bytes",
     )
 
     def __init__(self, base_offset: int, created_ms: int):
@@ -125,9 +145,14 @@ class _Segment:
         self.count = 0
         self.created_ms = created_ms
         self._spill_file = None
+        # retained payload bytes when the physical buffers can't shrink
+        # (truncation inside a sealed mmap-backed segment); None = physical
+        self.logical_bytes: int | None = None
 
     @property
     def size_bytes(self) -> int:
+        if self.logical_bytes is not None:
+            return self.logical_bytes
         return len(self.buf) + len(self.key_buf)
 
     @property
@@ -138,10 +163,11 @@ class _Segment:
         self,
         values: Sequence[bytes | bytearray | memoryview],
         keys: Sequence[bytes | None] | None,
-        timestamp_ms: int,
+        timestamp_ms: int | Sequence[int],
     ) -> None:
         pos = len(self.buf)
         kpos = len(self.key_buf)
+        scalar_ts = isinstance(timestamp_ms, int)
         for i, v in enumerate(values):
             self.starts.append(pos)
             n = len(v)
@@ -157,7 +183,7 @@ class _Segment:
                 self.key_lengths.append(len(k))
                 self.key_buf += k
                 kpos += len(k)
-            self.timestamps.append(timestamp_ms)
+            self.timestamps.append(timestamp_ms if scalar_ts else timestamp_ms[i])
         self.count += len(values)
 
     def record(self, topic: str, partition: int, rel: int) -> Record:
@@ -199,6 +225,9 @@ class _Segment:
             fh, path = sp
             try:
                 self.buf.close() if hasattr(self.buf, "close") else None
+            except BufferError:
+                pass  # outstanding zero-copy views keep the map alive
+            try:
                 fh.close()
                 os.unlink(path)
             except OSError:
@@ -251,9 +280,17 @@ class _Partition:
 
     # ------------------------------------------------------------------ write
     def append_batch(
-        self, values: Sequence[bytes], keys: Sequence[bytes | None] | None
+        self,
+        values: Sequence[bytes],
+        keys: Sequence[bytes | None] | None,
+        timestamps: Sequence[int] | None = None,
     ) -> tuple[int, int]:
-        """Append a message set; returns (first_offset, last_offset)."""
+        """Append a message set; returns (first_offset, last_offset).
+
+        ``timestamps`` is passed by replication only: a follower re-appends
+        leader records with their original timestamps so replicas agree on
+        time-based retention and on what consumers observe after failover.
+        """
         with self.lock:
             now = self.clock()
             seg = self.segments[-1]
@@ -267,7 +304,7 @@ class _Partition:
                 seg = _Segment(seg.base_offset + seg.count, now)
                 self.segments.append(seg)
             first = seg.base_offset + seg.count
-            seg.append_batch(values, keys, now)
+            seg.append_batch(values, keys, now if timestamps is None else timestamps)
             self._enforce_retention(now)
             return first, seg.last_offset
 
@@ -277,37 +314,49 @@ class _Partition:
         seg = self.segments[-1]
         return seg.base_offset + seg.count
 
+    def _bounded_count(self, offset: int, max_records: int) -> int:
+        """Validate ``offset`` against [log start, end]; return how many
+        records a read starting there may return."""
+        if offset < self.log_start_offset:
+            raise OffsetOutOfRange(
+                f"{self.topic}:{self.index} offset {offset} < log start "
+                f"{self.log_start_offset} (evicted by retention)"
+            )
+        end = self.end_offset
+        if offset > end:
+            raise OffsetOutOfRange(
+                f"{self.topic}:{self.index} offset {offset} > end {end}"
+            )
+        return min(max_records, end - offset)
+
+    def _iter_spans(self, offset: int, n: int):
+        """Yield ``(segment, rel_start, rel_stop)`` spans covering records
+        ``[offset, offset + n)`` — the one segment walk shared by consumer
+        reads and replication fetches."""
+        si = self._segment_for(offset)
+        off = offset
+        remaining = n
+        while remaining > 0:
+            seg = self.segments[si]
+            rel = off - seg.base_offset
+            take = min(remaining, seg.count - rel)
+            if take > 0:
+                yield seg, rel, rel + take
+            remaining -= take
+            off += take
+            si += 1
+
     def read(self, offset: int, max_records: int) -> RecordBatch:
         with self.lock:
-            if offset < self.log_start_offset:
-                raise OffsetOutOfRange(
-                    f"{self.topic}:{self.index} offset {offset} < log start "
-                    f"{self.log_start_offset} (evicted by retention)"
-                )
-            end = self.end_offset
-            if offset > end:
-                raise OffsetOutOfRange(
-                    f"{self.topic}:{self.index} offset {offset} > end {end}"
-                )
-            n = min(max_records, end - offset)
+            n = self._bounded_count(offset, max_records)
             values: list[memoryview] = []
             timestamps: list[int] = []
-            if n > 0:
-                si = self._segment_for(offset)
-                remaining = n
-                off = offset
-                while remaining > 0:
-                    seg = self.segments[si]
-                    rel = off - seg.base_offset
-                    take = min(remaining, seg.count - rel)
-                    mv = memoryview(seg.buf)
-                    for r in range(rel, rel + take):
-                        start = seg.starts[r]
-                        values.append(mv[start : start + seg.lengths[r]])
-                        timestamps.append(seg.timestamps[r])
-                    remaining -= take
-                    off += take
-                    si += 1
+            for seg, lo, hi in self._iter_spans(offset, n):
+                mv = memoryview(seg.buf)
+                for r in range(lo, hi):
+                    start = seg.starts[r]
+                    values.append(mv[start : start + seg.lengths[r]])
+                    timestamps.append(seg.timestamps[r])
             return RecordBatch(
                 topic=self.topic,
                 partition=self.index,
@@ -321,6 +370,84 @@ class _Partition:
         i = bisect.bisect_right(bases, offset) - 1
         return max(i, 0)
 
+    def fetch_raw(
+        self, offset: int, max_records: int
+    ) -> tuple[list[bytes], list[bytes | None], list[int]]:
+        """Replication fetch: materialized (values, keys, timestamps) so a
+        follower can re-append them verbatim to its copy of the partition."""
+        with self.lock:
+            n = self._bounded_count(offset, max_records)
+            values: list[bytes] = []
+            keys: list[bytes | None] = []
+            timestamps: list[int] = []
+            for seg, lo, hi in self._iter_spans(offset, n):
+                for r in range(lo, hi):
+                    start = seg.starts[r]
+                    values.append(bytes(seg.buf[start : start + seg.lengths[r]]))
+                    klen = seg.key_lengths[r]
+                    ks = seg.key_starts[r]
+                    keys.append(
+                        None if klen < 0 else bytes(seg.key_buf[ks : ks + klen])
+                    )
+                    timestamps.append(seg.timestamps[r])
+            return values, keys, timestamps
+
+    def reset_to(self, offset: int) -> int:
+        """Discard the entire partition contents and restart the log at
+        ``offset`` (a follower that fell behind the leader's retention point
+        re-fetches from the leader's log start)."""
+        with self.lock:
+            for s in self.segments:
+                s.drop_spill()
+            self.segments = [_Segment(offset, self.clock())]
+            self.log_start_offset = offset
+            return offset
+
+    def truncate_to(self, offset: int) -> int:
+        """Discard every record at ``offset`` and beyond (post-failover log
+        reconciliation: a deposed leader truncates to the new leader's end
+        before re-fetching). Returns the new end offset."""
+        with self.lock:
+            if offset >= self.end_offset:
+                return self.end_offset
+            if offset < self.log_start_offset:
+                # nothing retained below the truncation point — reset the
+                # partition; the follower re-fetches from `offset` upward
+                return self.reset_to(offset)
+            while self.segments and self.segments[-1].base_offset >= offset:
+                self.segments.pop().drop_spill()
+            if not self.segments:
+                self.segments = [_Segment(offset, self.clock())]
+                return offset
+            seg = self.segments[-1]
+            rel = offset - seg.base_offset
+            if rel < seg.count:
+                if isinstance(seg.buf, bytearray):
+                    # drop the truncated records' payload too, or it stays
+                    # resident and skews size_bytes/retention accounting.
+                    # Rebuild rather than resize in place: outstanding
+                    # zero-copy reads may hold memoryview exports of the
+                    # old buffer, and resizing an exported bytearray raises
+                    # BufferError. The old buffer lives until those views
+                    # are dropped; new appends go to the rebuilt one.
+                    seg.buf = seg.buf[: seg.starts[rel]]
+                    seg.key_buf = seg.key_buf[: seg.key_starts[rel]]
+                else:
+                    # sealed mmap segment: can't shrink the map — record the
+                    # retained payload so size_bytes/retention stay honest
+                    seg.logical_bytes = seg.starts[rel] + seg.key_starts[rel]
+                del seg.starts[rel:]
+                del seg.lengths[rel:]
+                del seg.key_starts[rel:]
+                del seg.key_lengths[rel:]
+                del seg.timestamps[rel:]
+                seg.count = rel
+            if seg._spill_file is not None:
+                # sealed/spilled segments are read-only maps — appendable
+                # writes need a fresh heap-backed active segment
+                self.segments.append(_Segment(offset, self.clock()))
+            return offset
+
     # -------------------------------------------------------------- retention
     def _enforce_retention(self, now_ms: int) -> None:
         cfg = self.cfg
@@ -333,7 +460,14 @@ class _Partition:
                 if total > cfg.retention_bytes:
                     evict = True
             if not evict and cfg.retention_ms is not None:
-                if now_ms - head.created_ms > cfg.retention_ms:
+                # age by the segment's newest record timestamp (Kafka's
+                # retention.ms semantics). Record timestamps replicate
+                # verbatim, so leader and followers expire the same
+                # records at the same time regardless of when each broker
+                # physically fetched them; created_ms is only a fallback
+                # for empty segments.
+                age_ref = head.timestamps[-1] if head.timestamps else head.created_ms
+                if now_ms - age_ref > cfg.retention_ms:
                     evict = True
             if not evict:
                 break
@@ -441,10 +575,7 @@ class StreamLog:
     ) -> tuple[int, int, int]:
         parts = self._partitions(topic)
         if partition is None:
-            if keys is not None and keys and keys[0] is not None:
-                partition = hash(bytes(keys[0])) % len(parts)
-            else:
-                partition = self._now_ms() % len(parts)  # sticky round-robin-ish
+            partition = default_partition(keys, len(parts), self._now_ms())
         part = parts[partition]
         first, last = part.append_batch(values, keys)
         return partition, first, last
@@ -492,6 +623,38 @@ class StreamLog:
     def end_offset(self, topic: str, partition: int) -> int:
         return self._partition(topic, partition).end_offset
 
+    # ------------------------------------------------------------ replication
+    # Broker-to-broker primitives used by repro.core.cluster: a follower
+    # fetches raw (value, key) pairs from the leader's log and re-appends
+    # them locally; a deposed leader truncates to the new leader's end.
+    def replica_fetch(
+        self, topic: str, partition: int, offset: int, max_records: int = 4096
+    ) -> tuple[list[bytes], list[bytes | None], list[int]]:
+        return self._partition(topic, partition).fetch_raw(offset, max_records)
+
+    def replica_append(
+        self,
+        topic: str,
+        partition: int,
+        values: Sequence[bytes],
+        keys: Sequence[bytes | None],
+        timestamps: Sequence[int],
+    ) -> tuple[int, int]:
+        """Follower-side append of fetched leader records, preserving their
+        original timestamps — consumers see identical ``Record.timestamp_ms``
+        before and after failover, and ``retention_ms`` (keyed to record
+        timestamps in ``_enforce_retention``) expires the same records on
+        every replica."""
+        return self._partition(topic, partition).append_batch(
+            values, keys, timestamps
+        )
+
+    def truncate_to(self, topic: str, partition: int, offset: int) -> int:
+        return self._partition(topic, partition).truncate_to(offset)
+
+    def reset_to(self, topic: str, partition: int, offset: int) -> int:
+        return self._partition(topic, partition).reset_to(offset)
+
     def size_bytes(self, topic: str, partition: int | None = None) -> int:
         parts = self._partitions(topic)
         if partition is not None:
@@ -506,3 +669,60 @@ class StreamLog:
     def committed_offset(self, group: str, tp: TopicPartition) -> int | None:
         with self._lock:
             return self._committed.get(group, {}).get(tp)
+
+
+class StreamBackend(Protocol):
+    """Structural type of a data substrate the upper layers accept.
+
+    Both the single-broker :class:`StreamLog` and the replicated
+    :class:`repro.core.cluster.BrokerCluster` satisfy it, so the pipeline
+    (:mod:`repro.data.pipeline`), consumer groups
+    (:mod:`repro.core.consumer`), control plane (:mod:`repro.core.control`),
+    trainer and serving engine all run unchanged against either.
+    """
+
+    def ensure_topic(self, name: str, cfg: LogConfig | None = None) -> None: ...
+
+    def create_topic(self, name: str, cfg: LogConfig | None = None) -> None: ...
+
+    def topics(self) -> list[str]: ...
+
+    def num_partitions(self, topic: str) -> int: ...
+
+    def produce(
+        self,
+        topic: str,
+        value: bytes,
+        *,
+        key: bytes | None = None,
+        partition: int | None = None,
+    ) -> tuple[int, int]: ...
+
+    def produce_batch(
+        self,
+        topic: str,
+        values: Sequence[bytes],
+        *,
+        keys: Sequence[bytes | None] | None = None,
+        partition: int | None = None,
+    ) -> tuple[int, int, int]: ...
+
+    def read(
+        self, topic: str, partition: int, offset: int, max_records: int = 1024
+    ) -> RecordBatch: ...
+
+    def read_range(
+        self, topic: str, partition: int, offset: int, length: int
+    ) -> RecordBatch: ...
+
+    def iter_range(
+        self, topic: str, partition: int, offset: int, length: int, chunk: int = 4096
+    ) -> Iterator[RecordBatch]: ...
+
+    def start_offset(self, topic: str, partition: int) -> int: ...
+
+    def end_offset(self, topic: str, partition: int) -> int: ...
+
+    def commit_offset(self, group: str, tp: TopicPartition, offset: int) -> None: ...
+
+    def committed_offset(self, group: str, tp: TopicPartition) -> int | None: ...

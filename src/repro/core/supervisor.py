@@ -20,7 +20,7 @@ import os
 import traceback
 from typing import Any, Callable
 
-from repro.core.log import StreamLog
+from repro.core.log import StreamBackend
 from repro.core.registry import Registry
 
 __all__ = ["JobOutcome", "Supervisor"]
@@ -45,7 +45,7 @@ class Supervisor:
 
     def __init__(
         self,
-        log: StreamLog,
+        log: StreamBackend,
         registry: Registry,
         job_factory: Callable[..., Any],
         *,

@@ -13,6 +13,14 @@ The glue between the distributed log and pjit'd compute:
 * :class:`ShardedFeeder` — places host batches on the mesh with a named
   sharding (batch axis over ``('pod','data')``) and prefetches one batch
   ahead on a background thread so host decode overlaps device compute.
+
+The pipeline is backend-agnostic: ``log`` may be a single-broker
+:class:`StreamLog` or a replicated
+:class:`~repro.core.cluster.BrokerCluster`. On a cluster, ``ingest``
+appends route to partition leaders (retrying transparently through leader
+elections), and at ``acks='all'`` every record named by the emitted control
+message is on the full ISR before the producer moves on — so the stream a
+control message announces survives the loss of any single broker.
 """
 
 from __future__ import annotations
@@ -27,7 +35,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.control import ControlMessage, StreamRange, send_control
-from repro.core.log import StreamLog
+from repro.core.log import StreamBackend
 from repro.data.formats import AvroCodec, RawCodec, codec_from_control
 
 __all__ = ["BatchIterator", "ShardedFeeder", "StreamDataset", "ingest"]
@@ -35,7 +43,7 @@ __all__ = ["BatchIterator", "ShardedFeeder", "StreamDataset", "ingest"]
 
 # --------------------------------------------------------------------- ingest
 def ingest(
-    log: StreamLog,
+    log: StreamBackend,
     topic: str,
     codec: RawCodec | AvroCodec,
     arrays: Mapping[str, np.ndarray],
@@ -97,7 +105,7 @@ class StreamDataset:
     the tail.
     """
 
-    def __init__(self, log: StreamLog, msg: ControlMessage):
+    def __init__(self, log: StreamBackend, msg: ControlMessage):
         self.log = log
         self.msg = msg
         self.codec = codec_from_control(msg.input_format, msg.input_config)

@@ -16,6 +16,13 @@ Each replica is Algorithm 2 verbatim:
 ``predict_fn`` is pluggable: the COPD MLP forward, or an LM decode loop
 built by :func:`build_serve_step` (the pjit'd single-token step used by
 the dry-run and the serving examples).
+
+Deployments run against any :class:`~repro.core.log.StreamBackend`: on a
+:class:`~repro.core.cluster.BrokerCluster` the request and prediction
+topics are replicated, replica reads follow partition leaders through
+elections, and committed group offsets survive broker loss — replica
+failover (consumer-group layer) composes with broker failover (cluster
+layer).
 """
 
 from __future__ import annotations
@@ -30,7 +37,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.consumer import ConsumerGroup
-from repro.core.log import StreamLog
+from repro.core.log import StreamBackend
 from repro.core.registry import Registry, TrainedResult
 from repro.data.formats import codec_from_control
 from repro.models.model import StreamModel
@@ -76,7 +83,7 @@ class InferenceReplica:
     def __init__(
         self,
         replica_id: str,
-        log: StreamLog,
+        log: StreamBackend,
         group: ConsumerGroup,
         result: TrainedResult,
         predict_fn: Callable[[Mapping[str, np.ndarray]], np.ndarray],
@@ -140,7 +147,7 @@ class InferenceDeployment:
 
     def __init__(
         self,
-        log: StreamLog,
+        log: StreamBackend,
         registry: Registry,
         result_id: str,
         predict_fn,

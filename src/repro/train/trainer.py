@@ -14,6 +14,12 @@ Two layers:
 
 Plus :func:`dp_train_step` — a manual-DP (shard_map) step with int8
 compressed gradient all-reduce for the pure data-parallel regime.
+
+Jobs accept any :class:`~repro.core.log.StreamBackend`: against a
+replicated :class:`~repro.core.cluster.BrokerCluster` the control topic and
+the stream ranges a job reads both survive broker loss, so a stream
+ingested at ``acks='all'`` remains trainable — and replayable to new
+deployments (§V) — after any single broker dies.
 """
 
 from __future__ import annotations
@@ -29,7 +35,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.control import ControlMessage, poll_control
-from repro.core.log import StreamLog
+from repro.core.log import StreamBackend
 from repro.core.registry import Registry
 from repro.data.pipeline import BatchIterator, ShardedFeeder, StreamDataset
 from repro.models.model import StreamModel
@@ -198,7 +204,7 @@ class TrainingJob:
 
     def __init__(
         self,
-        log: StreamLog,
+        log: StreamBackend,
         registry: Registry,
         deployment_id: str,
         model_id: str,

@@ -1,0 +1,70 @@
+"""Shared test fixtures + a `hypothesis` shim.
+
+Six test modules use hypothesis property tests as a *supplement* to their
+unit tests. When hypothesis is not installed we must not lose the unit
+tests to a collection error, so this conftest installs a stub module that
+makes ``@given(...)`` tests skip cleanly and leaves everything else alone.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+
+import pytest
+
+
+def _install_hypothesis_stub() -> None:
+    try:
+        import hypothesis  # noqa: F401
+
+        return
+    except ImportError:
+        pass
+
+    class _Anything:
+        """Stands in for any strategy object; supports chaining/calls."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+        def __or__(self, other):
+            return self
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_a, **_k):
+        # usable both as decorator factory and as a no-op context object
+        def deco(fn):
+            return fn
+
+        return deco
+
+    settings.register_profile = lambda *a, **k: None
+    settings.load_profile = lambda *a, **k: None
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.__getattr__ = lambda name: _Anything()  # PEP 562
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strategies
+    hyp.assume = lambda *a, **k: True
+    hyp.note = lambda *a, **k: None
+    hyp.example = lambda *a, **k: (lambda fn: fn)
+    hyp.HealthCheck = _Anything()
+    hyp.Phase = _Anything()
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+_install_hypothesis_stub()

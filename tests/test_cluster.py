@@ -1,0 +1,632 @@
+"""Replicated broker cluster: replication/election invariants + clients.
+
+Invariants under test (ISSUE satellite "replication invariants"):
+  * every partition has exactly one leader (or is offline with none);
+  * ISR ⊆ replica set, and every ISR member is a live broker;
+  * the high watermark never exceeds the leader's log end offset;
+  * every record acknowledged at ``acks='all'`` is present on every ISR
+    member and readable below the high watermark;
+  * ``range_assign`` still balances consumer groups over cluster-backed
+    partitions.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import (
+    BrokerCluster,
+    BrokerUnavailable,
+    ClusterConsumer,
+    ClusterProducer,
+    NotEnoughReplicasError,
+    NotLeaderError,
+    PartitionOffline,
+)
+from repro.core.consumer import ConsumerGroup, range_assign
+from repro.core.log import LogConfig, OffsetOutOfRange, StreamLog, TopicPartition
+
+
+def make_cluster(n=3, parts=2, rf=3, **kw):
+    c = BrokerCluster(n, **kw)
+    c.create_topic("t", LogConfig(num_partitions=parts, replication_factor=rf))
+    return c
+
+
+def check_invariants(c: BrokerCluster, topic="t"):
+    for p, meta in c.metadata(topic).items():
+        assert set(meta.isr) <= set(meta.replicas), (p, meta)
+        if meta.leader is not None:
+            assert meta.leader in meta.replicas
+            assert meta.leader in meta.isr
+            assert c.brokers[meta.leader].up
+            leo = c.brokers[meta.leader].log.end_offset(topic, p)
+            assert meta.high_watermark <= leo, (p, meta, leo)
+            for b in meta.isr:
+                assert c.brokers[b].up, f"dead broker {b} in ISR of {topic}:{p}"
+        # offline partitions retain their last-known ISR (possibly dead
+        # brokers) — that set is the eligibility list for a later clean
+        # election, mirroring Kafka's persisted ISR
+
+
+class TestAdmin:
+    def test_create_assigns_replicas_and_leader(self):
+        c = make_cluster(5, parts=4, rf=3)
+        metas = c.metadata("t")
+        assert len(metas) == 4
+        for p, m in metas.items():
+            assert len(m.replicas) == 3
+            assert len(set(m.replicas)) == 3
+            assert m.leader == m.replicas[0]
+            assert m.isr == frozenset(m.replicas)
+        # placement is staggered, not all piled on broker 0
+        leaders = {m.leader for m in metas.values()}
+        assert len(leaders) > 1
+
+    def test_rf_bounds_validated(self):
+        c = BrokerCluster(3)
+        with pytest.raises(ValueError):
+            c.create_topic("bad", LogConfig(replication_factor=4))
+        with pytest.raises(ValueError):
+            c.create_topic("bad", LogConfig(replication_factor=0))
+
+    def test_default_topic_uses_cluster_rf(self):
+        c = BrokerCluster(3)
+        c.ensure_topic("auto")
+        assert len(c.metadata("auto")[0].replicas) == 3
+
+    def test_explicit_cfg_without_rf_still_gets_cluster_replication(self):
+        """A LogConfig written for partitioning/retention must not silently
+        opt a cluster topic out of replication: unset rf/min_insync resolve
+        to the cluster defaults (Kafka's broker-side defaults)."""
+        c = BrokerCluster(3)
+        c.create_topic("t2", LogConfig(num_partitions=4, retention_bytes=1 << 20))
+        m = c.metadata("t2")[0]
+        assert len(m.replicas) == 3
+        assert c._configs["t2"].min_insync_replicas == 2
+        # an explicit rf=1 is still honored (deliberate opt-out)
+        c.create_topic("t1", LogConfig(replication_factor=1))
+        assert len(c.metadata("t1")[0].replicas) == 1
+        assert c._configs["t1"].min_insync_replicas == 1
+
+    def test_delete_topic(self):
+        c = make_cluster()
+        c.delete_topic("t")
+        assert c.topics() == []
+        with pytest.raises(KeyError):
+            c.num_partitions("t")
+
+
+class TestProduceConsume:
+    def test_acks_all_roundtrip_all_replicas(self):
+        c = make_cluster()
+        msgs = [f"m{i}".encode() for i in range(50)]
+        p, first, last = c.produce_batch("t", msgs, partition=0, acks="all")
+        assert (first, last) == (0, 49)
+        assert c.end_offset("t", 0) == 50
+        # every replica holds every record
+        for b in c.metadata("t")[0].replicas:
+            assert c.brokers[b].log.end_offset("t", 0) == 50
+        got = c.read_range("t", 0, 0, 50)
+        assert [bytes(v) for v in got.values] == msgs
+        check_invariants(c)
+
+    def test_acks_one_hw_lags_until_replication(self):
+        c = make_cluster()
+        c.produce_batch("t", [b"a", b"b"], partition=0, acks=1)
+        ctl = c._meta[("t", 0)]
+        assert ctl.hw == 0  # leader-only append, nothing committed yet
+        assert c.log_end_offset("t", 0) == 2
+        # a read (or tick) drives follower fetch and advances the HW
+        assert c.end_offset("t", 0) == 2
+        assert ctl.hw == 2
+        check_invariants(c)
+
+    def test_reads_capped_at_high_watermark(self):
+        c = make_cluster()
+        leader = c.leader_for("t", 0)
+        # append leader-side without replicating (acks=1, no tick)
+        c.broker_append(leader, "t", 0, [b"x", b"y"], acks=1)
+        ctl = c._meta[("t", 0)]
+        batch = c._read_visible(c.brokers[leader], ctl, 0, 10)
+        assert len(batch) == 0  # nothing visible below HW yet
+
+    def test_read_past_leo_raises(self):
+        c = make_cluster()
+        c.produce_batch("t", [b"x"], partition=0)
+        with pytest.raises(OffsetOutOfRange):
+            c.read("t", 0, 5, 1)
+        with pytest.raises(OffsetOutOfRange):
+            c.read_range("t", 0, 0, 2)
+
+    def test_acks_validation(self):
+        c = make_cluster()
+        with pytest.raises(ValueError):
+            c.produce_batch("t", [b"x"], partition=0, acks="two")
+
+    def test_min_insync_replicas_enforced(self):
+        c = BrokerCluster(3)
+        c.create_topic(
+            "t",
+            LogConfig(num_partitions=1, replication_factor=3, min_insync_replicas=3),
+        )
+        c.produce_batch("t", [b"ok"], partition=0, acks="all")
+        victim = next(
+            b for b in c.metadata("t")[0].replicas if b != c.leader_for("t", 0)
+        )
+        c.kill_broker(victim)
+        with pytest.raises(NotEnoughReplicasError):
+            c.produce_batch("t", [b"rejected"], partition=0, acks="all")
+        # acks=1 still accepted (durability reduced, per Kafka semantics)
+        c.produce_batch("t", [b"accepted"], partition=0, acks=1)
+        check_invariants(c)
+
+    def test_default_topics_refuse_acks_all_after_majority_loss(self):
+        """Default-config topics (incl. the control topic) carry
+        min_insync_replicas=2: with only one broker left, acks=all is
+        refused rather than silently degraded to leader-only durability."""
+        c = BrokerCluster(3)
+        c.ensure_topic("auto")
+        c.produce_batch("auto", [b"durable"], partition=0, acks="all")
+        c.kill_broker(0)
+        c.kill_broker(1)
+        with pytest.raises(NotEnoughReplicasError):
+            c.produce_batch("auto", [b"refused"], partition=0, acks="all")
+        # still available at explicitly-reduced durability
+        c.produce_batch("auto", [b"accepted"], partition=0, acks=1)
+
+    def test_keyed_produce_is_sticky_per_key(self):
+        c = make_cluster(parts=4, rf=3)
+        p1, _ = c.produce("t", b"v1", key=b"k")
+        p2, _ = c.produce("t", b"v2", key=b"k")
+        assert p1 == p2
+
+
+class TestFailover:
+    def test_kill_leader_elects_deterministically(self):
+        c = make_cluster()
+        m0 = c.metadata("t")[0]
+        c.kill_broker(m0.leader)
+        m1 = c.metadata("t")[0]
+        survivors = sorted(set(m0.isr) - {m0.leader})
+        assert m1.leader == survivors[0]  # lowest-id in-sync survivor
+        assert m1.epoch == m0.epoch + 1
+        check_invariants(c)
+
+    def test_acked_records_survive_any_single_broker_loss(self):
+        for victim in range(3):
+            c = make_cluster()
+            msgs = [f"m{i}".encode() for i in range(200)]
+            c.produce_batch("t", msgs, partition=0, acks="all")
+            c.kill_broker(victim)
+            got = c.read_range("t", 0, 0, 200)
+            assert [bytes(v) for v in got.values] == msgs
+            check_invariants(c)
+
+    def test_rejoining_deposed_leader_discards_divergent_suffix_below_hw(self):
+        """Leader-epoch reconciliation: a deposed leader's unacked suffix
+        must be truncated even when the HW has since advanced past it —
+        truncating to the current HW would keep stale divergent records."""
+        c = make_cluster(parts=1)
+        good0 = [f"good{i}".encode() for i in range(10)]
+        c.produce_batch("t", good0, partition=0, acks="all")  # hw=10
+        old_leader = c.leader_for("t", 0)
+        # unacked suffix [10, 15) on the leader only
+        c.broker_append(old_leader, "t", 0,
+                        [f"stale{i}".encode() for i in range(5)], acks=1)
+        c.kill_broker(old_leader)
+        # new leader accepts [10, 20) at acks=all; hw advances to 20
+        good1 = [f"good{i}".encode() for i in range(10, 20)]
+        c.produce_batch("t", good1, partition=0, acks="all")
+        assert c.end_offset("t", 0) == 20
+        # deposed leader rejoins: its [10, 15) must be replaced, not kept
+        c.restart_broker(old_leader)
+        c.replicate_all()
+        m = c.metadata("t")[0]
+        assert old_leader in m.isr
+        local = c.brokers[old_leader].log.read("t", 0, 0, 30)
+        assert [bytes(v) for v in local.values] == good0 + good1
+        # even if every other broker now dies, no stale record surfaces
+        for b in c.live_brokers():
+            if b != old_leader:
+                c.kill_broker(b)
+        got = c.read_range("t", 0, 0, 20)
+        assert [bytes(v) for v in got.values] == good0 + good1
+        check_invariants(c)
+
+    def test_heal_during_offline_window_still_reconciles_divergence(self):
+        """A broker healed while its partition is offline must still get
+        leader-epoch truncation once a leader returns — the offline rejoin
+        path cannot be a reconciliation loophole."""
+        c = BrokerCluster(2)
+        c.create_topic(
+            "t", LogConfig(num_partitions=1, replication_factor=2)
+        )
+        a = c.leader_for("t", 0)
+        b = next(x for x in (0, 1) if x != a)
+        good0 = [f"good{i}".encode() for i in range(5)]
+        c.produce_batch("t", good0, partition=0, acks="all")  # hw=5
+        c.broker_append(a, "t", 0, [b"stale-5", b"stale-6"], acks=1)
+        c.partition_broker(a)  # b becomes leader at epoch start 5
+        good1 = [f"good{i}".encode() for i in range(5, 20)]
+        c.produce_batch(
+            "t", good1, partition=0, acks=1
+        )  # ISR={b}: acks=all would be refused at min_insync... use 1
+        assert c.end_offset("t", 0) == 20
+        c.kill_broker(b)  # partition offline
+        c.heal_broker(a)  # heals into the offline window — no truncation yet
+        c.restart_broker(b)  # b leads again
+        c.replicate_all()  # a must reconcile: truncate 5.. and refetch
+        local = c.brokers[a].log.read("t", 0, 0, 30)
+        assert [bytes(v) for v in local.values] == good0 + good1
+        m = c.metadata("t")[0]
+        assert a in m.isr
+        check_invariants(c)
+
+    def test_unacked_suffix_truncated_on_rejoin(self):
+        c = make_cluster()
+        c.produce_batch("t", [b"committed"], partition=0, acks="all")
+        leader = c.leader_for("t", 0)
+        # leader-only records (acks=1, not replicated): at-risk suffix
+        c.broker_append(leader, "t", 0, [b"at-risk-1", b"at-risk-2"], acks=1)
+        c.kill_broker(leader)
+        # new leader never saw the suffix; committed prefix intact
+        assert c.end_offset("t", 0) == 1
+        assert bytes(c.read("t", 0, 0, 10).values[0]) == b"committed"
+        # old leader rejoins: its divergent suffix is truncated away
+        c.restart_broker(leader)
+        c.replicate_all()
+        assert c.brokers[leader].log.end_offset("t", 0) == 1
+        m = c.metadata("t")[0]
+        assert leader in m.isr
+        check_invariants(c)
+
+    def test_network_partition_and_heal(self):
+        c = make_cluster()
+        m0 = c.metadata("t")[0]
+        c.produce_batch("t", [b"pre"], partition=0, acks="all")
+        c.partition_broker(m0.leader)
+        c.produce_batch("t", [b"post"], partition=0, acks="all")
+        assert c.leader_for("t", 0) != m0.leader
+        c.heal_broker(m0.leader)
+        c.replicate_all()
+        m2 = c.metadata("t")[0]
+        assert m0.leader in m2.isr  # rejoined as follower, caught up
+        assert c.brokers[m0.leader].log.end_offset("t", 0) == 2
+        check_invariants(c)
+
+    def test_offline_partition_without_unclean_election(self):
+        c = BrokerCluster(2, allow_unclean_election=False)
+        c.create_topic(
+            "t",
+            LogConfig(
+                num_partitions=1, replication_factor=2, min_insync_replicas=1
+            ),
+        )
+        c.partition_broker(1)  # follower drops out of ISR
+        c.produce_batch("t", [b"x"], partition=0, acks="all")
+        c.kill_broker(c.leader_for("t", 0))
+        c.heal_broker(1)  # live, but not in ISR -> not electable
+        with pytest.raises((PartitionOffline, BrokerUnavailable)):
+            c.produce_batch("t", [b"y"], partition=0)
+
+    def test_unclean_election_recovers_with_possible_loss(self):
+        c = BrokerCluster(2, allow_unclean_election=True)
+        c.create_topic("t", LogConfig(num_partitions=1, replication_factor=2))
+        c.produce_batch("t", [b"both"], partition=0, acks="all")
+        c.partition_broker(1)
+        c.produce_batch("t", [b"leader-only"], partition=0, acks=1)
+        c.kill_broker(c.leader_for("t", 0))
+        c.heal_broker(1)  # unclean: out-of-sync replica takes leadership
+        assert c.leader_for("t", 0) == 1
+        assert c.end_offset("t", 0) == 1  # acks=1 suffix lost, prefix kept
+        assert bytes(c.read("t", 0, 0, 10).values[0]) == b"both"
+
+    def test_epoch_fences_stale_producer(self):
+        c = make_cluster()
+        old = c.metadata("t")[0]
+        c.kill_broker(old.leader)
+        new_leader = c.leader_for("t", 0)
+        with pytest.raises(NotLeaderError):
+            c.broker_append(new_leader, "t", 0, [b"x"], epoch=old.epoch)
+
+    def test_truncation_with_outstanding_zero_copy_reads(self):
+        """Reconciliation must not crash when consumers still hold
+        zero-copy memoryviews into the truncated segment's buffer."""
+        c = make_cluster(parts=1)
+        c.produce_batch("t", [b"committed"], partition=0, acks="all")
+        leader = c.leader_for("t", 0)
+        c.broker_append(leader, "t", 0, [b"stale-a", b"stale-b"], acks=1)
+        # a consumer holds live views into the leader's segment buffer
+        held = c.brokers[leader].log.read("t", 0, 0, 10)
+        assert len(held) == 3
+        c.partition_broker(leader)
+        c.produce_batch("t", [b"replacement"], partition=0, acks="all")
+        c.heal_broker(leader)  # truncates the divergent suffix — no BufferError
+        c.replicate_all()
+        assert bytes(held.values[0]) == b"committed"  # old view still valid
+        local = c.brokers[leader].log.read("t", 0, 0, 10)
+        assert [bytes(v) for v in local.values] == [b"committed", b"replacement"]
+
+    def test_time_retention_agrees_across_replicas(self):
+        """retention_ms is keyed to record timestamps (replicated verbatim),
+        so a follower that fetched records late expires them at the same
+        moment the leader does."""
+        t = [1000.0]
+        c = BrokerCluster(3, clock=lambda: t[0])
+        c.create_topic(
+            "t",
+            LogConfig(
+                num_partitions=1,
+                replication_factor=3,
+                segment_bytes=64,
+                retention_ms=60_000,
+            ),
+        )
+        follower = next(
+            b for b in c.metadata("t")[0].replicas if b != c.leader_for("t", 0)
+        )
+        c.kill_broker(follower)
+        for i in range(4):  # several segments' worth, all stamped t=1000s
+            c.produce_batch("t", [bytes(48)], partition=0, acks=1)
+        t[0] = 1030.0  # follower fetches 30s later — same record timestamps
+        c.restart_broker(follower)
+        c.replicate_all()
+        t[0] = 1070.0  # 70s after append: past retention on EVERY replica
+        c.produce_batch("t", [bytes(48)], partition=0, acks="all")
+        leader = c.leader_for("t", 0)
+        assert (
+            c.brokers[follower].log.start_offset("t", 0)
+            == c.brokers[leader].log.start_offset("t", 0)
+            > 0
+        )
+
+    def test_replication_preserves_record_timestamps(self):
+        """Followers re-append leader records with their ORIGINAL
+        timestamps, so replicas agree on time-based retention and
+        consumers see the same timestamps before and after failover."""
+        t = [1000.0]
+        c = BrokerCluster(3, clock=lambda: t[0])
+        c.create_topic("t", LogConfig(num_partitions=1, replication_factor=3))
+        leader = c.leader_for("t", 0)
+        c.broker_append(leader, "t", 0, [b"x"], acks=1)  # leader-only so far
+        t[0] = 9999.0  # replication happens much later
+        c.end_offset("t", 0)  # drives the follower fetch
+        for b in c.metadata("t")[0].replicas:
+            batch = c.brokers[b].log.read("t", 0, 0, 10)
+            assert batch.timestamps == [1000 * 1000], f"broker {b}"
+
+    def test_replicate_all_skips_offline_partitions(self):
+        """One offline partition must not abort the cluster-wide replication
+        tick for the healthy partitions."""
+        c = BrokerCluster(3)
+        c.create_topic("solo", LogConfig(num_partitions=1, replication_factor=1))
+        c.create_topic("wide", LogConfig(num_partitions=1, replication_factor=3))
+        c.produce_batch("wide", [b"a", b"b"], partition=0, acks=1)  # HW lags
+        c.kill_broker(c.leader_for("solo", 0))  # rf=1 topic goes offline
+        c.replicate_all()  # must not raise, must still advance 'wide'
+        assert c.metadata("wide")[0].high_watermark == 2
+        with pytest.raises(PartitionOffline):
+            c.read("solo", 0, 0, 1)
+
+    def test_follower_behind_leader_retention_resets_and_catches_up(self):
+        """A follower down long enough that the leader's retention evicted
+        the records it is missing must reset to the leader's log start and
+        re-fetch, not crash replication with OffsetOutOfRange."""
+        c = BrokerCluster(3)
+        c.create_topic(
+            "t",
+            LogConfig(
+                num_partitions=1,
+                replication_factor=3,
+                segment_bytes=256,
+                retention_bytes=1024,
+            ),
+        )
+        follower = next(
+            b for b in c.metadata("t")[0].replicas if b != c.leader_for("t", 0)
+        )
+        c.kill_broker(follower)
+        # enough data that retention evicts the head while the follower is down
+        for i in range(40):
+            c.produce_batch("t", [bytes(100) for _ in range(4)], partition=0)
+        leader = c.leader_for("t", 0)
+        lstart = c.brokers[leader].log.start_offset("t", 0)
+        assert lstart > 0  # retention actually evicted something
+        c.restart_broker(follower)
+        c.replicate_all()
+        m = c.metadata("t")[0]
+        assert follower in m.isr
+        assert c.brokers[follower].log.start_offset("t", 0) == lstart
+        assert c.brokers[follower].log.end_offset("t", 0) == c.brokers[
+            leader
+        ].log.end_offset("t", 0)
+        check_invariants(c)
+
+    def test_spill_dirs_namespaced_per_broker(self, tmp_path):
+        """Replicas seal identically-named segment files; each broker must
+        spill into its own directory or they clobber each other."""
+        c = BrokerCluster(3)
+        c.create_topic(
+            "t",
+            LogConfig(
+                num_partitions=1,
+                replication_factor=3,
+                segment_bytes=128,
+                spill_dir=str(tmp_path),
+            ),
+        )
+        msgs = [bytes([i]) * 64 for i in range(32)]
+        for m in msgs:  # one record per batch so segments roll (and spill)
+            c.produce_batch("t", [m], partition=0, acks="all")
+        spilled = sorted(p.relative_to(tmp_path).parts[0] for p in tmp_path.rglob("*.seg"))
+        assert set(spilled) == {"broker-0", "broker-1", "broker-2"}
+        # reads stay intact from every replica's own spill files
+        got = c.read_range("t", 0, 0, 32)
+        assert [bytes(v) for v in got.values] == msgs
+        c.kill_broker(c.leader_for("t", 0))
+        got = c.read_range("t", 0, 0, 32)
+        assert [bytes(v) for v in got.values] == msgs
+
+    def test_committed_offsets_survive_every_single_loss(self):
+        for victim in range(3):
+            c = make_cluster()
+            tp = TopicPartition("t", 0)
+            c.commit_offset("grp", tp, 77)
+            c.kill_broker(victim)
+            assert c.committed_offset("grp", tp) == 77
+            # mirrored copies on the surviving brokers too
+            for b in c.live_brokers():
+                assert c.brokers[b].log.committed_offset("grp", tp) == 77
+
+
+class TestClients:
+    def test_producer_retries_through_election(self):
+        c = make_cluster()
+        prod = ClusterProducer(c, acks="all")
+        prod.send_batch("t", [b"a"], partition=0)
+        refreshes_before = prod.metadata_refreshes
+        c.kill_broker(c.leader_for("t", 0))
+        p, first, last = prod.send_batch("t", [b"b"], partition=0)
+        assert (first, last) == (1, 1)
+        assert prod.metadata_refreshes >= refreshes_before  # stale cache healed
+        got = c.read_range("t", 0, 0, 2)
+        assert [bytes(v) for v in got.values] == [b"a", b"b"]
+
+    def test_consumer_fetch_follows_leader(self):
+        c = make_cluster()
+        c.produce_batch("t", [b"a", b"b", b"c"], partition=0, acks="all")
+        cons = ClusterConsumer(c, group_id="g")
+        assert len(cons.fetch("t", 0, 0, 10)) == 3
+        c.kill_broker(c.leader_for("t", 0))
+        batch = cons.fetch("t", 0, 1, 10)  # routed to the new leader
+        assert [bytes(v) for v in batch.values] == [b"b", b"c"]
+        cons.commit(TopicPartition("t", 0), 3)
+        assert cons.committed(TopicPartition("t", 0)) == 3
+
+    def test_direct_append_to_non_leader_rejected(self):
+        c = make_cluster()
+        m = c.metadata("t")[0]
+        follower = next(b for b in m.replicas if b != m.leader)
+        with pytest.raises(NotLeaderError) as ei:
+            c.broker_append(follower, "t", 0, [b"x"])
+        assert ei.value.leader_hint == m.leader
+
+
+class TestGroupsOverCluster:
+    def test_range_assign_balances_cluster_partitions(self):
+        c = BrokerCluster(3)
+        c.create_topic("t", LogConfig(num_partitions=8, replication_factor=3))
+        group = ConsumerGroup(c, "g", ["t"])
+        members = [group.join(f"m{i}") for i in range(3)]
+        sizes = sorted(len(group.assignment(f"m{i}")) for i in range(3))
+        assert sizes == [2, 3, 3]  # loads differ by at most one
+        seen = [
+            tp for i in range(3) for tp in group.assignment(f"m{i}")
+        ]
+        assert sorted(seen, key=lambda tp: tp.partition) == [
+            TopicPartition("t", p) for p in range(8)
+        ]
+
+    def test_range_assign_pure_function_invariants(self):
+        tps = [TopicPartition("t", p) for p in range(7)]
+        out = range_assign(["a", "b", "c"], tps)
+        assert sorted(sum(out.values(), []), key=lambda t: t.partition) == tps
+        sizes = sorted(len(v) for v in out.values())
+        assert sizes[-1] - sizes[0] <= 1
+
+
+class TestRandomizedInvariants:
+    """Seeded randomized chaos: invariants hold after every cluster event."""
+
+    def test_random_ops_preserve_invariants(self):
+        rng = np.random.default_rng(7)
+        c = BrokerCluster(4)
+        c.create_topic("t", LogConfig(num_partitions=3, replication_factor=3))
+        acked: dict[int, list[bytes]] = {0: [], 1: [], 2: []}
+        seq = 0
+        for step in range(300):
+            op = rng.integers(0, 10)
+            if op <= 5:  # produce acks=all to a random partition
+                p = int(rng.integers(0, 3))
+                msgs = [f"r{seq + j}".encode() for j in range(int(rng.integers(1, 8)))]
+                seq += len(msgs)
+                try:
+                    c.produce_batch("t", msgs, partition=p, acks="all")
+                    acked[p].extend(msgs)
+                except (PartitionOffline, BrokerUnavailable, NotEnoughReplicasError):
+                    pass  # too many brokers down right now — fine
+            elif op <= 7:  # kill or partition a random live broker
+                live = c.live_brokers()
+                if len(live) > 1:  # keep one broker up
+                    b = int(rng.choice(live))
+                    (c.kill_broker if op == 6 else c.partition_broker)(b)
+            else:  # revive a random down broker
+                down = [b for b in c.brokers if b not in c.live_brokers()]
+                if down:
+                    b = int(rng.choice(down))
+                    if c.brokers[b].alive:
+                        c.heal_broker(b)
+                    else:
+                        c.restart_broker(b)
+            check_invariants(c)
+        # bring everyone back: every acked record must be fully readable
+        for b in list(c.brokers):
+            if not c.brokers[b].alive:
+                c.restart_broker(b)
+            if not c.brokers[b].reachable:
+                c.heal_broker(b)
+        c.replicate_all()
+        check_invariants(c)
+        for p, msgs in acked.items():
+            got = c.read_range("t", p, 0, len(msgs))
+            assert [bytes(v) for v in got.values] == msgs, f"partition {p} lost data"
+
+
+def test_poll_control_terminates_when_visible_end_regresses():
+    """A cluster HW regression (unclean election) between end_offset() and
+    read() must not spin poll_control/ControlLogger forever: an empty read
+    below the captured end breaks the scan."""
+    from repro.core.control import ControlLogger, poll_control
+    from repro.core.log import RecordBatch
+
+    class RegressedBackend:
+        def ensure_topic(self, *a, **k):
+            pass
+
+        def end_offset(self, topic, partition):
+            return 10  # captured before the regression
+
+        def read(self, topic, partition, offset, max_records=1024):
+            # everything below the captured end is now above the HW
+            return RecordBatch(
+                topic=topic, partition=partition, first_offset=offset,
+                values=[], timestamps=[],
+            )
+
+    msg, nxt = poll_control(RegressedBackend(), "dep", from_offset=3)
+    assert msg is None and nxt == 3  # resumes where data actually ended
+    assert ControlLogger(RegressedBackend()).poll() == []
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_brokers=st.integers(2, 5),
+    parts=st.integers(1, 4),
+    kills=st.lists(st.integers(0, 4), max_size=3),
+)
+def test_property_leader_uniqueness_and_isr(n_brokers, parts, kills):
+    c = BrokerCluster(n_brokers)
+    rf = min(3, n_brokers)
+    c.create_topic("t", LogConfig(num_partitions=parts, replication_factor=rf))
+    c.produce_batch("t", [b"x", b"y"], partition=0, acks="all")
+    for k in kills:
+        b = k % n_brokers
+        if len(c.live_brokers()) > 1 and b in c.live_brokers():
+            c.kill_broker(b)
+    check_invariants(c)
+    for p, m in c.metadata("t").items():
+        leaders = [
+            b for b in m.replicas if m.leader == b
+        ]
+        assert len(leaders) <= 1

@@ -1,0 +1,185 @@
+"""Chaos integration: broker loss under live ML traffic (acceptance test).
+
+The ISSUE acceptance criterion, end to end: with a 3-broker cluster at
+``replication_factor=3``, killing the leader of any partition mid-stream
+loses zero acknowledged records at ``acks='all'``; consumer groups resume
+from committed offsets on the new leader; and a control-message replay of a
+pre-failure stream trains successfully end-to-end.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core as core
+import repro.data as data
+from repro.configs import copd_mlp
+from repro.core.cluster import BrokerCluster, ClusterProducer
+from repro.core.consumer import ConsumerGroup
+from repro.core.control import ControlLogger
+from repro.core.log import LogConfig, TopicPartition
+from repro.data.formats import AvroCodec, FieldSpec
+from repro.train import TrainingJob, adamw
+
+
+def _codec():
+    return AvroCodec(
+        [FieldSpec("data", "float32", (copd_mlp.N_FEATURES,))],
+        [FieldSpec("label", "int32", ())],
+    )
+
+
+def make_cluster(parts=2):
+    c = BrokerCluster(3, default_acks="all")
+    c.create_topic(
+        "copd", LogConfig(num_partitions=parts, replication_factor=3)
+    )
+    return c
+
+
+def test_kill_leader_mid_ingest_loses_nothing(monkeypatch):
+    """The producer keeps streaming through a leader crash; every record the
+    control message names is on the survivors."""
+    c = make_cluster()
+    arrays = copd_mlp.synth_dataset(n=220)
+    killed = []
+    orig = c.produce_batch
+
+    def chaotic_produce(topic, values, **kw):
+        # crash the partition leader mid-stream, exactly once
+        if not killed and kw.get("partition") is not None:
+            killed.append(c.leader_for(topic, kw["partition"]))
+            c.kill_broker(killed[0])
+        return orig(topic, values, **kw)
+
+    monkeypatch.setattr(c, "produce_batch", chaotic_produce)
+    msg = data.ingest(
+        c, "copd", _codec(), arrays, "dep-A",
+        validation_rate=0.2, message_set_size=32,
+    )
+    assert killed, "chaos hook never fired"
+    assert sum(r.length for r in msg.ranges) == 220
+    got = data.StreamDataset(c, msg).read()
+    np.testing.assert_array_equal(np.sort(got["label"]), np.sort(arrays["label"]))
+    np.testing.assert_allclose(
+        np.sort(got["data"], axis=0), np.sort(arrays["data"], axis=0)
+    )
+
+
+def test_kill_any_leader_then_train_end_to_end(tmp_path):
+    """For every broker choice: ingest at acks=all, kill that broker, then a
+    training job reads the pre-failure stream and trains to completion."""
+    for victim in range(3):
+        c = make_cluster()
+        reg = core.Registry()
+        spec = reg.register_model("copd-mlp")
+        cfg = reg.create_configuration([spec.model_id])
+        dep = reg.deploy(cfg.config_id, "train")
+        arrays = copd_mlp.synth_dataset(n=220)
+        data.ingest(c, "copd", _codec(), arrays, dep.deployment_id,
+                    validation_rate=0.2, message_set_size=64)
+        c.kill_broker(victim)
+        job = TrainingJob(c, reg, dep.deployment_id, spec.model_id,
+                          loss_fn=copd_mlp.loss_fn, init_fn=copd_mlp.init,
+                          opt=adamw(1e-2))
+        res = job.run(batch_size=10, epochs=8)
+        assert res.metrics["loss"] < 2.0
+        assert len(reg.results_for(dep.deployment_id)) == 1
+
+
+def test_checkpointed_job_resumes_after_broker_loss(tmp_path):
+    """Mid-training failure: the job crashes at a checkpoint, the stream's
+    leader dies while it is down, and the restarted job re-reads the stream
+    from the new leader and finishes from the checkpoint (paper §II/§V)."""
+    c = make_cluster()
+    reg = core.Registry()
+    spec = reg.register_model("copd-mlp")
+    cfg = reg.create_configuration([spec.model_id])
+    dep = reg.deploy(cfg.config_id, "train")
+    arrays = copd_mlp.synth_dataset(n=220)
+    msg = data.ingest(c, "copd", _codec(), arrays, dep.deployment_id,
+                      validation_rate=0.2, message_set_size=64)
+
+    def job():
+        return TrainingJob(c, reg, dep.deployment_id, spec.model_id,
+                           loss_fn=copd_mlp.loss_fn, init_fn=copd_mlp.init,
+                           opt=adamw(1e-2), ckpt_dir=str(tmp_path / "ck"),
+                           ckpt_every=5)
+
+    with pytest.raises(RuntimeError, match="injected crash"):
+        job().run(batch_size=10, max_steps=40, crash_after=10)
+    # the broker hosting the stream's leader dies while the job is down
+    c.kill_broker(c.leader_for("copd", msg.ranges[0].partition))
+    res = job().run(batch_size=10, max_steps=40, resume=True)
+    assert res.steps == 40
+    assert res.metrics["loss"] < 2.0
+
+
+def test_consumer_group_resumes_from_committed_offsets_on_new_leader():
+    c = make_cluster(parts=1)
+    total = 300
+    prod = ClusterProducer(c, acks="all")
+    prod.send_batch("copd", [f"r{i}".encode() for i in range(total)], partition=0)
+
+    group = ConsumerGroup(c, "workers", ["copd"])
+    consumer = group.join("w0")
+    seen: list[bytes] = []
+    # consume roughly half, then commit
+    while len(seen) < 150:
+        for batch in consumer.poll(max_records=64):
+            seen.extend(bytes(v) for v in batch.values)
+    consumer.commit()
+    committed = c.committed_offset("workers", TopicPartition("copd", 0))
+    assert committed == len(seen)
+
+    # leader dies; a fresh member of the same group resumes exactly at the
+    # committed offset on the new leader
+    c.kill_broker(c.leader_for("copd", 0))
+    group.leave("w0")
+    consumer2 = group.join("w1")
+    resumed: list[bytes] = []
+    for _ in range(20):
+        for batch in consumer2.poll(max_records=64):
+            if not resumed:
+                assert batch.first_offset == committed
+            resumed.extend(bytes(v) for v in batch.values)
+    assert seen + resumed == [f"r{i}".encode() for i in range(total)]
+
+
+def test_stream_replay_to_new_deployment_after_failure():
+    """§V stream reuse composed with failover: a stream ingested before a
+    broker loss is replayed, via a tens-of-bytes control message, to a new
+    deployment that trains end-to-end on the survivors."""
+    c = make_cluster()
+    reg = core.Registry()
+    logger = ControlLogger(c)
+
+    s1 = reg.register_model("copd-mlp")
+    cfg1 = reg.create_configuration([s1.model_id])
+    depA = reg.deploy(cfg1.config_id, "train")
+    arrays = copd_mlp.synth_dataset(n=220)
+    data.ingest(c, "copd", _codec(), arrays, depA.deployment_id,
+                validation_rate=0.2, message_set_size=64)
+    jobA = TrainingJob(c, reg, depA.deployment_id, s1.model_id,
+                       loss_fn=copd_mlp.loss_fn, init_fn=copd_mlp.init,
+                       opt=adamw(1e-2))
+    jobA.run(batch_size=10, epochs=8)
+
+    # disaster strikes partition 0's leader (a single broker loss — the
+    # acceptance scenario; losing a second broker would correctly make the
+    # min_insync=2 control topic refuse acks=all replays)
+    c.kill_broker(c.leader_for("copd", 0))
+
+    # replay the pre-failure stream to a brand-new deployment
+    histA = logger.latest_for(depA.deployment_id)
+    assert histA is not None
+    s2 = reg.register_model("copd-mlp")
+    cfg2 = reg.create_configuration([s2.model_id])
+    depB = reg.deploy(cfg2.config_id, "train")
+    logger.replay(histA, depB.deployment_id)
+
+    jobB = TrainingJob(c, reg, depB.deployment_id, s2.model_id,
+                       loss_fn=copd_mlp.loss_fn, init_fn=copd_mlp.init,
+                       opt=adamw(1e-2))
+    resB = jobB.run(batch_size=10, epochs=8)
+    assert resB.eval_metrics["accuracy"] > 0.8
+    assert len(reg.results_for(depB.deployment_id)) == 1

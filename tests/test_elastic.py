@@ -5,6 +5,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow  # two subprocess runs, each re-jits an LM
+
 
 def test_elastic_restart_across_mesh_shapes(tmp_path):
     """Save sharded state on a (2,4) mesh in one process; restore onto a
@@ -27,8 +31,12 @@ def test_elastic_restart_across_mesh_shapes(tmp_path):
 
         mode, ckdir, shape0, shape1 = sys.argv[1:5]
         shape = tuple(int(x) for x in (shape0, shape1))
-        mesh = jax.make_mesh(shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        # AxisType only exists in newer jax; Auto is the default there anyway
+        if hasattr(jax.sharding, "AxisType"):
+            mesh = jax.make_mesh(shape, ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+        else:
+            mesh = jax.make_mesh(shape, ("data", "model"))
         cfg = C.get_reduced("yi-6b")
         pol = Policy.for_mesh(mesh, param_dtype="float32", compute_dtype="float32")
         model = StreamModel(cfg, pol, mesh)

@@ -130,6 +130,7 @@ def test_retention_expiry_blocks_reuse(stack):
         job.run(batch_size=10, epochs=1)
 
 
+@pytest.mark.slow
 def test_lm_stream_training_and_generation(stack):
     """An LM (reduced qwen2) through the same pipeline: tokens streamed as
     RAW records, trained, then greedy-decoded via prefill + decode_step."""

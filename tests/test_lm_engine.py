@@ -39,6 +39,7 @@ def _reference_generate(model, params, prompt: np.ndarray, n: int) -> np.ndarray
     return np.array(out, np.int32)
 
 
+@pytest.mark.slow
 def test_wave_batched_matches_unbatched(lm):
     cfg, model, params = lm
     rng = np.random.default_rng(0)

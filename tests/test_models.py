@@ -13,6 +13,9 @@ import repro.configs as C
 from repro.models.model import StreamModel
 from repro.models.policy import Policy
 
+# full model-zoo sweep: minutes of jit on CPU — excluded from the fast tier
+pytestmark = pytest.mark.slow
+
 RNG = np.random.default_rng(0)
 FP32 = dict(param_dtype="float32", compute_dtype="float32")
 

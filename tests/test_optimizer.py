@@ -58,6 +58,7 @@ def test_quant_zero_block_exact():
     assert float(jnp.max(jnp.abs(_dequantize_log(c2, s2)))) < 1e-10
 
 
+@pytest.mark.slow
 def test_adamw8bit_tracks_adamw():
     params = copd_mlp.init(jax.random.PRNGKey(0))
     batch = {k: jnp.asarray(v) for k, v in copd_mlp.synth_dataset(n=64).items()}

@@ -69,8 +69,11 @@ def test_sharded_feeder_places_batches():
     from repro.launch.mesh import make_production_mesh
 
     # single-device "mesh": feeder degrades to plain device_put
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    else:
+        mesh = jax.make_mesh((1,), ("data",))
     feeder = ShardedFeeder(mesh, ("data",), prefetch=1)
     batches = [{"x": np.ones((4, 2)) * i} for i in range(5)]
     out = list(feeder(iter(batches)))
