@@ -1,23 +1,49 @@
-"""Replication microbenchmark: append throughput vs replication factor/acks.
+"""Replication microbenchmarks: throughput vs rf/acks, and producer
+contention on the concurrent data plane.
 
-Quantifies what the replicated substrate costs relative to the bare
-single-broker log — the durability/latency trade-off the paper inherits
-from Kafka (§II). Prints ``name,us_per_call,derived`` CSV rows like
-:mod:`benchmarks.run`:
+Two sections:
+
+* **single** — append throughput vs replication factor and acks on one
+  producer thread, relative to the bare single-broker log (the
+  durability/latency trade-off the paper inherits from Kafka, §II).
+* **contended** — aggregate throughput with 1/2/4/8 producer threads over
+  4 partitions, for each rf × acks, on the per-partition-locked data
+  plane; plus the same thread sweep against the pre-refactor data plane
+  (``legacy_global_lock=True``: one cluster-wide lock + fetch-based
+  synchronous replication) as the baseline. ``speedup_4threads`` is the
+  acceptance ratio: concurrent vs global-lock at 4 threads, rf=3,
+  acks=all.
+
+Every config runs ``REPS`` times and reports the best run — the host is
+shared, and scheduling noise only ever makes a run slower, so the minimum
+cost estimates the true cost.
+
+Prints ``name,us_per_call,derived`` CSV rows like :mod:`benchmarks.run`
+and writes the full result set to ``BENCH_replication.json``::
 
     PYTHONPATH=src python -m benchmarks.replication
 """
 
 from __future__ import annotations
 
+import json
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 from repro.core.cluster import BrokerCluster, ClusterProducer
 from repro.core.log import LogConfig, StreamLog
 
 RECORD_BYTES = 1024
 BATCH = 256
-BATCHES = 200  # 200 * 256 * 1KiB = 50 MiB per config
+BATCHES = 200  # 200 * 256 * 1KiB = 50 MiB per single-producer config
+
+C_RECORD_BYTES = 256
+C_BATCH = 256
+C_BATCHES = 480  # total across all threads per contended config
+C_PARTS = 4
+REPS = 3
+
+OUT_JSON = "BENCH_replication.json"
 
 
 def _row(name: str, seconds: float, derived: str = "") -> None:
@@ -54,9 +80,62 @@ def bench_cluster(rf: int, acks: int | str, brokers: int = 3) -> dict[str, float
     return _throughput(lambda vs: prod.send_batch("bench", vs, partition=0))
 
 
+# ------------------------------------------------------- contended producers
+def _contended_once(
+    threads: int, rf: int, acks: int | str, *, legacy: bool
+) -> dict[str, float]:
+    cluster = BrokerCluster(3, default_acks=acks, legacy_global_lock=legacy)
+    cluster.create_topic(
+        "bench", LogConfig(num_partitions=C_PARTS, replication_factor=rf)
+    )
+    payload = [bytes(C_RECORD_BYTES) for _ in range(C_BATCH)]
+    for p in range(C_PARTS):  # warm every partition
+        cluster.produce_batch("bench", payload, partition=p)
+    per_thread = max(C_BATCHES // threads, 1)
+
+    def worker(tid: int) -> None:
+        prod = ClusterProducer(cluster, acks=acks)
+        for _ in range(per_thread):
+            prod.send_batch("bench", payload, partition=tid % C_PARTS)
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(threads) as pool:
+        list(pool.map(worker, range(threads)))
+    dt = time.perf_counter() - t0
+    msgs = per_thread * threads * C_BATCH
+    return {
+        "msgs_per_s": msgs / dt,
+        "MB_per_s": msgs * C_RECORD_BYTES / dt / 1e6,
+        "seconds": dt,
+    }
+
+
+def bench_contended(
+    threads: int, rf: int, acks: int | str, *, legacy: bool = False
+) -> dict[str, float]:
+    best: dict[str, float] | None = None
+    for _ in range(REPS):
+        r = _contended_once(threads, rf, acks, legacy=legacy)
+        if best is None or r["msgs_per_s"] > best["msgs_per_s"]:
+            best = r
+    return best
+
+
 def main() -> None:
+    results: dict = {
+        "config": {
+            "single": {"record_bytes": RECORD_BYTES, "batch": BATCH,
+                       "batches": BATCHES},
+            "contended": {"record_bytes": C_RECORD_BYTES, "batch": C_BATCH,
+                          "batches_total": C_BATCHES, "partitions": C_PARTS,
+                          "reps_best_of": REPS},
+        },
+        "single": {},
+        "contended": {},
+    }
     print("name,us_per_call,derived")
     base = bench_bare_log()
+    results["single"]["bare_streamlog"] = base
     _row(
         "replication_bare_streamlog", base["s_per_batch"],
         f"{base['MB_per_s']:.0f}MB/s",
@@ -65,10 +144,38 @@ def main() -> None:
         for acks in (0, 1, "all"):
             r = bench_cluster(rf, acks)
             rel = base["MB_per_s"] / r["MB_per_s"]
+            results["single"][f"rf{rf}_acks{acks}"] = r
             _row(
                 f"replication_rf{rf}_acks{acks}", r["s_per_batch"],
                 f"{r['MB_per_s']:.0f}MB/s_{rel:.2f}x_vs_bare",
             )
+
+    # contended grid on the concurrent (per-partition-locked) data plane
+    for threads in (1, 2, 4, 8):
+        for rf in (1, 2, 3):
+            for acks in (0, 1, "all"):
+                r = bench_contended(threads, rf, acks)
+                name = f"contended_t{threads}_rf{rf}_acks{acks}"
+                results["contended"][name] = r
+                _row(name, 1.0 / r["msgs_per_s"],
+                     f"{r['msgs_per_s'] / 1e3:.0f}kmsg/s")
+    # pre-refactor baseline: global data-plane lock + fetch-based
+    # synchronous replication, same thread sweep at the acceptance config
+    for threads in (1, 2, 4, 8):
+        r = bench_contended(threads, 3, "all", legacy=True)
+        name = f"contended_t{threads}_rf3_acksall_globallock"
+        results["contended"][name] = r
+        _row(name, 1.0 / r["msgs_per_s"],
+             f"{r['msgs_per_s'] / 1e3:.0f}kmsg/s_baseline")
+
+    new4 = results["contended"]["contended_t4_rf3_acksall"]["msgs_per_s"]
+    old4 = results["contended"]["contended_t4_rf3_acksall_globallock"]["msgs_per_s"]
+    results["speedup_4threads"] = new4 / old4
+    _row("contended_speedup_4threads", 0.0, f"{new4 / old4:.2f}x_vs_global_lock")
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"# wrote {OUT_JSON}")
 
 
 if __name__ == "__main__":

@@ -6,12 +6,13 @@ set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# -p no:cacheprovider: no .pytest_cache/ bytecode-adjacent artifacts in the tree
 echo "== fast tier (pytest -m 'not slow') =="
-python -m pytest -x -q -m "not slow"
+python -m pytest -x -q -m "not slow" -p no:cacheprovider
 
 if [ "$1" = "--fast" ]; then
     exit 0
 fi
 
 echo "== full suite (slow tests included) =="
-python -m pytest -q -m "slow"
+python -m pytest -q -m "slow" -p no:cacheprovider

@@ -10,6 +10,7 @@ from repro.core.cluster import (
     NotLeaderError,
     PartitionMeta,
     PartitionOffline,
+    ReplicationService,
 )
 from repro.core.control import (
     CONTROL_TOPIC,

@@ -33,6 +33,26 @@ the JAX-side reproduction:
   on :class:`NotLeaderError` / :class:`BrokerUnavailable` refresh metadata
   and retry — exactly the real Kafka client protocol loop.
 
+Concurrency model (DESIGN.md §4). The data plane is partition-parallel:
+
+* a cluster-wide **metadata lock** guards topology only (topic create or
+  delete, broker up/down transitions, the consumer-offset store);
+* each partition carries its own **controller lock** serializing that
+  partition's produces, fetches, replication passes, elections, ISR and
+  HW updates. Produces/fetches to *different* partitions never contend.
+* The lock hierarchy is strictly ``metadata lock → partition lock``
+  (never reversed), so topology events may sweep partitions but
+  partition-level work never blocks on topology.
+* :class:`ReplicationService` is the background follower-fetch daemon:
+  worker threads drive replication passes for every partition on a
+  configurable interval, advancing HWs and completing leader elections
+  without any client on the hot path.
+* **Follower reads** — a fetch addressed to an *in-sync* follower may be
+  served from its local log, capped at the high watermark. Records below
+  the HW are immutable and identical on every ISR member, so follower
+  reads are stale-bounded but never wrong; serving replicas keep
+  answering while a leader election is in flight.
+
 The cluster also implements the full :class:`~repro.core.log.StreamBackend`
 surface (``produce_batch``/``read``/``read_range``/offset store/…), so the
 data pipeline, consumer groups, control plane, trainer and serving engine
@@ -49,6 +69,7 @@ from __future__ import annotations
 import os
 import threading
 import time
+import weakref
 from dataclasses import dataclass, replace
 from typing import Callable, Iterator, Sequence
 
@@ -72,9 +93,11 @@ __all__ = [
     "NotLeaderError",
     "PartitionMeta",
     "PartitionOffline",
+    "ReplicationService",
 ]
 
 _REPLICA_FETCH_CHUNK = 4096
+_ROUTED_RETRIES = 8
 
 
 # ------------------------------------------------------------------ errors
@@ -145,7 +168,13 @@ class PartitionMeta:
 
 
 class _PartitionCtl:
-    """Controller-side replication state for one partition."""
+    """Controller-side replication state for one partition.
+
+    ``lock`` serializes every data-plane operation touching this partition
+    (produce, fetch, replication pass, election, ISR/HW update) — the
+    per-partition half of the lock hierarchy. Holders of a partition lock
+    must never acquire the cluster metadata lock.
+    """
 
     __slots__ = (
         "topic",
@@ -157,9 +186,16 @@ class _PartitionCtl:
         "hw",
         "epoch_starts",
         "synced_epoch",
+        "lock",
     )
 
-    def __init__(self, topic: str, partition: int, replicas: list[int]):
+    def __init__(
+        self,
+        topic: str,
+        partition: int,
+        replicas: list[int],
+        lock: threading.RLock | None = None,
+    ):
         self.topic = topic
         self.partition = partition
         self.replicas = list(replicas)
@@ -174,17 +210,117 @@ class _PartitionCtl:
         self.epoch_starts: dict[int, int] = {0: 0}
         # last epoch each replica fully caught up in
         self.synced_epoch: dict[int, int] = {b: 0 for b in replicas}
+        self.lock = lock if lock is not None else threading.RLock()
 
     def meta(self) -> PartitionMeta:
-        return PartitionMeta(
-            topic=self.topic,
-            partition=self.partition,
-            leader=self.leader,
-            epoch=self.epoch,
-            replicas=tuple(self.replicas),
-            isr=frozenset(self.isr),
-            high_watermark=self.hw,
-        )
+        with self.lock:
+            return PartitionMeta(
+                topic=self.topic,
+                partition=self.partition,
+                leader=self.leader,
+                epoch=self.epoch,
+                replicas=tuple(self.replicas),
+                isr=frozenset(self.isr),
+                high_watermark=self.hw,
+            )
+
+
+# ------------------------------------------------------- replication daemon
+class ReplicationService:
+    """Background follower-fetch daemon for a :class:`BrokerCluster`.
+
+    ``workers`` threads share the partition set (partition *i* belongs to
+    worker ``i % workers``); each runs a replication pass for its
+    partitions every ``interval_s`` seconds, advancing high watermarks,
+    pruning dead followers from ISRs and — because a pass resolves the
+    partition leader — completing leader elections for partitions whose
+    leader died, all off the client hot path. This replaces the explicit
+    ``replicate_all()`` ticks (which remain available) with the same
+    leader-epoch reconciliation guarantees: a pass is exactly
+    ``BrokerCluster.replicate_partition`` under the partition lock.
+
+    ``start``/``stop`` are idempotent; the service is also a context
+    manager. Unexpected per-partition errors are collected on ``errors``
+    (bounded) instead of killing the worker. The service holds its
+    cluster only weakly: workers exit on their own once every other
+    reference to the cluster is dropped, so a caller that forgets
+    ``stop_replication()`` leaks neither the cluster nor a busy loop.
+    """
+
+    def __init__(
+        self,
+        cluster: "BrokerCluster",
+        *,
+        interval_s: float = 0.02,
+        workers: int = 2,
+    ):
+        self._cluster_ref = weakref.ref(cluster)
+        self.interval_s = interval_s
+        self.workers = max(1, int(workers))
+        self.errors: list[BaseException] = []
+        self.passes = 0  # completed sweeps by worker 0 (progress probe)
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+
+    @property
+    def cluster(self) -> "BrokerCluster | None":
+        return self._cluster_ref()
+
+    @property
+    def running(self) -> bool:
+        return bool(self._threads) and not self._stop.is_set()
+
+    def start(self) -> "ReplicationService":
+        if self._threads:
+            return self
+        # a fresh Event per worker generation: a worker that outlived a
+        # stop() join timeout stays bound to its own (set) event and can
+        # never be resurrected by a later start() clearing a shared flag
+        self._stop = stop = threading.Event()
+        for i in range(self.workers):
+            t = threading.Thread(
+                target=self._run,
+                args=(i, stop),
+                name=f"replication-worker-{i}",
+                daemon=True,
+            )
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout)
+        self._threads = []
+
+    def _run(self, idx: int, stop: threading.Event) -> None:
+        while not stop.is_set():
+            cluster = self._cluster_ref()
+            if cluster is None:
+                return  # cluster dropped without stop_replication()
+            for j, (topic, p) in enumerate(cluster.partition_ids()):
+                if j % self.workers != idx:
+                    continue
+                if stop.is_set():
+                    return
+                try:
+                    cluster.replicate_partition(topic, p)
+                except (ClusterError, KeyError, IndexError):
+                    continue  # offline/deleted partition — next pass retries
+                except BaseException as e:  # pragma: no cover - diagnostics
+                    if len(self.errors) < 16:
+                        self.errors.append(e)
+            if idx == 0:
+                self.passes += 1
+            del cluster  # don't pin the cluster across the sleep
+            stop.wait(self.interval_s)
+
+    def __enter__(self) -> "ReplicationService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
 
 # ------------------------------------------------------------------ cluster
@@ -196,6 +332,14 @@ class BrokerCluster:
     with leader checks and epoch fencing) used by the failover-aware
     clients, plus chaos hooks (``kill_broker``/``partition_broker``/
     ``restart_broker``/``heal_broker``) used by the fault-tolerance tests.
+
+    ``follower_reads=True`` (default) lets the ``StreamBackend`` read path
+    fall back to an in-sync follower — capped at the high watermark — when
+    the partition leader is down, so consumers keep draining committed
+    records while an election is pending. ``legacy_global_lock=True``
+    restores the PR-1 data plane (one cluster-wide lock, fetch-based
+    synchronous replication); it exists so ``benchmarks/replication.py``
+    can measure the concurrent data plane against its own baseline.
     """
 
     def __init__(
@@ -205,6 +349,8 @@ class BrokerCluster:
         default_replication_factor: int | None = None,
         default_acks: int | str = "all",
         allow_unclean_election: bool = False,
+        follower_reads: bool = True,
+        legacy_global_lock: bool = False,
         clock: Callable[[], float] | None = None,
     ):
         if num_brokers < 1:
@@ -219,15 +365,22 @@ class BrokerCluster:
         )
         self.default_acks = default_acks
         self.allow_unclean_election = allow_unclean_election
+        self.follower_reads = follower_reads
+        self._legacy = legacy_global_lock
         self._meta: dict[tuple[str, int], _PartitionCtl] = {}
         self._configs: dict[str, LogConfig] = {}
         self._committed: dict[str, dict[TopicPartition, int]] = {}
         self._topic_seq = 0  # staggers replica placement across topics
-        self._lock = threading.RLock()
+        # topology lock: topic create/delete, broker up/down, offset store.
+        # Data-plane work runs under per-partition ctl locks instead; in
+        # legacy mode every ctl shares _data_lock, restoring one-big-lock.
+        self._meta_lock = threading.RLock()
+        self._data_lock = threading.RLock() if legacy_global_lock else None
+        self._services: list[ReplicationService] = []
 
     # ------------------------------------------------------------------ admin
     def create_topic(self, name: str, cfg: LogConfig | None = None) -> None:
-        with self._lock:
+        with self._meta_lock:
             if name in self._configs:
                 raise ValueError(f"topic {name!r} already exists")
             cfg = replace(cfg) if cfg is not None else LogConfig()
@@ -265,36 +418,59 @@ class BrokerCluster:
             for p in range(cfg.num_partitions):
                 start = (p + seed) % n
                 replicas = [(start + j) % n for j in range(rf)]
-                ctl = _PartitionCtl(name, p, replicas)
+                ctl = _PartitionCtl(name, p, replicas, lock=self._data_lock)
                 if not self.brokers[ctl.leader].up:
                     self._elect(ctl)
                 self._meta[(name, p)] = ctl
 
     def ensure_topic(self, name: str, cfg: LogConfig | None = None) -> None:
-        with self._lock:
+        with self._meta_lock:
             if name not in self._configs:
                 self.create_topic(name, cfg)
 
     def delete_topic(self, name: str) -> None:
-        with self._lock:
+        with self._meta_lock:
             cfg = self._configs.pop(name, None)
             if cfg is None:
                 return
-            for p in range(cfg.num_partitions):
+            ctls = [
                 self._meta.pop((name, p), None)
+                for p in range(cfg.num_partitions)
+            ]
+            # sweep the partition locks (sanctioned meta→partition order)
+            # before tearing down broker logs: any in-flight data-plane
+            # operation finishes its current critical section against
+            # intact logs, and its next one — it may still hold the popped
+            # ctl — sees the offline fence instead of appending into a
+            # recreated topic's logs behind the new ctl's accounting
+            for ctl in ctls:
+                if ctl is None:
+                    continue
+                with ctl.lock:
+                    ctl.leader = None
+                    ctl.isr = set()
+                    # also empty the replica set: with unclean election
+                    # enabled, a bare leader=None fence could be re-elected
+                    # through from live replicas by a stale holder
+                    ctl.replicas = []
             for br in self.brokers.values():
                 br.log.delete_topic(name)
 
     def topics(self) -> list[str]:
-        with self._lock:
+        with self._meta_lock:
             return sorted(self._configs)
 
     def num_partitions(self, topic: str) -> int:
-        with self._lock:
+        with self._meta_lock:
             try:
                 return self._configs[topic].num_partitions
             except KeyError:
                 raise KeyError(f"unknown topic {topic!r}") from None
+
+    def partition_ids(self) -> list[tuple[str, int]]:
+        """Snapshot of every (topic, partition) — the daemon's work list."""
+        with self._meta_lock:
+            return list(self._meta)
 
     # --------------------------------------------------------------- metadata
     def _ctl(self, topic: str, partition: int) -> _PartitionCtl:
@@ -307,17 +483,25 @@ class BrokerCluster:
 
     def metadata(self, topic: str) -> dict[int, PartitionMeta]:
         """MetadataResponse: partition -> (leader, epoch, replicas, isr, hw)."""
-        with self._lock:
+        with self._meta_lock:
+            # ctl lookup is atomic with the partition count, so a racing
+            # delete_topic yields a clean KeyError from num_partitions on
+            # the next refresh, never a torn half-deleted view
             n = self.num_partitions(topic)
-            return {p: self._ctl(topic, p).meta() for p in range(n)}
+            ctls = [self._meta.get((topic, p)) for p in range(n)]
+        return {p: ctl.meta() for p, ctl in enumerate(ctls) if ctl is not None}
+
+    def partition_meta(self, topic: str, partition: int) -> PartitionMeta:
+        """One partition's MetadataResponse — touches only its ctl lock."""
+        return self._ctl(topic, partition).meta()
 
     def leader_for(self, topic: str, partition: int) -> int | None:
-        with self._lock:
-            return self._ctl(topic, partition).leader
+        ctl = self._ctl(topic, partition)
+        with ctl.lock:
+            return ctl.leader
 
     def describe(self) -> dict[str, dict[int, PartitionMeta]]:
-        with self._lock:
-            return {t: self.metadata(t) for t in self.topics()}
+        return {t: self.metadata(t) for t in self.topics()}
 
     # ------------------------------------------------------------ replication
     def _leader_broker(self, ctl: _PartitionCtl) -> Broker:
@@ -338,74 +522,154 @@ class BrokerCluster:
     def _replicate_partition(self, ctl: _PartitionCtl) -> None:
         """One follower-fetch pass: copy leader records to live followers,
         refresh ISR membership, and advance the high watermark."""
-        leader = self._leader_broker(ctl)
-        leo = leader.log.end_offset(ctl.topic, ctl.partition)
-        for bid in ctl.replicas:
+        with ctl.lock:
+            leader = self._leader_broker(ctl)
+            leo = leader.log.end_offset(ctl.topic, ctl.partition)
+            for bid in ctl.replicas:
+                if bid == ctl.leader:
+                    continue
+                br = self.brokers[bid]
+                if not br.up:
+                    ctl.isr.discard(bid)
+                    continue
+                local_end = br.log.end_offset(ctl.topic, ctl.partition)
+                last_synced = ctl.synced_epoch.get(bid, -1)
+                if last_synced < ctl.epoch:
+                    # leader-epoch reconciliation: this replica missed one or
+                    # more elections, so records above the first missed
+                    # epoch's start may be a divergent unacked suffix from
+                    # its own time as leader — even below the since-advanced
+                    # HW. Truncate to that point before fetching.
+                    cut = min(
+                        (
+                            start
+                            for e, start in ctl.epoch_starts.items()
+                            if e > last_synced
+                        ),
+                        default=None,
+                    )
+                    if cut is not None and cut < local_end:
+                        local_end = br.log.truncate_to(
+                            ctl.topic, ctl.partition, cut
+                        )
+                if local_end > leo:
+                    # deposed leader with an unacked suffix: reconcile
+                    local_end = br.log.truncate_to(ctl.topic, ctl.partition, leo)
+                lstart = leader.log.start_offset(ctl.topic, ctl.partition)
+                if local_end < lstart:
+                    # fell behind the leader's retention point while down:
+                    # drop everything and re-fetch from the leader's log start
+                    local_end = br.log.reset_to(ctl.topic, ctl.partition, lstart)
+                while local_end < leo:
+                    values, keys, timestamps = leader.log.replica_fetch(
+                        ctl.topic, ctl.partition, local_end, _REPLICA_FETCH_CHUNK
+                    )
+                    if not values:
+                        break
+                    br.log.replica_append(
+                        ctl.topic, ctl.partition, values, keys, timestamps
+                    )
+                    local_end += len(values)
+                if local_end == leo:
+                    ctl.isr.add(bid)
+                    ctl.synced_epoch[bid] = ctl.epoch
+                else:
+                    ctl.isr.discard(bid)
+            ctl.isr.add(ctl.leader)
+            ctl.synced_epoch[ctl.leader] = ctl.epoch
+            isr_ends = [
+                self.brokers[b].log.end_offset(ctl.topic, ctl.partition)
+                for b in ctl.isr
+            ]
+            # HW never regresses below what consumers may already have read
+            ctl.hw = max(ctl.hw, min(isr_ends)) if isr_ends else ctl.hw
+
+    def _commit_batch(
+        self,
+        ctl: _PartitionCtl,
+        values: Sequence[bytes],
+        keys: Sequence[bytes | None] | None,
+        now_ms: int,
+        first: int,
+        last: int,
+    ) -> None:
+        """Synchronous ISR replication for one acked batch (caller holds
+        the partition lock and just appended ``[first, last]`` on the
+        leader).
+
+        Hot path: the records are still in hand, so push them straight to
+        every caught-up ISR follower — no leader re-fetch, no per-record
+        materialization — and advance the HW. Any follower that lagged
+        (acks<all appends in between, missed epochs, just rejoined) falls
+        back to a full reconciliation pass, which re-derives ISR and HW
+        from scratch.
+
+        Invariant this relies on (and preserves): between replication
+        passes, every non-leader ISR member holds the same prefix-
+        consistent log with the same end offset — followers only advance
+        via full passes (which equalize them at the leader's end) or via
+        this push (all caught-up followers, or the full-pass fallback).
+        Election survivors are therefore prefix-identical, which is what
+        makes the caller's ``hw > last`` ack test exact: the HW can only
+        pass ``last`` if the committed records at ``[first, last]`` are
+        this batch.
+        """
+        if self._legacy:
+            self._replicate_partition(ctl)
+            return
+        need_full = False
+        for bid in sorted(ctl.isr):
             if bid == ctl.leader:
                 continue
-            br = self.brokers[bid]
-            if not br.up:
-                ctl.isr.discard(bid)
+            fbr = self.brokers[bid]
+            if (
+                not fbr.up
+                or ctl.synced_epoch.get(bid) != ctl.epoch
+                or fbr.log.end_offset(ctl.topic, ctl.partition) != first
+            ):
+                need_full = True
                 continue
-            local_end = br.log.end_offset(ctl.topic, ctl.partition)
-            last_synced = ctl.synced_epoch.get(bid, -1)
-            if last_synced < ctl.epoch:
-                # leader-epoch reconciliation: this replica missed one or
-                # more elections, so records above the first missed epoch's
-                # start may be a divergent unacked suffix from its own time
-                # as leader — even below the since-advanced HW. Truncate to
-                # that point before fetching.
-                cut = min(
-                    (
-                        start
-                        for e, start in ctl.epoch_starts.items()
-                        if e > last_synced
-                    ),
-                    default=None,
-                )
-                if cut is not None and cut < local_end:
-                    local_end = br.log.truncate_to(ctl.topic, ctl.partition, cut)
-            if local_end > leo:
-                # deposed leader with an unacked suffix: reconcile
-                local_end = br.log.truncate_to(ctl.topic, ctl.partition, leo)
-            lstart = leader.log.start_offset(ctl.topic, ctl.partition)
-            if local_end < lstart:
-                # fell behind the leader's retention point while down:
-                # drop everything and re-fetch from the leader's log start
-                local_end = br.log.reset_to(ctl.topic, ctl.partition, lstart)
-            while local_end < leo:
-                values, keys, timestamps = leader.log.replica_fetch(
-                    ctl.topic, ctl.partition, local_end, _REPLICA_FETCH_CHUNK
-                )
-                if not values:
-                    break
-                br.log.replica_append(
-                    ctl.topic, ctl.partition, values, keys, timestamps
-                )
-                local_end += len(values)
-            if local_end == leo:
-                ctl.isr.add(bid)
-                ctl.synced_epoch[bid] = ctl.epoch
-            else:
-                ctl.isr.discard(bid)
-        ctl.isr.add(ctl.leader)
-        ctl.synced_epoch[ctl.leader] = ctl.epoch
-        isr_ends = [
-            self.brokers[b].log.end_offset(ctl.topic, ctl.partition)
-            for b in ctl.isr
-        ]
-        # HW never regresses below what consumers may already have read
-        ctl.hw = max(ctl.hw, min(isr_ends)) if isr_ends else ctl.hw
+            fbr.log.replica_append(ctl.topic, ctl.partition, values, keys, now_ms)
+        if need_full:
+            self._replicate_partition(ctl)
+        else:
+            # leader + every ISR follower now hold [.., last]
+            ctl.hw = max(ctl.hw, last + 1)
+
+    def replicate_partition(self, topic: str, partition: int) -> None:
+        """One replication pass for one partition (daemon work unit)."""
+        self._replicate_partition(self._ctl(topic, partition))
 
     def replicate_all(self) -> None:
-        """Drive one replication pass for every partition (the background
-        follower-fetch loop, collapsed into an explicit tick)."""
-        with self._lock:
-            for ctl in self._meta.values():
-                try:
-                    self._replicate_partition(ctl)
-                except PartitionOffline:
-                    continue  # no live leader to fetch from — skip, not abort
+        """Drive one replication pass for every partition (an explicit
+        cluster-wide tick; the background daemon does the same per
+        partition on an interval)."""
+        for topic, p in self.partition_ids():
+            try:
+                self.replicate_partition(topic, p)
+            except PartitionOffline:
+                continue  # no live leader to fetch from — skip, not abort
+            except (KeyError, IndexError):
+                continue  # topic deleted since the snapshot
+
+    # ------------------------------------------------------- daemon lifecycle
+    def start_replication(
+        self, *, interval_s: float = 0.02, workers: int = 2
+    ) -> ReplicationService:
+        """Start (and register) a background replication daemon."""
+        svc = ReplicationService(self, interval_s=interval_s, workers=workers)
+        self._services.append(svc)
+        return svc.start()
+
+    def stop_replication(self) -> None:
+        """Stop every registered replication daemon."""
+        for svc in self._services:
+            svc.stop()
+        self._services = []
+
+    @property
+    def _daemon_active(self) -> bool:
+        return any(s.running for s in self._services)
 
     # ----------------------------------------------------------- elections
     def _elect(self, ctl: _PartitionCtl) -> None:
@@ -413,6 +677,7 @@ class BrokerCluster:
 
         Only called when the current leader is down or the partition has
         no leader (every broker-down event and lazy-discovery path).
+        Caller holds the partition lock.
         """
         candidates = sorted(
             b for b in ctl.isr if self.brokers[b].up and b != ctl.leader
@@ -422,7 +687,6 @@ class BrokerCluster:
             candidates = sorted(
                 b for b in ctl.replicas if self.brokers[b].up
             )
-        old = ctl.leader
         if not candidates:
             ctl.leader = None
             ctl.epoch += 1
@@ -442,59 +706,79 @@ class BrokerCluster:
         # reconciled as a follower on the next replication pass
 
     # ------------------------------------------------------------ chaos hooks
-    def kill_broker(self, broker_id: int) -> None:
-        """Hard-crash a broker: every partition it led fails over."""
-        with self._lock:
-            self.brokers[broker_id].alive = False
-            self._on_broker_down(broker_id)
+    def kill_broker(self, broker_id: int, *, defer_election: bool = False) -> None:
+        """Hard-crash a broker: every partition it led fails over.
 
-    def partition_broker(self, broker_id: int) -> None:
+        ``defer_election=True`` models the detection gap before the
+        controller notices (Kafka's session timeout): the broker is down
+        but elections wait for the next replication pass (a daemon tick or
+        explicit ``replicate_all``) or the next *StreamBackend-facade*
+        produce/read to that partition, which elect through the dead
+        leader lazily. Direct broker-protocol clients
+        (``ClusterProducer``/``ClusterConsumer``) see
+        :class:`BrokerUnavailable` until one of those runs — the window
+        follower reads are designed to bridge.
+        """
+        with self._meta_lock:
+            self.brokers[broker_id].alive = False
+            if not defer_election:
+                self._on_broker_down(broker_id)
+
+    def partition_broker(self, broker_id: int, *, defer_election: bool = False) -> None:
         """Network-partition a broker away from the cluster."""
-        with self._lock:
+        with self._meta_lock:
             self.brokers[broker_id].reachable = False
-            self._on_broker_down(broker_id)
+            if not defer_election:
+                self._on_broker_down(broker_id)
 
     def _on_broker_down(self, broker_id: int) -> None:
         for ctl in self._meta.values():
-            if broker_id in ctl.isr and broker_id != ctl.leader:
-                ctl.isr.discard(broker_id)
-            if ctl.leader == broker_id:
-                self._elect(ctl)
+            with ctl.lock:
+                if broker_id in ctl.isr and broker_id != ctl.leader:
+                    ctl.isr.discard(broker_id)
+                if ctl.leader == broker_id:
+                    self._elect(ctl)
 
     def restart_broker(self, broker_id: int) -> None:
         """Bring a crashed broker back; it rejoins as a follower."""
-        with self._lock:
+        with self._meta_lock:
             self.brokers[broker_id].alive = True
             self._rejoin(broker_id)
 
     def heal_broker(self, broker_id: int) -> None:
         """Heal a network partition; the broker rejoins as a follower."""
-        with self._lock:
+        with self._meta_lock:
             self.brokers[broker_id].reachable = True
             self._rejoin(broker_id)
 
     def _rejoin(self, broker_id: int) -> None:
         br = self.brokers[broker_id]
         for ctl in self._meta.values():
-            if broker_id not in ctl.replicas:
-                continue
-            if ctl.leader is None:
-                # partition was offline — the rejoining replica restores it
-                self._elect(ctl)
-                continue
-            if ctl.leader == broker_id:
-                continue
-            # catch up as a follower; _replicate_partition performs the
-            # leader-epoch truncation before fetching
-            self._replicate_partition(ctl)
+            with ctl.lock:
+                if broker_id not in ctl.replicas:
+                    continue
+                if ctl.leader is None:
+                    # partition was offline — the rejoining replica restores it
+                    self._elect(ctl)
+                    continue
+                if ctl.leader == broker_id:
+                    continue
+                try:
+                    # catch up as a follower; _replicate_partition performs
+                    # the leader-epoch truncation before fetching
+                    self._replicate_partition(ctl)
+                except PartitionOffline:
+                    # recorded leader dead (deferred election) with no other
+                    # live ISR member: this partition stays offline, but the
+                    # rejoin sweep — and the offset mirror below — continue
+                    continue
         # mirror the (cluster-wide replicated) offset store back onto it
         for group, offsets in self._committed.items():
             for tp, off in offsets.items():
                 br.log.commit_offset(group, tp, off)
 
     def live_brokers(self) -> list[int]:
-        with self._lock:
-            return sorted(b.broker_id for b in self.brokers.values() if b.up)
+        return sorted(b.broker_id for b in self.brokers.values() if b.up)
 
     # ------------------------------------------- broker-level client protocol
     def _check_leader(self, broker_id: int, ctl: _PartitionCtl) -> Broker:
@@ -523,28 +807,53 @@ class BrokerCluster:
         then on every ISR member, so they survive any single broker loss
         whenever the ISR held >= 2 members at ack time
         (``min_insync_replicas=2`` makes that a hard precondition).
+
+        If leadership moves mid-append (the addressed broker died between
+        the leader check and the HW advance) and the batch did not commit,
+        the ack is withheld and :class:`NotLeaderError` raised instead —
+        the records sit only on the deposed leader, where epoch
+        reconciliation will truncate them, and clients retry against the
+        new leader. The commit test is ``hw > last``: the partition lock
+        is held across append+commit, so offsets ``[first, last]`` can
+        hold no other producer's records — if the HW passed ``last``, the
+        committed records *are* this batch (even when a direct-pushed
+        follower won the election mid-call) and acking is exact, never
+        duplicated. Zero-acked-loss therefore holds under concurrent
+        broker failures without re-append duplicates.
         """
         acks = self.default_acks if acks is None else acks
         if acks not in (0, 1, "all", -1):
             raise ValueError(f"bad acks {acks!r}; want 0, 1, or 'all'")
-        with self._lock:
-            ctl = self._ctl(topic, partition)
+        ctl = self._ctl(topic, partition)
+        with ctl.lock:
             br = self._check_leader(broker_id, ctl)
             if epoch is not None and epoch != ctl.epoch:
                 raise NotLeaderError(topic, partition, ctl.leader)
             if acks in ("all", -1):
-                cfg = self._configs[topic]
+                cfg = self._configs.get(topic)  # plain dict read: no meta
+                if cfg is None:                 # lock under a ctl lock
+                    # topic deleted under us — surface the offline fence,
+                    # not a raw KeyError the client retry loops don't know
+                    raise PartitionOffline(f"{topic}:{partition} was deleted")
                 live_isr = [b for b in ctl.isr if self.brokers[b].up]
                 if len(live_isr) < cfg.min_insync_replicas:
                     raise NotEnoughReplicasError(
                         f"{topic}:{partition} ISR {sorted(live_isr)} below "
                         f"min.insync.replicas={cfg.min_insync_replicas}"
                     )
-            _, first, last = br.log.produce_batch(
-                topic, values, keys=keys, partition=partition
+            # stamp the batch once so leader and followers agree on record
+            # timestamps (and therefore on retention_ms expiry)
+            now_ms = int(self._clock() * 1000)
+            first, last = br.log.replica_append(
+                topic, partition, values, keys, now_ms
             )
             if acks in ("all", -1):
-                self._replicate_partition(ctl)
+                self._commit_batch(ctl, values, keys, now_ms, first, last)
+                if ctl.hw <= last:
+                    # leadership moved under us mid-append and the batch
+                    # did not commit: it must not be acknowledged (a new
+                    # leader without it caps the HW at `first` or below)
+                    raise NotLeaderError(topic, partition, ctl.leader)
             return first, last
 
     def broker_fetch(
@@ -554,24 +863,53 @@ class BrokerCluster:
         partition: int,
         offset: int,
         max_records: int = 1024,
+        *,
+        allow_follower: bool = False,
     ) -> RecordBatch:
-        """Leader-side FetchRequest, capped at the high watermark."""
-        with self._lock:
-            ctl = self._ctl(topic, partition)
-            br = self._check_leader(broker_id, ctl)
-            self._replicate_partition(ctl)  # opportunistic HW advance
+        """Leader-side FetchRequest, capped at the high watermark.
+
+        With ``allow_follower=True`` a fetch addressed to an **in-sync**
+        follower is served from that follower's local log (still capped at
+        the HW) instead of raising :class:`NotLeaderError` — records below
+        the HW are on every ISR member and immutable, so the response is
+        stale-bounded but never divergent. Out-of-sync replicas never
+        serve: their log may hold a deposed leader's suffix below the HW.
+        """
+        ctl = self._ctl(topic, partition)
+        with ctl.lock:
+            br = self.brokers.get(broker_id)
+            if br is None or not br.up:
+                raise BrokerUnavailable(f"broker {broker_id} is down")
+            if ctl.leader == broker_id:
+                if not self._daemon_active or ctl.hw <= offset:
+                    self._replicate_partition(ctl)  # opportunistic HW advance
+                return self._read_visible(br, ctl, offset, max_records)
+            if not allow_follower or broker_id not in ctl.isr:
+                raise NotLeaderError(topic, partition, ctl.leader)
             return self._read_visible(br, ctl, offset, max_records)
 
+    def _serving_follower(self, ctl: _PartitionCtl) -> Broker | None:
+        """Lowest-id live in-sync non-leader replica, or None — the single
+        eligibility rule for every follower-read fallback path. Caller
+        holds the ctl lock."""
+        for bid in sorted(ctl.isr):
+            if bid != ctl.leader and self.brokers[bid].up:
+                return self.brokers[bid]
+        return None
+
     def _read_visible(
-        self, leader: Broker, ctl: _PartitionCtl, offset: int, max_records: int
+        self, br: Broker, ctl: _PartitionCtl, offset: int, max_records: int
     ) -> RecordBatch:
-        leo = leader.log.end_offset(ctl.topic, ctl.partition)
-        if offset > leo:
+        """Serve a read from ``br``'s local log, capped at the high
+        watermark. ``br`` is the leader or an in-sync follower — an ISR
+        member's log always extends to the HW, so bounding by its own end
+        offset is equivalent for both."""
+        end = br.log.end_offset(ctl.topic, ctl.partition)
+        if offset > end:
             raise OffsetOutOfRange(
-                f"{ctl.topic}:{ctl.partition} offset {offset} > end {leo}"
+                f"{ctl.topic}:{ctl.partition} offset {offset} > end {end}"
             )
-        visible = max(ctl.hw - offset, 0)
-        n = min(max_records, visible)
+        n = min(max_records, max(min(ctl.hw, end) - offset, 0))
         if n <= 0:
             return RecordBatch(
                 topic=ctl.topic,
@@ -580,7 +918,7 @@ class BrokerCluster:
                 values=[],
                 timestamps=[],
             )
-        return leader.log.read(ctl.topic, ctl.partition, offset, n)
+        return br.log.read(ctl.topic, ctl.partition, offset, n)
 
     # ------------------------------------- StreamBackend facade (StreamLog)
     # Everything below makes the cluster a drop-in for StreamLog: internal
@@ -594,23 +932,30 @@ class BrokerCluster:
         partition: int | None,
         acks: int | str | None = None,
     ) -> tuple[int, int, int]:
-        # No retry loop needed here: everything runs under the controller
-        # lock, and _leader_broker elects through a dead leader before the
-        # append — that lazy election is what makes the facade failover-safe.
-        # (ClusterProducer retries because its *cached* metadata can go
-        # stale; the facade reads live state.)
-        with self._lock:
-            nparts = self.num_partitions(topic)
-            if partition is None:
-                partition = default_partition(
-                    keys, nparts, int(self._clock() * 1000)
-                )
-            ctl = self._ctl(topic, partition)
-            leader = self._leader_broker(ctl)
-            first, last = self.broker_append(
-                leader.broker_id, topic, partition, values, keys=keys, acks=acks
+        nparts = self.num_partitions(topic)
+        if partition is None:
+            partition = default_partition(
+                keys, nparts, int(self._clock() * 1000)
             )
-            return partition, first, last
+        ctl = self._ctl(topic, partition)
+        last_err: ClusterError | None = None
+        # Leadership is pinned while the partition lock is held, but the
+        # addressed broker may die between the leader check and the ack
+        # (flags flip without the partition lock) — re-resolve and retry;
+        # _leader_broker elects through the dead leader. PartitionOffline
+        # propagates: there is nothing to retry against.
+        for _ in range(_ROUTED_RETRIES):
+            with ctl.lock:
+                leader = self._leader_broker(ctl)
+                try:
+                    first, last = self.broker_append(
+                        leader.broker_id, topic, partition, values,
+                        keys=keys, acks=acks,
+                    )
+                    return partition, first, last
+                except (NotLeaderError, BrokerUnavailable) as e:
+                    last_err = e
+        raise last_err
 
     def produce(
         self,
@@ -638,9 +983,25 @@ class BrokerCluster:
     def read(
         self, topic: str, partition: int, offset: int, max_records: int = 1024
     ) -> RecordBatch:
-        with self._lock:
-            ctl = self._ctl(topic, partition)
-            leader = self._leader_broker(ctl)
+        ctl = self._ctl(topic, partition)
+        with ctl.lock:
+            leader_id = ctl.leader
+            if leader_id is not None and self.brokers[leader_id].up:
+                # live leader: serve from it; skip the inline replication
+                # pass when a daemon is advancing the HW in the background
+                # (unless the read would come back empty without it)
+                if not self._daemon_active or ctl.hw <= offset:
+                    self._replicate_partition(ctl)
+                return self._read_visible(
+                    self.brokers[ctl.leader], ctl, offset, max_records
+                )
+            if self.follower_reads:
+                # leader down/None: keep serving committed records from an
+                # in-sync follower while the election is pending
+                follower = self._serving_follower(ctl)
+                if follower is not None:
+                    return self._read_visible(follower, ctl, offset, max_records)
+            leader = self._leader_broker(ctl)  # lazy election / offline
             self._replicate_partition(ctl)
             return self._read_visible(leader, ctl, offset, max_records)
 
@@ -649,9 +1010,20 @@ class BrokerCluster:
     ) -> RecordBatch:
         batch = self.read(topic, partition, offset, length)
         if len(batch) < length:
-            # read() just ran a replication pass; the ctl HW is current
-            with self._lock:
-                hw = self._ctl(topic, partition).hw
+            # the shortfall may just be a daemon-stale HW (read() skips the
+            # inline pass when some records are visible): force one pass
+            # and retry before declaring the range unreadable
+            ctl = self._ctl(topic, partition)
+            try:
+                with ctl.lock:
+                    self._replicate_partition(ctl)
+            except PartitionOffline:
+                pass  # follower reads may still serve below the HW
+            batch = self.read(topic, partition, offset, length)
+        if len(batch) < length:
+            ctl = self._ctl(topic, partition)
+            with ctl.lock:
+                hw = ctl.hw
             raise OffsetOutOfRange(
                 f"{topic}:{partition} range [{offset}, {offset + length}) extends "
                 f"past high watermark {hw}"
@@ -673,35 +1045,51 @@ class BrokerCluster:
             done += take
 
     def start_offset(self, topic: str, partition: int) -> int:
-        with self._lock:
-            ctl = self._ctl(topic, partition)
-            leader = self._leader_broker(ctl)
-            return leader.log.start_offset(topic, partition)
+        ctl = self._ctl(topic, partition)
+        with ctl.lock:
+            leader_id = ctl.leader
+            if leader_id is None or not self.brokers[leader_id].up:
+                if self.follower_reads:
+                    follower = self._serving_follower(ctl)
+                    if follower is not None:
+                        return follower.log.start_offset(topic, partition)
+                leader_id = self._leader_broker(ctl).broker_id
+            return self.brokers[leader_id].log.start_offset(topic, partition)
 
     def end_offset(self, topic: str, partition: int) -> int:
         """Consumer-visible end: the high watermark (not the leader LEO)."""
-        with self._lock:
-            ctl = self._ctl(topic, partition)
+        ctl = self._ctl(topic, partition)
+        with ctl.lock:
+            leader_id = ctl.leader
+            if (
+                self.follower_reads
+                and (leader_id is None or not self.brokers[leader_id].up)
+                and self._serving_follower(ctl) is not None
+            ):
+                # leader down but in-sync followers serve: report the HW
+                # as-is rather than forcing an election from the read path
+                return ctl.hw
             self._leader_broker(ctl)  # refresh leadership if stale
-            self._replicate_partition(ctl)
+            if not self._daemon_active:
+                self._replicate_partition(ctl)
             return ctl.hw
 
     def log_end_offset(self, topic: str, partition: int) -> int:
         """Leader log end offset (includes not-yet-replicated records)."""
-        with self._lock:
-            ctl = self._ctl(topic, partition)
+        ctl = self._ctl(topic, partition)
+        with ctl.lock:
             leader = self._leader_broker(ctl)
             return leader.log.end_offset(topic, partition)
 
     def size_bytes(self, topic: str, partition: int | None = None) -> int:
-        with self._lock:
-            if partition is not None:
-                ctl = self._ctl(topic, partition)
+        if partition is not None:
+            ctl = self._ctl(topic, partition)
+            with ctl.lock:
                 return self._leader_broker(ctl).log.size_bytes(topic, partition)
-            return sum(
-                self.size_bytes(topic, p)
-                for p in range(self.num_partitions(topic))
-            )
+        return sum(
+            self.size_bytes(topic, p)
+            for p in range(self.num_partitions(topic))
+        )
 
     # -------------------------------------------------- consumer offset store
     # Kafka's `__consumer_offsets`, replicated at cluster width: commits
@@ -710,14 +1098,14 @@ class BrokerCluster:
     # survive any broker loss. The controller dict is the recovery fallback
     # for the no-live-broker window.
     def commit_offset(self, group: str, tp: TopicPartition, offset: int) -> None:
-        with self._lock:
+        with self._meta_lock:
             self._committed.setdefault(group, {})[tp] = offset
             for br in self.brokers.values():
                 if br.up:
                     br.log.commit_offset(group, tp, offset)
 
     def committed_offset(self, group: str, tp: TopicPartition) -> int | None:
-        with self._lock:
+        with self._meta_lock:
             for bid in sorted(self.brokers):
                 if self.brokers[bid].up:
                     return self.brokers[bid].log.committed_offset(group, tp)
@@ -833,13 +1221,21 @@ class ClusterProducer:
 
 class ClusterConsumer:
     """Failover-aware fetcher: routes reads to the partition leader and
-    retries through elections; offsets commit to the replicated store."""
+    retries through elections; offsets commit to the replicated store.
+
+    ``follower_reads=True`` adds the Kafka 2.4 "fetch from follower" mode:
+    when the leader is unreachable (or the partition is leaderless
+    mid-election), the fetch falls back to an in-sync follower, capped at
+    the high watermark — bounded staleness, never divergence.
+    """
 
     def __init__(self, cluster: BrokerCluster, *, group_id: str | None = None,
-                 retries: int = 5):
+                 retries: int = 5, follower_reads: bool = False):
         self.cluster = cluster
         self.group_id = group_id
         self.retries = retries
+        self.follower_reads = follower_reads
+        self.follower_fetches = 0
         self._meta = _MetadataCache(cluster)
 
     @property
@@ -862,7 +1258,36 @@ class ClusterConsumer:
             except (BrokerUnavailable, PartitionOffline) as e:
                 self._meta.invalidate(topic, partition)
                 last_err = e
+                if self.follower_reads:
+                    batch = self._follower_fetch(
+                        topic, partition, offset, max_records
+                    )
+                    if batch is not None:
+                        return batch
         raise last_err
+
+    def _follower_fetch(
+        self, topic: str, partition: int, offset: int, max_records: int
+    ) -> RecordBatch | None:
+        """Try each in-sync replica in turn; None if none can serve."""
+        try:
+            # single-partition metadata: touches only this partition's lock
+            meta = self.cluster.partition_meta(topic, partition)
+        except (KeyError, IndexError):
+            return None
+        for b in sorted(meta.isr):
+            if b == meta.leader:
+                continue
+            try:
+                batch = self.cluster.broker_fetch(
+                    b, topic, partition, offset, max_records,
+                    allow_follower=True,
+                )
+            except ClusterError:
+                continue
+            self.follower_fetches += 1
+            return batch
+        return None
 
     def position_bounds(self, topic: str, partition: int) -> tuple[int, int]:
         """(log start, high watermark) for the partition."""

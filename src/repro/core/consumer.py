@@ -18,6 +18,14 @@ Groups run against any :class:`~repro.core.log.StreamBackend` — a bare
 On a cluster, reads route to partition leaders through elections and
 committed offsets live in the cluster-replicated offset store, so a group
 resumes from its committed offsets on the new leader after a broker loss.
+A partition that is momentarily unavailable (leader election in flight,
+no in-sync follower to serve) is skipped for that poll rather than
+failing the member — the next poll retries it.
+
+The coordinator is thread-safe; each :class:`GroupConsumer` is owned by
+one member thread (positions are member-local), so N members may poll the
+same group concurrently — the serving engine's parallel replica polling
+relies on exactly that.
 """
 
 from __future__ import annotations
@@ -27,6 +35,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
+from repro.core.cluster import ClusterError
 from repro.core.log import (
     OffsetOutOfRange,
     RecordBatch,
@@ -186,9 +195,18 @@ class GroupConsumer:
             try:
                 batch = self.group.log.read(tp.topic, tp.partition, pos, max_records)
             except OffsetOutOfRange:
-                # evicted under us — jump to log start (Kafka auto.offset.reset)
-                pos = self.group.log.start_offset(tp.topic, tp.partition)
-                batch = self.group.log.read(tp.topic, tp.partition, pos, max_records)
+                try:
+                    # evicted under us — jump to log start (auto.offset.reset)
+                    pos = self.group.log.start_offset(tp.topic, tp.partition)
+                    batch = self.group.log.read(
+                        tp.topic, tp.partition, pos, max_records
+                    )
+                except ClusterError:
+                    continue  # leader lost mid-recovery: retry next poll
+            except ClusterError:
+                # partition unavailable mid-election (offline, no serving
+                # follower): skip it this round, keep the member alive
+                continue
             if len(batch):
                 self._positions[tp] = batch.next_offset
                 batches.append(batch)

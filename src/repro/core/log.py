@@ -26,9 +26,11 @@ retention, replay, consumer groups) is preserved — see DESIGN.md §2.
 from __future__ import annotations
 
 import bisect
+import itertools
 import os
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Iterator, Protocol, Sequence
 
@@ -55,9 +57,16 @@ def default_partition(
     """Default partitioner shared by every backend: key-hash when the batch
     is keyed, else a time-slot (sticky round-robin-ish). Keeping one
     implementation means a key maps to the same partition on a bare
-    StreamLog and on a BrokerCluster."""
+    StreamLog and on a BrokerCluster.
+
+    The key hash is CRC32, not Python's ``hash()``: ``hash(bytes)`` is
+    salted per process (PYTHONHASHSEED), so the same key would land on
+    different partitions across producer processes and restarts. A stable
+    hash is what makes key→partition routing a durable contract (Kafka
+    uses murmur2 for the same reason).
+    """
     if keys is not None and keys and keys[0] is not None:
-        return hash(bytes(keys[0])) % nparts
+        return zlib.crc32(bytes(keys[0])) % nparts
     return now_ms % nparts
 
 
@@ -120,6 +129,7 @@ class _Segment:
     __slots__ = (
         "base_offset",
         "buf",
+        "buf_len",
         "key_buf",
         "starts",
         "lengths",
@@ -134,7 +144,15 @@ class _Segment:
 
     def __init__(self, base_offset: int, created_ms: int):
         self.base_offset = base_offset
+        # the payload buffer over-allocates (doubling growth) and tracks the
+        # written prefix in buf_len: appends are a single in-place slice
+        # assignment instead of a resize, so a hot 8 MiB segment doesn't
+        # re-memcpy itself every few batches (bytearray's native growth
+        # factor is ~1.125x) and appends can't hit BufferError from a
+        # consumer's outstanding zero-copy view (equal-length slice writes
+        # never resize an exported buffer)
         self.buf = bytearray()
+        self.buf_len = 0
         self.key_buf = bytearray()
         # python lists while hot; frozen to numpy on roll
         self.starts: list[int] = []
@@ -153,7 +171,7 @@ class _Segment:
     def size_bytes(self) -> int:
         if self.logical_bytes is not None:
             return self.logical_bytes
-        return len(self.buf) + len(self.key_buf)
+        return self.buf_len + len(self.key_buf)
 
     @property
     def last_offset(self) -> int:
@@ -165,26 +183,49 @@ class _Segment:
         keys: Sequence[bytes | None] | None,
         timestamp_ms: int | Sequence[int],
     ) -> None:
-        pos = len(self.buf)
+        """Append one message set in bulk: one ``join`` into the shared
+        buffer plus list extends, instead of a per-record Python loop —
+        the hot path of every produce and every replica push."""
+        n = len(values)
+        if n == 0:
+            return
+        pos = self.buf_len
+        lens = list(map(len, values))
+        starts = list(itertools.accumulate(lens, initial=pos))
+        end = starts.pop()  # accumulate also yields the end position
+        if end > len(self.buf):
+            # preallocate with doubling growth (O(log) total re-copies)
+            grow = bytes(max(end - len(self.buf), len(self.buf)))
+            try:
+                self.buf += grow
+            except BufferError:
+                # a consumer's zero-copy view pins the current buffer:
+                # rebuild instead of resizing (old views stay valid on the
+                # old buffer; appends continue on the new one)
+                self.buf = self.buf[:] + grow
+        self.buf[pos:end] = b"".join(values)
+        self.buf_len = end
+        self.starts.extend(starts)
+        self.lengths.extend(lens)
         kpos = len(self.key_buf)
-        scalar_ts = isinstance(timestamp_ms, int)
-        for i, v in enumerate(values):
-            self.starts.append(pos)
-            n = len(v)
-            self.lengths.append(n)
-            self.buf += v
-            pos += n
-            k = keys[i] if keys is not None else None
-            if k is None:
-                self.key_starts.append(kpos)
-                self.key_lengths.append(-1)
-            else:
-                self.key_starts.append(kpos)
-                self.key_lengths.append(len(k))
-                self.key_buf += k
-                kpos += len(k)
-            self.timestamps.append(timestamp_ms if scalar_ts else timestamp_ms[i])
-        self.count += len(values)
+        if keys is None:
+            self.key_starts.extend([kpos] * n)
+            self.key_lengths.extend([-1] * n)
+        else:
+            for k in keys:
+                if k is None:
+                    self.key_starts.append(kpos)
+                    self.key_lengths.append(-1)
+                else:
+                    self.key_starts.append(kpos)
+                    self.key_lengths.append(len(k))
+                    self.key_buf += k
+                    kpos += len(k)
+        if isinstance(timestamp_ms, int):
+            self.timestamps.extend([timestamp_ms] * n)
+        else:
+            self.timestamps.extend(timestamp_ms)
+        self.count += n
 
     def record(self, topic: str, partition: int, rel: int) -> Record:
         start = self.starts[rel]
@@ -210,9 +251,9 @@ class _Segment:
         import mmap
 
         with open(path, "wb") as f:
-            f.write(bytes(self.buf))
+            f.write(bytes(memoryview(self.buf)[: self.buf_len]))
             f.flush()
-        if len(self.buf) == 0:
+        if self.buf_len == 0:
             return
         fh = open(path, "rb")
         mm = mmap.mmap(fh.fileno(), 0, access=mmap.ACCESS_READ)
@@ -311,8 +352,12 @@ class _Partition:
     # ------------------------------------------------------------------- read
     @property
     def end_offset(self) -> int:
-        seg = self.segments[-1]
-        return seg.base_offset + seg.count
+        # taken under the partition lock so a concurrent append's segment
+        # roll can't be observed half-applied (the lock is reentrant, so
+        # read paths that already hold it are unaffected)
+        with self.lock:
+            seg = self.segments[-1]
+            return seg.base_offset + seg.count
 
     def _bounded_count(self, offset: int, max_records: int) -> int:
         """Validate ``offset`` against [log start, end]; return how many
@@ -431,6 +476,7 @@ class _Partition:
                     # BufferError. The old buffer lives until those views
                     # are dropped; new appends go to the rebuilt one.
                     seg.buf = seg.buf[: seg.starts[rel]]
+                    seg.buf_len = seg.starts[rel]
                     seg.key_buf = seg.key_buf[: seg.key_starts[rel]]
                 else:
                     # sealed mmap segment: can't shrink the map — record the
@@ -637,14 +683,17 @@ class StreamLog:
         topic: str,
         partition: int,
         values: Sequence[bytes],
-        keys: Sequence[bytes | None],
-        timestamps: Sequence[int],
+        keys: Sequence[bytes | None] | None,
+        timestamps: Sequence[int] | int,
     ) -> tuple[int, int]:
-        """Follower-side append of fetched leader records, preserving their
-        original timestamps — consumers see identical ``Record.timestamp_ms``
-        before and after failover, and ``retention_ms`` (keyed to record
+        """Append records with explicit timestamps (scalar or per-record).
+
+        Used by replication — a follower re-appends fetched leader records
+        verbatim so consumers see identical ``Record.timestamp_ms`` before
+        and after failover, and ``retention_ms`` (keyed to record
         timestamps in ``_enforce_retention``) expires the same records on
-        every replica."""
+        every replica — and by the cluster's leader-side append, which
+        stamps the batch once and pushes the same timestamps to the ISR."""
         return self._partition(topic, partition).append_batch(
             values, keys, timestamps
         )

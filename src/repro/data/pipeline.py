@@ -9,10 +9,16 @@ The glue between the distributed log and pjit'd compute:
 * :class:`StreamDataset` — the consumer side of Algorithm 1: given a
   control message, read the ranges back from the log, vector-decode them,
   and split train/eval by ``validation_rate`` (the paper's take/split).
-* :class:`BatchIterator` — shuffled epoch batching (host-side, numpy).
+* :class:`BatchIterator` — shuffled epoch batching (host-side, numpy),
+  with an optional bounded prefetch queue (``prefetch=k``) so batch
+  assembly for step ``i+1..i+k`` overlaps the device step for batch ``i``.
 * :class:`ShardedFeeder` — places host batches on the mesh with a named
-  sharding (batch axis over ``('pod','data')``) and prefetches one batch
-  ahead on a background thread so host decode overlaps device compute.
+  sharding (batch axis over ``('pod','data')``) and prefetches ``prefetch``
+  batches ahead on a background thread so host decode overlaps device
+  compute.
+* :func:`prefetch_iter` — the bounded background prefetch primitive both
+  of the above share (worker-thread + depth-bounded queue, exception
+  propagation, clean ``close()``).
 
 The pipeline is backend-agnostic: ``log`` may be a single-broker
 :class:`StreamLog` or a replicated
@@ -21,12 +27,16 @@ appends route to partition leaders (retrying transparently through leader
 elections), and at ``acks='all'`` every record named by the emitted control
 message is on the full ISR before the producer moves on — so the stream a
 control message announces survives the loss of any single broker.
+``ingest(num_threads=k)`` streams dataset shards from ``k`` producer
+threads to distinct partitions in parallel — the cluster's per-partition
+locking means the appends don't contend.
 """
 
 from __future__ import annotations
 
 import queue
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Iterator, Mapping, Sequence
 
@@ -38,7 +48,121 @@ from repro.core.control import ControlMessage, StreamRange, send_control
 from repro.core.log import StreamBackend
 from repro.data.formats import AvroCodec, RawCodec, codec_from_control
 
-__all__ = ["BatchIterator", "ShardedFeeder", "StreamDataset", "ingest"]
+__all__ = [
+    "BatchIterator",
+    "PrefetchIterator",
+    "ShardedFeeder",
+    "StreamDataset",
+    "ingest",
+    "prefetch_iter",
+]
+
+
+# ------------------------------------------------------------------ prefetch
+class PrefetchIterator:
+    """Bounded background prefetch over any iterator.
+
+    A worker thread drains ``it`` into a ``depth``-bounded queue; consuming
+    this iterator pops from the queue, so producing item ``i+1`` overlaps
+    consuming item ``i`` (log reads / host decode overlap device steps).
+    Worker exceptions re-raise at the consumer's ``next()`` — a failed
+    source never silently truncates the stream. ``close()`` stops the
+    worker even if it is blocked on a full queue (e.g. the consumer
+    abandoned an infinite stream mid-epoch); abandoning the iterator
+    without close() also stops it, via the garbage collector — the pump
+    is a staticmethod sharing only the queue/event/error box, never
+    ``self``, so a running worker does not pin the iterator alive.
+    """
+
+    _DONE = object()
+
+    def __init__(self, it: Iterator[Any], depth: int = 2):
+        self._queue: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._errbox: list[BaseException] = []
+        self._finished = False
+        self._thread = threading.Thread(
+            target=self._pump,
+            args=(iter(it), self._queue, self._stop, self._errbox, self._DONE),
+            daemon=True,
+        )
+        self._thread.start()
+
+    @staticmethod
+    def _pump(
+        it: Iterator[Any],
+        q: "queue.Queue",
+        stop: threading.Event,
+        errbox: list[BaseException],
+        done: Any,
+    ) -> None:
+        def put(item: Any) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        try:
+            for item in it:
+                if not put(item):
+                    return
+        except BaseException as e:  # propagated to the consumer
+            errbox.append(e)
+        put(done)
+
+    def __iter__(self) -> "PrefetchIterator":
+        return self
+
+    def __next__(self) -> Any:
+        # terminal states (source exhausted, error already delivered, or
+        # close()d) keep raising StopIteration instead of blocking on a
+        # queue no live worker will ever feed again
+        while not self._finished:
+            try:
+                item = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                if self._stop.is_set():
+                    self._finished = True
+                elif not self._thread.is_alive() and self._queue.empty():
+                    # a dead worker can't put again, so empty() is stable:
+                    # anything it produced before exiting (including the
+                    # _DONE sentinel carrying an error) was already drained
+                    self._finished = True
+            else:
+                if item is not self._DONE:
+                    return item
+                self._finished = True
+                if self._errbox:
+                    raise self._errbox.pop()
+        raise StopIteration
+
+    def close(self) -> None:
+        """Stop the worker and release the queue (idempotent)."""
+        self._stop.set()
+        self._finished = True
+        while True:  # unblock a worker stuck on put()
+            try:
+                self._queue.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __del__(self):  # abandoned without close(): stop the pump
+        try:
+            self._stop.set()
+        except Exception:
+            pass
+
+
+def prefetch_iter(it: Iterator[Any], depth: int) -> Iterator[Any]:
+    """Wrap ``it`` with a bounded background prefetch; ``depth <= 0`` is
+    a no-op passthrough (fully synchronous iteration)."""
+    if depth <= 0:
+        return iter(it)
+    return PrefetchIterator(it, depth)
 
 
 # --------------------------------------------------------------------- ingest
@@ -52,6 +176,7 @@ def ingest(
     validation_rate: float = 0.0,
     partition: int | None = None,
     message_set_size: int = 1024,
+    num_threads: int = 1,
     send_control_message: bool = True,
 ) -> ControlMessage:
     """Producer library: encode + stream a dataset, then announce it.
@@ -59,28 +184,68 @@ def ingest(
     Returns the control message (already sent to the control topic unless
     ``send_control_message=False``). The data lives only in the log —
     no file system (paper contribution #2).
+
+    ``num_threads > 1`` splits the encoded dataset into contiguous shards
+    and streams them from producer threads in parallel, each to its own
+    partition (``shard i -> partition i``) — on a cluster the appends
+    land on distinct partition locks and don't contend. Shard ranges are
+    emitted in shard order, so reading the control message back
+    reconstructs the original record order (the ``validation_rate`` tail
+    split is unchanged). The thread count is capped at the partition
+    count, and a pinned ``partition=`` forces single-threaded streaming:
+    threads sharing one partition would serialize on its lock anyway
+    while interleaving their chunks, fragmenting the range list the
+    control message carries.
     """
     log.ensure_topic(topic)
     encoded = codec.encode_batch(arrays)
     total = len(encoded)
-    ranges: list[StreamRange] = []
-    i = 0
-    cur: tuple[int, int, int] | None = None  # (partition, first, last)
-    while i < total:
-        chunk = encoded[i : i + message_set_size]
-        p, first, last = log.produce_batch(topic, chunk, partition=partition)
-        if cur is not None and cur[0] == p and first == cur[2] + 1:
-            cur = (p, cur[1], last)
-        else:
-            if cur is not None:
-                ranges.append(StreamRange(topic, cur[0], cur[1], cur[2] - cur[1] + 1))
-            cur = (p, first, last)
-        # stick to the chosen partition for the rest of the stream so the
-        # range list stays compact (Kafka sticky partitioner)
-        partition = p
-        i += message_set_size
-    if cur is not None:
-        ranges.append(StreamRange(topic, cur[0], cur[1], cur[2] - cur[1] + 1))
+
+    def produce_span(
+        span: Sequence[bytes], part: int | None
+    ) -> list[StreamRange]:
+        out: list[StreamRange] = []
+        cur: tuple[int, int, int] | None = None  # (partition, first, last)
+        i = 0
+        while i < len(span):
+            chunk = span[i : i + message_set_size]
+            p, first, last = log.produce_batch(topic, chunk, partition=part)
+            if cur is not None and cur[0] == p and first == cur[2] + 1:
+                cur = (p, cur[1], last)
+            else:
+                if cur is not None:
+                    out.append(
+                        StreamRange(topic, cur[0], cur[1], cur[2] - cur[1] + 1)
+                    )
+                cur = (p, first, last)
+            # stick to the chosen partition for the rest of the span so the
+            # range list stays compact (Kafka sticky partitioner)
+            part = p
+            i += message_set_size
+        if cur is not None:
+            out.append(StreamRange(topic, cur[0], cur[1], cur[2] - cur[1] + 1))
+        return out
+
+    num_threads = max(1, min(num_threads, total or 1))
+    if partition is not None:
+        num_threads = 1  # one partition serializes appends anyway
+    else:
+        num_threads = min(num_threads, log.num_partitions(topic))
+    if num_threads == 1:
+        ranges = produce_span(encoded, partition)
+    else:
+        per = -(-total // num_threads)  # ceil: contiguous, balanced shards
+        spans = [encoded[i : i + per] for i in range(0, total, per)]
+        with ThreadPoolExecutor(
+            max_workers=len(spans), thread_name_prefix="ingest"
+        ) as pool:
+            futs = [
+                pool.submit(produce_span, span, i)
+                for i, span in enumerate(spans)
+            ]
+            shard_ranges = [f.result() for f in futs]
+        # shard order == original record order (shards are contiguous)
+        ranges = [r for rs in shard_ranges for r in rs]
 
     msg = ControlMessage(
         deployment_id=deployment_id,
@@ -131,7 +296,14 @@ class StreamDataset:
 
 # -------------------------------------------------------------- BatchIterator
 class BatchIterator:
-    """Shuffled, epoch'd minibatches over host arrays (drop-remainder)."""
+    """Shuffled, epoch'd minibatches over host arrays (drop-remainder).
+
+    ``prefetch=k`` assembles up to ``k`` batches ahead on a background
+    thread (bounded queue), overlapping the gather/copy work with the
+    consumer's device steps. The batch *sequence* is identical either way
+    — prefetch changes when batches are built, not which or in what order
+    — so checkpoint/resume fast-forwarding stays deterministic.
+    """
 
     def __init__(
         self,
@@ -141,6 +313,7 @@ class BatchIterator:
         shuffle: bool = True,
         seed: int = 0,
         epochs: int | None = None,
+        prefetch: int = 0,
     ):
         sizes = {v.shape[0] for v in arrays.values()}
         if len(sizes) != 1:
@@ -153,8 +326,9 @@ class BatchIterator:
         self.shuffle = shuffle
         self.rng = np.random.default_rng(seed)
         self.epochs = epochs
+        self.prefetch = prefetch
 
-    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+    def _epochs(self) -> Iterator[dict[str, np.ndarray]]:
         epoch = 0
         while self.epochs is None or epoch < self.epochs:
             idx = (
@@ -165,17 +339,22 @@ class BatchIterator:
                 yield {k: v[sel] for k, v in self.arrays.items()}
             epoch += 1
 
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        return prefetch_iter(self._epochs(), self.prefetch)
+
     def steps_per_epoch(self) -> int:
         return self.n // self.batch_size
 
 
 # -------------------------------------------------------------- ShardedFeeder
 class ShardedFeeder:
-    """Device placement + 1-deep prefetch.
+    """Device placement + bounded prefetch.
 
     The batch axis is sharded over the mesh's data-parallel axes so each
-    device receives only its slice; host decode of batch ``i+1`` overlaps
-    device compute of batch ``i``.
+    device receives only its slice; host decode + device_put of batches
+    ``i+1..i+prefetch`` overlap device compute of batch ``i`` (via
+    :func:`prefetch_iter`, so a failing source raises at the consumer
+    instead of silently ending the stream).
     """
 
     def __init__(
@@ -196,24 +375,11 @@ class ShardedFeeder:
     def __call__(
         self, it: Iterator[Mapping[str, np.ndarray]]
     ) -> Iterator[dict[str, jax.Array]]:
-        if self.prefetch <= 0:
-            for b in it:
-                yield self.place(b)
-            return
-        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
-        _DONE = object()
-
-        def _worker() -> None:
-            try:
-                for b in it:
-                    q.put(self.place(b))
-            finally:
-                q.put(_DONE)
-
-        t = threading.Thread(target=_worker, daemon=True)
-        t.start()
-        while True:
-            item = q.get()
-            if item is _DONE:
-                break
-            yield item
+        placed = (self.place(b) for b in it)
+        stream = prefetch_iter(placed, self.prefetch)
+        try:
+            yield from stream
+        finally:
+            close = getattr(stream, "close", None)
+            if close is not None:
+                close()

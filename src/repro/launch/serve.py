@@ -73,7 +73,10 @@ def main():
         chunk = prompts[p * per : (p + 1) * per]
         if len(chunk):
             log.produce_batch("prompts", [r.tobytes() for r in chunk], partition=p)
-    served = infer.drain()
+    try:
+        served = infer.drain()
+    finally:
+        infer.close()
     print(f"served {served} prompts across "
           f"{ {r.replica_id: r.stats.processed for r in infer.replicas} }")
     print(f"{log.end_offset('completions', 0)} completions on the output topic")

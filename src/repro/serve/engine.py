@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Mapping
 
 import jax
@@ -102,19 +103,38 @@ class InferenceReplica:
 
     def poll_once(self, max_records: int = 256) -> int:
         """One loop iteration: read -> decode -> predict -> produce."""
+        return self.publish(self.poll_compute(max_records))
+
+    def poll_compute(self, max_records: int = 256) -> list[list[bytes]] | None:
+        """The parallel-safe half of a poll: read assigned partitions,
+        decode, predict — everything except publishing. Returns encoded
+        output batches for :meth:`publish`, or None if this replica is
+        dead. Splitting the tick lets a deployment run every replica's
+        compute concurrently while still publishing (and committing) in
+        replica order, so the output stream stays deterministic."""
         if not self.alive or self.replica_id not in self.consumer.group.members:
-            return 0
-        done = 0
+            return None
+        outs: list[list[bytes]] = []
         for batch in self.consumer.poll(max_records):
             mat = batch.to_matrix()
             # inference streams carry only the data fields; tolerate
             # full-record streams by slicing the data prefix
             data_bytes = sum(f.nbytes for f in getattr(self.codec, "data_fields", self.codec.fields[:-1]))
             decoded = _decode_data(self.codec, mat, data_bytes)
-            preds = self.predict_fn(decoded)
-            preds = np.asarray(preds)
-            out = [preds[i].tobytes() for i in range(preds.shape[0])]
+            preds = np.asarray(self.predict_fn(decoded))
+            outs.append([preds[i].tobytes() for i in range(preds.shape[0])])
+        return outs
+
+    def publish(self, outs: list[list[bytes]] | None) -> int:
+        """Produce computed predictions, then commit the read offsets —
+        commit-after-produce keeps delivery at-least-once (a crash between
+        the two re-polls the batch)."""
+        if outs is None:
+            return 0
+        done = 0
+        if outs:
             self.log.ensure_topic(self.output_topic)
+        for out in outs:
             self.log.produce_batch(self.output_topic, out, partition=0)
             self.stats.processed += len(out)
             self.stats.batches += 1
@@ -143,7 +163,17 @@ def _decode_data(codec, mat: np.ndarray, data_bytes: int) -> dict[str, np.ndarra
 
 
 class InferenceDeployment:
-    """The Replication Controller: N replicas on one consumer group."""
+    """The Replication Controller: N replicas on one consumer group.
+
+    ``parallel_poll=True`` (default) drives the replicas' compute phases
+    (read → decode → predict) concurrently from a worker pool: each
+    replica owns disjoint partitions (consumer-group range assignment),
+    so on a cluster with per-partition locking their reads don't contend
+    and one slow replica no longer stalls the whole tick's compute.
+    Outputs are then published — and offsets committed — serially in
+    replica order, so the output topic's record order is identical to a
+    serial tick's.
+    """
 
     def __init__(
         self,
@@ -156,6 +186,7 @@ class InferenceDeployment:
         output_topic: str,
         replicas: int = 2,
         session_timeout_s: float = 5.0,
+        parallel_poll: bool = True,
         clock=None,
     ):
         self.log = log
@@ -175,6 +206,8 @@ class InferenceDeployment:
         ]
         self.input_topic = input_topic
         self.output_topic = output_topic
+        self.parallel_poll = parallel_poll
+        self._pool: ThreadPoolExecutor | None = None
 
     def poll_all(self) -> int:
         """Drive every live replica one iteration (the K8s 'tick')."""
@@ -182,7 +215,42 @@ class InferenceDeployment:
             if r.alive and r.replica_id in self.group.members:
                 self.group.heartbeat(r.replica_id)
         self.group.expire_dead_members()
+        if self.parallel_poll and len(self.replicas) > 1:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=len(self.replicas),
+                    thread_name_prefix="replica-poll",
+                )
+            # compute in parallel, publish+commit in replica order. One
+            # replica's failure must not abandon siblings' already-polled
+            # work (their consumer positions advanced): publish every
+            # healthy result first, then re-raise the first error.
+            futs = [self._pool.submit(r.poll_compute) for r in self.replicas]
+            total = 0
+            first_err: BaseException | None = None
+            for r, f in zip(self.replicas, futs):
+                try:
+                    total += r.publish(f.result())
+                except BaseException as e:
+                    if first_err is None:
+                        first_err = e
+            if first_err is not None:
+                raise first_err
+            return total
         return sum(r.poll_once() for r in self.replicas)
+
+    def close(self) -> None:
+        """Release the polling pool (idempotent)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __del__(self):  # backstop for call sites that never close()
+        try:
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+        except Exception:
+            pass
 
     def kill_replica(self, idx: int) -> None:
         self.replicas[idx].kill()

@@ -252,6 +252,7 @@ class TrainingJob:
         epochs: int = 1,
         resume: bool = False,
         max_steps: int | None = None,
+        prefetch: int = 2,  # batches assembled ahead of the device step
         crash_after: int | None = None,  # fault-injection hook for tests
     ) -> TrainResult:
         msg = self.wait_for_control()
@@ -274,31 +275,40 @@ class TrainingJob:
             return {"params": new_params, "opt": new_opt}, metrics
 
         it = BatchIterator(
-            train_arrays, batch_size, seed=self.seed, epochs=None, shuffle=True
+            train_arrays, batch_size, seed=self.seed, epochs=None, shuffle=True,
+            prefetch=prefetch,
         )
         steps_per_epoch = it.steps_per_epoch()
         total = max_steps if max_steps is not None else epochs * steps_per_epoch
 
         metrics = {}
+        # batch assembly overlaps the device step (prefetch is a bounded
+        # background queue over the same deterministic batch sequence)
         stream = iter(it)
-        # deterministic resume: fast-forward the shuffled stream
-        for _ in range(start_step):
-            next(stream)
-        for step_i in range(start_step, total):
-            batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
-            state, m = step_fn(state, batch)
-            metrics = {k: float(v) for k, v in m.items()}
-            done = step_i + 1
-            if self.manager is not None and done % self.ckpt_every == 0:
-                self.manager.save_async(
-                    done,
-                    state,
-                    offsets={str(r): r.end for r in msg.ranges},
-                    meta={"next_step": done, "deployment_id": self.deployment_id},
-                )
-            if crash_after is not None and done >= crash_after:
-                self.manager and self.manager.wait()
-                raise RuntimeError(f"injected crash after step {done}")
+        try:
+            # deterministic resume: fast-forward the shuffled stream
+            for _ in range(start_step):
+                next(stream)
+            for step_i in range(start_step, total):
+                batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+                state, m = step_fn(state, batch)
+                metrics = {k: float(v) for k, v in m.items()}
+                done = step_i + 1
+                if self.manager is not None and done % self.ckpt_every == 0:
+                    self.manager.save_async(
+                        done,
+                        state,
+                        offsets={str(r): r.end for r in msg.ranges},
+                        meta={"next_step": done, "deployment_id": self.deployment_id},
+                    )
+                if crash_after is not None and done >= crash_after:
+                    self.manager and self.manager.wait()
+                    raise RuntimeError(f"injected crash after step {done}")
+        finally:
+            # the epochs=None stream is infinite: stop its prefetch worker
+            close = getattr(stream, "close", None)
+            if close is not None:
+                close()
         if self.manager is not None:
             self.manager.save_async(
                 total, state, offsets={str(r): r.end for r in msg.ranges},

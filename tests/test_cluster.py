@@ -96,6 +96,19 @@ class TestAdmin:
         with pytest.raises(KeyError):
             c.num_partitions("t")
 
+    def test_delete_topic_fences_inflight_holders(self):
+        """delete_topic offlines each partition ctl under its lock, so a
+        data-plane caller still holding the popped ctl gets a clean
+        PartitionOffline instead of appending into a recreated topic."""
+        c = make_cluster()
+        stale = c._meta[("t", 0)]
+        c.delete_topic("t")
+        assert stale.leader is None and stale.isr == set()
+        # recreate: the new incarnation is untouched by the stale ctl
+        c.create_topic("t", LogConfig(num_partitions=2, replication_factor=3))
+        c.produce_batch("t", [b"fresh"], partition=0, acks="all")
+        assert c.end_offset("t", 0) == 1
+
 
 class TestProduceConsume:
     def test_acks_all_roundtrip_all_replicas(self):

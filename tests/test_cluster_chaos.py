@@ -2,10 +2,16 @@
 
 The ISSUE acceptance criterion, end to end: with a 3-broker cluster at
 ``replication_factor=3``, killing the leader of any partition mid-stream
-loses zero acknowledged records at ``acks='all'``; consumer groups resume
-from committed offsets on the new leader; and a control-message replay of a
-pre-failure stream trains successfully end-to-end.
+loses zero acknowledged records at ``acks='all'`` — including with the
+background replication daemon running and real producer threads in
+flight; consumer groups resume from committed offsets on the new leader;
+follower reads keep an ``InferenceDeployment`` serving through a pending
+leader election; and a control-message replay of a pre-failure stream
+trains successfully end-to-end.
 """
+
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -13,11 +19,11 @@ import pytest
 import repro.core as core
 import repro.data as data
 from repro.configs import copd_mlp
-from repro.core.cluster import BrokerCluster, ClusterProducer
+from repro.core.cluster import BrokerCluster, ClusterError, ClusterProducer
 from repro.core.consumer import ConsumerGroup
 from repro.core.control import ControlLogger
 from repro.core.log import LogConfig, TopicPartition
-from repro.data.formats import AvroCodec, FieldSpec
+from repro.data.formats import AvroCodec, FieldSpec, RawCodec
 from repro.train import TrainingJob, adamw
 
 
@@ -143,6 +149,125 @@ def test_consumer_group_resumes_from_committed_offsets_on_new_leader():
                 assert batch.first_offset == committed
             resumed.extend(bytes(v) for v in batch.values)
     assert seen + resumed == [f"r{i}".encode() for i in range(total)]
+
+
+def test_daemon_zero_acked_loss_leader_killed_under_producer_threads():
+    """The tentpole acceptance scenario: background replication daemon
+    running, concurrent producer threads streaming at acks=all, and a
+    leader killed genuinely mid-stream (the kill is gated on both
+    producers being at most ~1/5 through their stream, so it always lands
+    with appends in flight) — every acknowledged record survives on the
+    survivors, exactly once, in order. One broker dies: the 2 survivors
+    keep min_insync_replicas=2 satisfiable, so acks=all never rejects."""
+    c = make_cluster(parts=2)
+    c.start_replication(interval_s=0.002, workers=2)
+    n_each, kill_at = 200, 40
+    acked: dict[int, list[bytes]] = {0: [], 1: []}
+    errors: list[BaseException] = []
+    reached_kill_point = threading.Barrier(3)  # 2 producers + killer
+
+    def produce(tid):
+        prod = ClusterProducer(c, acks="all", retries=10)
+        sent = 0
+        try:
+            while sent < n_each:
+                vals = [f"p{tid}-{sent + j}".encode() for j in range(4)]
+                try:
+                    prod.send_batch("copd", vals, partition=tid)
+                except ClusterError as e:  # un-acked: may or may not survive
+                    errors.append(e)
+                    reached_kill_point.abort()  # don't strand the waiters
+                    return
+                acked[tid].extend(vals)  # the ack happened: must survive
+                sent += 4
+                if sent == kill_at:
+                    # killer fires while we stream on; timed so a producer
+                    # failure breaks the barrier instead of hanging the run
+                    reached_kill_point.wait(timeout=60)
+        except BaseException as e:
+            errors.append(e)
+            reached_kill_point.abort()  # wake the other waiters to fail fast
+            raise
+
+    threads = [threading.Thread(target=produce, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    # both producers mid-stream, appends in flight
+    try:
+        reached_kill_point.wait(timeout=60)
+        c.kill_broker(c.leader_for("copd", 0))
+    except threading.BrokenBarrierError:
+        pass  # a producer failed early; the errors assert below reports it
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "producer hung"
+    assert errors == [], f"producers failed through failover: {errors}"
+    c.stop_replication()
+    for p, vals in acked.items():
+        assert len(vals) == n_each  # every send was acked
+        got = c.read_range("copd", p, 0, len(vals))
+        assert [bytes(v) for v in got.values] == vals, (
+            f"partition {p}: acked records lost/duplicated after leader kill"
+        )
+
+
+def test_follower_reads_keep_inference_serving_through_election():
+    """Kill the request topic's leader with the election deferred (the
+    controller-detection gap): in-sync follower reads keep every replica
+    answering, and once the daemon completes the election the deployment
+    keeps serving new requests from the new leader."""
+    from repro.serve import InferenceDeployment
+
+    c = BrokerCluster(3, default_acks="all")
+    c.create_topic("requests", LogConfig(num_partitions=2, replication_factor=3))
+    reg = core.Registry()
+    spec = reg.register_model("copd-mlp")
+    cfg = reg.create_configuration([spec.model_id])
+    dep = reg.deploy(cfg.config_id, "inference")
+    codec = RawCodec("float32", (3,), "int32", ())
+    reg.upload_result(
+        dep.deployment_id, spec.model_id, {}, {},
+        input_format=codec.FORMAT, input_config=codec.input_config(),
+    )
+    result_id = reg.results_for(dep.deployment_id)[-1].result_id
+    infer = InferenceDeployment(
+        c, reg, result_id, predict_fn=lambda d: d["data"][:, :1],
+        input_topic="requests", output_topic="preds", replicas=2,
+    )
+    try:
+        reqs = np.arange(120, dtype=np.float32).reshape(40, 3)
+        for p in range(2):
+            c.produce_batch(
+                "requests", [r.tobytes() for r in reqs[p * 20 : p * 20 + 20]],
+                partition=p, acks="all",
+            )
+        assert infer.poll_all() == 40  # serving normally before the failure
+
+        # 10 more requests acked at acks=all on partition 0, not yet polled
+        c.produce_batch(
+            "requests", [r.tobytes() for r in reqs[:10]], partition=0,
+        )
+        victim = c.leader_for("requests", 0)
+        c.kill_broker(victim, defer_election=True)
+        assert c.leader_for("requests", 0) == victim  # election pending
+        # the un-polled backlog sits below partition 0's HW with its leader
+        # dead: only an in-sync follower read can deliver it
+        served_during_election = infer.poll_all()
+        assert served_during_election >= 10  # replicas kept answering
+        assert c.leader_for("requests", 0) == victim  # still mid-election
+
+        with core.ReplicationService(c, interval_s=0.002):
+            deadline = time.monotonic() + 10
+            while c.leader_for("requests", 0) == victim:
+                assert time.monotonic() < deadline, "election never completed"
+                time.sleep(0.005)
+            # new leader serves new traffic end-to-end
+            c.produce_batch(
+                "requests", [r.tobytes() for r in reqs[10:20]], partition=0,
+            )
+            assert infer.drain() >= 10
+    finally:
+        infer.close()
 
 
 def test_stream_replay_to_new_deployment_after_failure():

@@ -1,0 +1,631 @@
+"""Concurrent data plane: per-partition locking, the replication daemon,
+follower reads, and the upper-layer parallelism that rides on them.
+
+Fast tier: follower reads never surface records above the high watermark;
+the background daemon advances HWs and completes deferred elections;
+prefetch iterators preserve order and propagate errors; the stable
+partitioner pins known key→partition mappings; parallel produce/ingest/
+poll paths stay correct. Slow tier: a producer×consumer stress test
+asserting no lost or duplicated offsets and HW monotonicity under real
+thread interleavings.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as core
+import repro.data as data
+from repro.core.cluster import (
+    BrokerCluster,
+    ClusterConsumer,
+    ClusterProducer,
+    NotLeaderError,
+    ReplicationService,
+)
+from repro.core.consumer import ConsumerGroup
+from repro.core.log import LogConfig, StreamLog, TopicPartition, default_partition
+from repro.data.formats import RawCodec
+from repro.data.pipeline import BatchIterator, PrefetchIterator, prefetch_iter
+
+
+def wait_until(cond, timeout=10.0, interval=0.005, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return
+        time.sleep(interval)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+def make_cluster(parts=2, **kw):
+    c = BrokerCluster(3, default_acks="all", **kw)
+    c.create_topic("t", LogConfig(num_partitions=parts, replication_factor=3))
+    return c
+
+
+# ------------------------------------------------------- stable partitioner
+class TestStablePartitioner:
+    def test_known_key_to_partition_mappings_pinned(self):
+        """CRC32 key routing is a cross-process contract: these mappings
+        must never change (Python's salted hash() would shift them every
+        run)."""
+        pinned = {
+            b"k": 1, b"key-0": 0, b"key-1": 2, b"key-2": 0,
+            b"alpha": 2, b"beta": 3,
+        }
+        for key, part in pinned.items():
+            assert default_partition([key], 4, 0) == part, key
+
+    def test_same_key_same_partition_on_log_and_cluster(self):
+        log = StreamLog()
+        log.create_topic("t", LogConfig(num_partitions=4))
+        c = BrokerCluster(3)
+        c.create_topic("t", LogConfig(num_partitions=4))
+        for key in (b"k", b"alpha", b"beta"):
+            p_log, _ = log.produce("t", b"v", key=key)
+            p_clu, _ = c.produce("t", b"v", key=key)
+            assert p_log == p_clu == default_partition([key], 4, 0)
+
+
+# ----------------------------------------------------------- follower reads
+class TestFollowerReads:
+    def test_follower_reads_never_return_records_above_hw(self):
+        """Fast-tier acceptance: an in-sync follower serves only below the
+        high watermark, even while the leader holds unreplicated records."""
+        c = make_cluster(parts=1)
+        c.produce_batch("t", [b"a", b"b"], partition=0, acks="all")  # hw=2
+        leader = c.leader_for("t", 0)
+        # leader-only suffix: above the HW until a replication pass runs
+        c.broker_append(leader, "t", 0, [b"x", b"y", b"z"], acks=1)
+        follower = next(
+            b for b in c.metadata("t")[0].replicas if b != leader
+        )
+        batch = c.broker_fetch(follower, "t", 0, 0, 100, allow_follower=True)
+        assert [bytes(v) for v in batch.values] == [b"a", b"b"]  # capped at hw
+        c.replicate_all()  # suffix replicates; hw advances to 5
+        batch = c.broker_fetch(follower, "t", 0, 0, 100, allow_follower=True)
+        assert len(batch) == 5
+
+    def test_follower_fetch_requires_flag_and_isr_membership(self):
+        c = make_cluster(parts=1)
+        c.produce_batch("t", [b"a"], partition=0, acks="all")
+        m = c.metadata("t")[0]
+        follower = next(b for b in m.replicas if b != m.leader)
+        with pytest.raises(NotLeaderError):
+            c.broker_fetch(follower, "t", 0, 0, 10)  # no flag -> leader only
+        # an out-of-sync replica must never serve: its log may diverge
+        c._ctl("t", 0).isr.discard(follower)
+        with pytest.raises(NotLeaderError):
+            c.broker_fetch(follower, "t", 0, 0, 10, allow_follower=True)
+
+    def test_cluster_consumer_falls_back_to_follower_on_dead_leader(self):
+        c = make_cluster(parts=1)
+        msgs = [f"m{i}".encode() for i in range(40)]
+        c.produce_batch("t", msgs, partition=0, acks="all")
+        cons = ClusterConsumer(c, follower_reads=True)
+        assert len(cons.fetch("t", 0, 0, 100)) == 40  # caches the leader
+        # leader dies; controller hasn't noticed (deferred election)
+        c.kill_broker(c.leader_for("t", 0), defer_election=True)
+        batch = cons.fetch("t", 0, 10, 100)
+        assert [bytes(v) for v in batch.values] == msgs[10:]
+        assert cons.follower_fetches >= 1
+
+    def test_facade_read_serves_below_hw_while_election_pending(self):
+        """The StreamBackend read path keeps answering from an in-sync
+        follower while the dead leader awaits election — and recovers to
+        the new leader afterwards."""
+        c = make_cluster(parts=1)
+        msgs = [f"m{i}".encode() for i in range(30)]
+        c.produce_batch("t", msgs, partition=0, acks="all")
+        old_leader = c.leader_for("t", 0)
+        c.kill_broker(old_leader, defer_election=True)
+        assert c.leader_for("t", 0) == old_leader  # election still pending
+        got = c.read("t", 0, 0, 100)
+        assert [bytes(v) for v in got.values] == msgs
+        c.replicate_all()  # the daemon's pass completes the election
+        assert c.leader_for("t", 0) != old_leader
+        assert [bytes(v) for v in c.read("t", 0, 0, 100).values] == msgs
+
+
+# ------------------------------------------------------- replication daemon
+class TestReplicationService:
+    def test_daemon_advances_hw_without_explicit_ticks(self):
+        c = make_cluster(parts=2)
+        svc = c.start_replication(interval_s=0.002)
+        try:
+            leader = c.leader_for("t", 0)
+            c.broker_append(leader, "t", 0, [b"a", b"b", b"c"], acks=1)
+            wait_until(
+                lambda: c.metadata("t")[0].high_watermark == 3,
+                msg="daemon HW advance",
+            )
+        finally:
+            c.stop_replication()
+        assert svc.errors == []
+        assert not svc.running
+
+    def test_daemon_completes_deferred_election(self):
+        c = make_cluster(parts=1)
+        c.produce_batch("t", [b"x"], partition=0, acks="all")
+        with ReplicationService(c, interval_s=0.002) as svc:
+            victim = c.leader_for("t", 0)
+            c.kill_broker(victim, defer_election=True)
+            wait_until(
+                lambda: (
+                    c.leader_for("t", 0) not in (victim, None)
+                    and c.brokers[c.leader_for("t", 0)].up
+                ),
+                msg="background election",
+            )
+        assert svc.errors == []
+
+    def test_start_stop_idempotent(self):
+        c = make_cluster(parts=1)
+        svc = ReplicationService(c, interval_s=0.01)
+        assert svc.start() is svc.start()
+        assert svc.running
+        svc.stop()
+        svc.stop()
+        assert not svc.running
+        # restartable after stop
+        svc.start()
+        assert svc.running
+        svc.stop()
+
+    def test_read_range_forces_pass_when_daemon_hw_is_stale(self):
+        """With a daemon registered but between ticks, a read_range that
+        falls short on a stale HW must force one replication pass and
+        serve, not raise a spurious OffsetOutOfRange."""
+        c = make_cluster(parts=1)
+        c.produce_batch("t", [b"a"] * 5, partition=0, acks="all")  # hw=5
+        leader = c.leader_for("t", 0)
+        c.broker_append(leader, "t", 0, [b"b"] * 5, acks=1)  # leo=10, hw=5
+        # pose as a running daemon that never ticks: deterministic staleness
+        svc = ReplicationService(c, interval_s=60.0)
+        svc._threads = [threading.main_thread()]
+        c._services.append(svc)
+        try:
+            assert c._daemon_active
+            got = c.read_range("t", 0, 0, 10)
+            assert len(got) == 10
+        finally:
+            c._services = []
+
+    def test_workers_exit_when_cluster_dropped_without_stop(self):
+        """The daemon holds its cluster weakly: dropping the last outside
+        reference (without calling stop_replication) lets the cluster be
+        collected and the workers exit on their next sweep."""
+        import gc
+
+        c = make_cluster(parts=1)
+        svc = c.start_replication(interval_s=0.01)
+        threads = list(svc._threads)
+        del c
+        gc.collect()
+        deadline = time.monotonic() + 5
+        while any(t.is_alive() for t in threads) and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert not any(t.is_alive() for t in threads)
+        assert svc.cluster is None
+
+    def test_daemon_keeps_acked_records_on_isr_through_acks1_traffic(self):
+        """acks=1 appends interleaved with daemon passes must still leave
+        every replica converged once traffic stops."""
+        c = make_cluster(parts=1)
+        with ReplicationService(c, interval_s=0.001):
+            for i in range(50):
+                c.produce_batch("t", [f"r{i}".encode()], partition=0, acks=1)
+            wait_until(
+                lambda: c.metadata("t")[0].high_watermark == 50,
+                msg="daemon catch-up",
+            )
+        for b in c.metadata("t")[0].replicas:
+            assert c.brokers[b].log.end_offset("t", 0) == 50
+
+
+# ----------------------------------------------------- mid-append failures
+class TestMidAppendLeaderDeath:
+    def test_committed_batch_acked_once_when_pushed_follower_wins_election(self):
+        """Leader dies between its local append and the commit, with one
+        follower mid-epoch-reconciliation (normal post-election state):
+        the direct-pushed follower wins the election, so the batch IS
+        committed — the ack must be given (hw > last), not withheld, or
+        the client retry would append the acked records a second time."""
+        c = make_cluster(parts=1)  # replicas [0,1,2], leader 0
+        c.produce_batch("t", [b"base"], partition=0, acks="all")
+        ctl = c._meta[("t", 0)]
+        # post-election shape: follower 1 current, follower 2 missed the
+        # epoch (still in ISR, reconciles on its next fetch)
+        ctl.epoch += 1
+        ctl.epoch_starts[ctl.epoch] = 1
+        ctl.synced_epoch[0] = ctl.epoch
+        ctl.synced_epoch[1] = ctl.epoch
+
+        orig = c._commit_batch
+        died = []
+
+        def dying_commit(ctl, values, keys, now_ms, first, last):
+            if not died:
+                died.append(0)
+                c.brokers[0].alive = False  # dies append -> commit
+            orig(ctl, values, keys, now_ms, first, last)
+
+        c._commit_batch = dying_commit
+        prod = ClusterProducer(c, acks="all")
+        p, first, last = prod.send_batch("t", [b"x1", b"x2"], partition=0)
+        assert died and (first, last) == (1, 2)
+        assert ctl.hw == 3  # committed on the new leader (the pushed follower)
+        got = c.read_range("t", 0, 0, 3)
+        assert [bytes(v) for v in got.values] == [b"base", b"x1", b"x2"]
+        assert c.end_offset("t", 0) == 3  # exactly once — no retry duplicate
+        # the deposed leader reconciles and converges on rejoin
+        c.restart_broker(0)
+        c.replicate_all()
+        assert c.brokers[0].log.end_offset("t", 0) == 3
+
+    def test_uncommitted_batch_not_acked_when_unpushed_follower_wins(self):
+        """Same death, but the election winner never received the batch:
+        the ack must be withheld (hw <= last) and the client retry lands
+        the records on the new leader — zero acked loss, zero duplicates."""
+        c = make_cluster(parts=1)
+        c.produce_batch("t", [b"base"], partition=0, acks="all")
+        ctl = c._meta[("t", 0)]
+        ctl.epoch += 1
+        ctl.epoch_starts[ctl.epoch] = 1
+        ctl.synced_epoch[0] = ctl.epoch  # leader current
+        # followers 1 and 2 both stale: the winner won't have the batch
+
+        orig = c._commit_batch
+        died = []
+
+        def dying_commit(ctl, values, keys, now_ms, first, last):
+            if not died:
+                died.append(0)
+                c.brokers[0].alive = False
+            orig(ctl, values, keys, now_ms, first, last)
+
+        c._commit_batch = dying_commit
+        prod = ClusterProducer(c, acks="all")
+        p, first, last = prod.send_batch("t", [b"x1", b"x2"], partition=0)
+        assert died and (first, last) == (1, 2)  # acked on the retry
+        got = c.read_range("t", 0, 0, 3)
+        assert [bytes(v) for v in got.values] == [b"base", b"x1", b"x2"]
+        assert c.end_offset("t", 0) == 3
+
+
+def test_restart_broker_with_deferred_dead_leader_mirrors_offsets():
+    """A rejoin that hits an offline partition (recorded leader dead with
+    the election deferred, no other live ISR member) must skip it and
+    still mirror the replicated offset store onto the restarted broker."""
+    c = BrokerCluster(2)
+    c.create_topic("t", LogConfig(num_partitions=1, replication_factor=2))
+    a = c.leader_for("t", 0)
+    b = 1 - a
+    tp = TopicPartition("t", 0)
+    c.commit_offset("g", tp, 5)
+    c.kill_broker(b)
+    c.kill_broker(a, defer_election=True)  # leader stays pointed at dead a
+    c.restart_broker(b)  # must not raise PartitionOffline
+    assert c.brokers[b].log.committed_offset("g", tp) == 5
+
+
+# ------------------------------------------------------ parallel data plane
+class TestParallelProduce:
+    def test_threaded_producers_to_distinct_partitions_lose_nothing(self):
+        c = BrokerCluster(3, default_acks="all")
+        c.create_topic("t", LogConfig(num_partitions=4, replication_factor=3))
+        n_each = 60
+
+        def run(tid):
+            prod = ClusterProducer(c, acks="all")
+            for j in range(n_each):
+                prod.send_batch("t", [f"p{tid}-{j}".encode()], partition=tid)
+
+        threads = [threading.Thread(target=run, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for p in range(4):
+            got = c.read_range("t", p, 0, n_each)
+            assert [bytes(v) for v in got.values] == [
+                f"p{p}-{j}".encode() for j in range(n_each)
+            ]
+
+    def test_ingest_num_threads_roundtrip_preserves_order(self):
+        log = StreamLog()
+        log.create_topic("t", LogConfig(num_partitions=4))
+        codec = RawCodec("float32", (3,), "int32", ())
+        n = 203
+        arrays = {
+            "data": np.arange(n * 3, dtype=np.float32).reshape(n, 3),
+            "label": np.arange(n, dtype=np.int32),
+        }
+        msg = data.ingest(
+            log, "t", codec, arrays, "D",
+            validation_rate=0.2, message_set_size=16, num_threads=4,
+        )
+        assert msg.total_msg == n
+        assert sum(r.length for r in msg.ranges) == n
+        # shards map to distinct partitions
+        assert len({r.partition for r in msg.ranges}) == 4
+        got = data.StreamDataset(log, msg).read()
+        np.testing.assert_array_equal(got["label"], arrays["label"])
+        np.testing.assert_array_equal(got["data"], arrays["data"])
+
+    def test_ingest_num_threads_on_cluster(self):
+        c = BrokerCluster(3, default_acks="all")
+        c.create_topic("t", LogConfig(num_partitions=4, replication_factor=3))
+        codec = RawCodec("float32", (2,), "int32", ())
+        n = 120
+        arrays = {
+            "data": np.arange(n * 2, dtype=np.float32).reshape(n, 2),
+            "label": np.arange(n, dtype=np.int32),
+        }
+        msg = data.ingest(c, "t", codec, arrays, "D", message_set_size=8,
+                          num_threads=4)
+        got = data.StreamDataset(c, msg).read()
+        np.testing.assert_array_equal(got["label"], arrays["label"])
+
+
+# ----------------------------------------------------------------- prefetch
+class TestPrefetch:
+    def test_prefetch_preserves_order_and_content(self):
+        src = list(range(100))
+        assert list(prefetch_iter(iter(src), 4)) == src
+
+    def test_depth_zero_is_passthrough(self):
+        it = prefetch_iter(iter([1, 2]), 0)
+        assert not isinstance(it, PrefetchIterator)
+        assert list(it) == [1, 2]
+
+    def test_worker_exception_propagates_to_consumer(self):
+        def gen():
+            yield 1
+            raise ValueError("boom")
+
+        it = prefetch_iter(gen(), 2)
+        assert next(it) == 1
+        with pytest.raises(ValueError, match="boom"):
+            next(it)
+
+    def test_close_stops_worker_on_infinite_stream(self):
+        def forever():
+            i = 0
+            while True:
+                yield i
+                i += 1
+
+        it = prefetch_iter(forever(), 2)
+        assert next(it) == 0
+        it.close()
+        assert not it._thread.is_alive()
+        # terminal after close: StopIteration, never a blocked get()
+        with pytest.raises(StopIteration):
+            next(it)
+
+    def test_next_after_propagated_error_raises_stop_iteration(self):
+        def gen():
+            raise ValueError("boom")
+            yield  # pragma: no cover
+
+        it = prefetch_iter(gen(), 2)
+        with pytest.raises(ValueError):
+            next(it)
+        with pytest.raises(StopIteration):  # error delivered once, then done
+            next(it)
+
+    def test_abandoned_iterator_worker_exits_after_gc(self):
+        """A consumer that breaks out of a prefetched loop and drops the
+        iterator (never calling close()) must not leave the pump thread
+        spinning: the pump holds no reference to the iterator, so GC runs
+        __del__, which stops it."""
+        import gc
+
+        def forever():
+            i = 0
+            while True:
+                yield i
+                i += 1
+
+        it = prefetch_iter(forever(), 2)
+        assert next(it) == 0
+        thread = it._thread
+        del it
+        gc.collect()
+        deadline = time.monotonic() + 5
+        while thread.is_alive() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert not thread.is_alive()
+
+    def test_batch_iterator_prefetch_matches_synchronous(self):
+        arrays = {"x": np.arange(40)}
+        plain = [b["x"] for b in BatchIterator(arrays, 10, seed=3, epochs=2)]
+        pre_it = BatchIterator(arrays, 10, seed=3, epochs=2, prefetch=3)
+        pre = [b["x"] for b in pre_it]
+        assert len(plain) == len(pre) == 8
+        for a, b in zip(plain, pre):
+            np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------ serving layer
+def _fabricated_result(reg):
+    spec = reg.register_model("copd-mlp")
+    cfg = reg.create_configuration([spec.model_id])
+    dep = reg.deploy(cfg.config_id, "inference")
+    codec = RawCodec("float32", (3,), "int32", ())
+    reg.upload_result(
+        dep.deployment_id, spec.model_id, {}, {},
+        input_format=codec.FORMAT, input_config=codec.input_config(),
+    )
+    return reg.results_for(dep.deployment_id)[-1].result_id
+
+
+class TestParallelPolling:
+    def _deployment(self, log, parallel):
+        from repro.serve import InferenceDeployment
+
+        reg = core.Registry()
+        return InferenceDeployment(
+            log, reg, _fabricated_result(reg),
+            predict_fn=lambda d: d["data"][:, :1],
+            input_topic="requests", output_topic="preds",
+            replicas=2, parallel_poll=parallel,
+        )
+
+    @pytest.mark.parametrize("parallel", [False, True])
+    def test_poll_all_processes_every_request(self, parallel):
+        log = StreamLog()
+        log.create_topic("requests", LogConfig(num_partitions=2))
+        infer = self._deployment(log, parallel)
+        reqs = np.arange(60, dtype=np.float32).reshape(20, 3)
+        log.produce_batch("requests", [r.tobytes() for r in reqs[:10]], partition=0)
+        log.produce_batch("requests", [r.tobytes() for r in reqs[10:]], partition=1)
+        try:
+            assert infer.drain() == 20
+            assert log.end_offset("preds", 0) == 20
+        finally:
+            infer.close()
+
+    def test_parallel_poll_output_order_matches_serial(self):
+        """Parallel ticks publish in replica order, so the output topic's
+        record order is identical to a serial deployment's."""
+        outs = {}
+        for parallel in (False, True):
+            log = StreamLog()
+            log.create_topic("requests", LogConfig(num_partitions=2))
+            infer = self._deployment(log, parallel)
+            reqs = np.arange(60, dtype=np.float32).reshape(20, 3)
+            log.produce_batch("requests", [r.tobytes() for r in reqs[:10]], partition=0)
+            log.produce_batch("requests", [r.tobytes() for r in reqs[10:]], partition=1)
+            try:
+                infer.drain()
+            finally:
+                infer.close()
+            outs[parallel] = [
+                bytes(v) for v in log.read("preds", 0, 0, 100).values
+            ]
+        assert outs[True] == outs[False]
+
+    def test_parallel_poll_publishes_healthy_replicas_when_one_fails(self):
+        """One replica's failed predict must not discard a sibling's
+        already-polled work: healthy outputs publish, then the error
+        surfaces."""
+        from repro.serve import InferenceDeployment
+
+        log = StreamLog()
+        log.create_topic("requests", LogConfig(num_partitions=2))
+        reg = core.Registry()
+
+        def predict(d):
+            if np.any(d["data"] < 0):
+                raise RuntimeError("poisoned batch")
+            return d["data"][:, :1]
+
+        infer = InferenceDeployment(
+            log, reg, _fabricated_result(reg), predict_fn=predict,
+            input_topic="requests", output_topic="preds",
+            replicas=2, parallel_poll=True,
+        )
+        bad = -np.ones((10, 3), dtype=np.float32)
+        good = np.ones((10, 3), dtype=np.float32)
+        log.produce_batch("requests", [r.tobytes() for r in bad], partition=0)
+        log.produce_batch("requests", [r.tobytes() for r in good], partition=1)
+        try:
+            with pytest.raises(RuntimeError, match="poisoned"):
+                infer.poll_all()
+            # the healthy replica's predictions still reached the output
+            assert log.end_offset("preds", 0) == 10
+        finally:
+            infer.close()
+
+
+# -------------------------------------------------------------- stress test
+@pytest.mark.slow
+def test_stress_concurrent_produce_consume_no_loss_no_dup():
+    """N producer threads + M group consumers + the replication daemon on
+    one cluster: every produced record lands exactly once per partition in
+    produced order, the high watermark never regresses, and the consumer
+    group sees exactly the produced set."""
+    c = BrokerCluster(3, default_acks="all")
+    parts, n_producers, n_each = 4, 4, 250
+    c.create_topic("t", LogConfig(num_partitions=parts, replication_factor=3))
+    c.start_replication(interval_s=0.002, workers=2)
+    stop_monitor = threading.Event()
+    hw_regressions: list[tuple] = []
+
+    def monitor():
+        last = {p: 0 for p in range(parts)}
+        while not stop_monitor.is_set():
+            for p, m in c.metadata("t").items():
+                if m.high_watermark < last[p]:
+                    hw_regressions.append((p, last[p], m.high_watermark))
+                last[p] = m.high_watermark
+            time.sleep(0.002)
+
+    def produce(tid):
+        prod = ClusterProducer(c, acks="all")
+        sent = 0
+        while sent < n_each:
+            n = min(8, n_each - sent)
+            vals = [f"p{tid}-{sent + j}".encode() for j in range(n)]
+            prod.send_batch("t", vals, partition=tid % parts)
+            sent += n
+
+    group = ConsumerGroup(c, "stress", ["t"])
+    members = [group.join(f"m{i}") for i in range(2)]
+    consumed: dict[int, list[bytes]] = {p: [] for p in range(parts)}
+    consumed_lock = threading.Lock()
+    total = n_producers * n_each
+    done_consuming = threading.Event()
+
+    def consume(member):
+        while not done_consuming.is_set():
+            got_any = False
+            for batch in member.poll(max_records=64):
+                got_any = True
+                with consumed_lock:
+                    consumed[batch.partition].extend(
+                        bytes(v) for v in batch.values
+                    )
+            member.commit()
+            with consumed_lock:
+                if sum(len(v) for v in consumed.values()) >= total:
+                    done_consuming.set()
+            if not got_any:
+                time.sleep(0.002)
+
+    threads = (
+        [threading.Thread(target=monitor)]
+        + [threading.Thread(target=produce, args=(i,)) for i in range(n_producers)]
+        + [threading.Thread(target=consume, args=(m,)) for m in members]
+    )
+    for t in threads[1:]:
+        t.start()
+    threads[0].start()
+    for t in threads[1 : 1 + n_producers]:
+        t.join(timeout=60)
+        assert not t.is_alive(), "producer hung"
+    assert done_consuming.wait(timeout=60), (
+        f"consumers drained only "
+        f"{sum(len(v) for v in consumed.values())}/{total} records"
+    )
+    for t in threads[1 + n_producers :]:
+        t.join(timeout=10)
+    stop_monitor.set()
+    threads[0].join(timeout=10)
+    c.stop_replication()
+
+    assert hw_regressions == [], f"HW regressed: {hw_regressions}"
+    # per partition: log contents are exactly the one producer's records in
+    # order (offsets contiguous, nothing lost, nothing duplicated)
+    for p in range(parts):
+        expect = [f"p{p}-{j}".encode() for j in range(n_each)]
+        got = c.read_range("t", p, 0, n_each)
+        assert [bytes(v) for v in got.values] == expect, f"partition {p}"
+        assert c.end_offset("t", p) == n_each
+        # consumer group saw exactly the produced set, in order
+        assert consumed[p] == expect, f"partition {p} consumer view"
