@@ -1,0 +1,128 @@
+"""CI regression gate over ``BENCH_replication.json`` (stdlib only).
+
+Two checks, wired into the nightly CI job right after the benchmark run
+(`.github/workflows/ci.yml`):
+
+* **schema** — the result file must carry every section the benchmark
+  writes (``config`` / ``single`` / ``contended`` / ``speedup_4threads``
+  / ``controller``) with sane values, so a silently truncated or
+  hand-edited file fails loudly;
+* **throughput floor** — contended-producer throughput at 4 threads
+  (rf=3, acks=all — the PR-2 acceptance configuration) must not regress
+  more than ``TOLERANCE`` (20%) below the recorded PR-2 baseline; the
+  absolute baseline is hardware-specific (``--baseline`` overrides it on
+  other machines), so the gate also enforces the hardware-independent
+  relative floor ``speedup_4threads >= MIN_SPEEDUP_4T`` (concurrent vs
+  global-lock data plane, measured in the same run).
+
+Exit code 0 on pass, 1 on any failure (the CI job fails on non-zero).
+
+    python benchmarks/check_bench.py [BENCH_replication.json]
+        [--baseline MSGS_PER_S] [--tolerance FRACTION]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Recorded PR-2 baseline for contended_t4_rf3_acksall (msgs/s) on the
+# reference container; override with --baseline when gating on different
+# hardware.
+PR2_BASELINE_MSGS_PER_S = 553_112.33
+TOLERANCE = 0.20
+# hardware-independent floor: the concurrent data plane must stay at
+# least this much faster than the same run's global-lock baseline
+MIN_SPEEDUP_4T = 1.5
+
+ACCEPTANCE_KEY = "contended_t4_rf3_acksall"
+
+REQUIRED_SECTIONS = ("config", "single", "contended", "speedup_4threads",
+                     "controller")
+REQUIRED_CONTENDED = (
+    "contended_t1_rf3_acksall",
+    "contended_t4_rf3_acksall",
+    "contended_t4_rf3_acksall_globallock",
+)
+
+
+def check(results: dict, baseline: float, tolerance: float) -> list[str]:
+    """Return a list of failure messages (empty == pass)."""
+    failures: list[str] = []
+    for key in REQUIRED_SECTIONS:
+        if key not in results:
+            failures.append(f"schema: missing top-level section {key!r}")
+    contended = results.get("contended", {})
+    for key in REQUIRED_CONTENDED:
+        row = contended.get(key)
+        if not isinstance(row, dict) or row.get("msgs_per_s", 0) <= 0:
+            failures.append(f"schema: contended[{key!r}] missing or non-positive")
+    single = results.get("single", {})
+    if not isinstance(single.get("bare_streamlog"), dict):
+        failures.append("schema: single['bare_streamlog'] missing")
+    speedup = results.get("speedup_4threads")
+    if not isinstance(speedup, (int, float)) or speedup <= 0:
+        failures.append("schema: speedup_4threads missing or non-positive")
+    elif speedup < MIN_SPEEDUP_4T:
+        failures.append(
+            f"regression: speedup_4threads {speedup:.2f}x below the "
+            f"relative floor {MIN_SPEEDUP_4T:.1f}x (concurrent vs "
+            "global-lock, same hardware)"
+        )
+    controller = results.get("controller", {})
+    failover = controller.get("failover", {}) if isinstance(controller, dict) else {}
+    if not isinstance(failover, dict) or failover.get("best_s", 0) <= 0:
+        failures.append("schema: controller['failover']['best_s'] missing "
+                        "or non-positive")
+
+    row = contended.get(ACCEPTANCE_KEY)
+    if isinstance(row, dict) and row.get("msgs_per_s", 0) > 0:
+        got = row["msgs_per_s"]
+        floor = (1.0 - tolerance) * baseline
+        if got < floor:
+            failures.append(
+                f"regression: {ACCEPTANCE_KEY} = {got:,.0f} msgs/s is "
+                f"{100 * (1 - got / baseline):.1f}% below the recorded "
+                f"baseline {baseline:,.0f} (floor {floor:,.0f}, "
+                f"tolerance {tolerance:.0%})"
+            )
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("json_path", nargs="?", default="BENCH_replication.json")
+    ap.add_argument("--baseline", type=float, default=PR2_BASELINE_MSGS_PER_S,
+                    help="baseline msgs/s for the acceptance config "
+                         "(default: recorded PR-2 value)")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE,
+                    help="allowed fractional regression (default 0.20)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.json_path) as f:
+            results = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench: FAIL — cannot read {args.json_path}: {e}")
+        return 1
+
+    failures = check(results, args.baseline, args.tolerance)
+    if failures:
+        for msg in failures:
+            print(f"check_bench: FAIL — {msg}")
+        return 1
+
+    got = results["contended"][ACCEPTANCE_KEY]["msgs_per_s"]
+    fo = results["controller"]["failover"]["best_s"]
+    print(
+        f"check_bench: OK — {ACCEPTANCE_KEY} {got:,.0f} msgs/s "
+        f"(baseline {args.baseline:,.0f}, tolerance {args.tolerance:.0%}); "
+        f"speedup_4threads {results['speedup_4threads']:.2f}x; "
+        f"controller failover {fo * 1e3:.1f} ms"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

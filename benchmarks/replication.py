@@ -1,7 +1,7 @@
-"""Replication microbenchmarks: throughput vs rf/acks, and producer
-contention on the concurrent data plane.
+"""Replication microbenchmarks: throughput vs rf/acks, producer
+contention on the concurrent data plane, and controller-failover latency.
 
-Two sections:
+Three sections:
 
 * **single** — append throughput vs replication factor and acks on one
   producer thread, relative to the bare single-broker log (the
@@ -13,6 +13,12 @@ Two sections:
   synchronous replication) as the baseline. ``speedup_4threads`` is the
   acceptance ratio: concurrent vs global-lock at 4 threads, rf=3,
   acks=all.
+* **controller** — quorum-controller failover latency: with the
+  replication daemon ticking the control plane, kill the controller
+  leader AND a partition leader in the same tick (the partition election
+  deferred, so only a newly elected controller can complete it) and
+  measure the time until a successor controller has committed the
+  partition's new leadership. Best/mean/worst over ``CTRL_REPS`` runs.
 
 Every config runs ``REPS`` times and reports the best run — the host is
 shared, and scheduling noise only ever makes a run slower, so the minimum
@@ -30,7 +36,7 @@ import json
 import time
 from concurrent.futures import ThreadPoolExecutor
 
-from repro.core.cluster import BrokerCluster, ClusterProducer
+from repro.core.cluster import BrokerCluster, ClusterProducer, ReplicationService
 from repro.core.log import LogConfig, StreamLog
 
 RECORD_BYTES = 1024
@@ -42,6 +48,10 @@ C_BATCH = 256
 C_BATCHES = 480  # total across all threads per contended config
 C_PARTS = 4
 REPS = 3
+
+CTRL_REPS = 5
+CTRL_LEASE_S = 0.05
+CTRL_DAEMON_INTERVAL_S = 0.002
 
 OUT_JSON = "BENCH_replication.json"
 
@@ -121,6 +131,53 @@ def bench_contended(
     return best
 
 
+# ------------------------------------------------------ controller failover
+def _controller_failover_once() -> float:
+    """One double-kill failover: controller leader + partition leader die
+    in the same tick; returns seconds until a successor controller has
+    committed new partition leadership (the daemon does all the work)."""
+    cluster = BrokerCluster(
+        3, default_acks="all", controller_lease_s=CTRL_LEASE_S
+    )
+    cluster.create_topic(
+        "bench", LogConfig(num_partitions=1, replication_factor=3)
+    )
+    prod = ClusterProducer(cluster, acks="all")
+    prod.send_batch("bench", [bytes(C_RECORD_BYTES)] * 64, partition=0)
+    with ReplicationService(
+        cluster, interval_s=CTRL_DAEMON_INTERVAL_S, workers=2
+    ):
+        victim = cluster.leader_for("bench", 0)
+        t0 = time.perf_counter()
+        cluster.kill_controller()
+        cluster.kill_broker(victim, defer_election=True)
+        deadline = t0 + 30.0
+        while cluster.leader_for("bench", 0) == victim:
+            if time.perf_counter() > deadline:
+                # fail fast with state instead of stalling the nightly job
+                raise RuntimeError(
+                    "controller failover never completed: "
+                    f"{cluster.controller.describe()}"
+                )
+            time.sleep(0.0002)
+        dt = time.perf_counter() - t0
+    # sanity: the new leader accepts acks=all traffic end to end
+    prod.send_batch("bench", [b"post-failover"], partition=0)
+    return dt
+
+
+def bench_controller_failover() -> dict[str, float]:
+    times = [_controller_failover_once() for _ in range(CTRL_REPS)]
+    return {
+        "best_s": min(times),
+        "mean_s": sum(times) / len(times),
+        "worst_s": max(times),
+        "reps": CTRL_REPS,
+        "lease_s": CTRL_LEASE_S,
+        "daemon_interval_s": CTRL_DAEMON_INTERVAL_S,
+    }
+
+
 def main() -> None:
     results: dict = {
         "config": {
@@ -172,6 +229,12 @@ def main() -> None:
     old4 = results["contended"]["contended_t4_rf3_acksall_globallock"]["msgs_per_s"]
     results["speedup_4threads"] = new4 / old4
     _row("contended_speedup_4threads", 0.0, f"{new4 / old4:.2f}x_vs_global_lock")
+
+    # controller-leader + partition-leader double-kill failover latency
+    fo = bench_controller_failover()
+    results["controller"] = {"failover": fo}
+    _row("controller_failover", fo["best_s"],
+         f"{fo['best_s'] * 1e3:.1f}ms_best_{fo['mean_s'] * 1e3:.1f}ms_mean")
 
     with open(OUT_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

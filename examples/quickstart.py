@@ -71,4 +71,22 @@ def main():
 
 
 if __name__ == "__main__":
+    # CI smoke-step watchdog: the fast CI tier runs this example on every
+    # push (scripts/ci.sh), so a hang must become a fast, loud failure
+    # instead of stalling the workflow until the job-level timeout.
+    # ~7 s is the healthy runtime; QUICKSTART_TIMEOUT_S overrides.
+    import os
+    import threading
+
+    timeout_s = float(os.environ.get("QUICKSTART_TIMEOUT_S", "120"))
+
+    def _watchdog():
+        print(f"quickstart: exceeded {timeout_s:.0f}s watchdog — aborting",
+              flush=True)
+        os._exit(124)  # hard-exit: a hung thread can't block the failure
+
+    timer = threading.Timer(timeout_s, _watchdog)
+    timer.daemon = True
+    timer.start()
     main()
+    timer.cancel()

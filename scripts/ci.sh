@@ -1,0 +1,32 @@
+#!/usr/bin/env sh
+# CI entrypoint — the exact gates run by .github/workflows/ci.yml, exposed
+# as one script so local runs and CI cannot drift (scripts/test.sh
+# delegates here).
+#
+#   scripts/ci.sh          # fast tier: syntax gate -> pytest -m "not slow"
+#                          #            -> quickstart smoke (watchdogged)
+#   scripts/ci.sh --full   # fast tier, then the full tier (@slow system
+#                          #            tests + the chaos suite)
+#
+# Frozen environment: this script installs NOTHING. The interpreter must
+# already provide python3 + pytest (+ numpy/jax for the ML layers);
+# tests/conftest.py stubs the optional extras (hypothesis) so collection
+# never errors on a stdlib+pytest interpreter.
+set -e
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== syntax gate (compileall) =="
+python -m compileall -q src tests benchmarks examples
+
+# -p no:cacheprovider: no .pytest_cache/ bytecode-adjacent artifacts in the tree
+echo "== fast tier (pytest -m 'not slow') =="
+python -m pytest -x -q -m "not slow" -p no:cacheprovider
+
+echo "== quickstart smoke (examples/quickstart.py, watchdog-guarded) =="
+QUICKSTART_TIMEOUT_S="${QUICKSTART_TIMEOUT_S:-120}" python examples/quickstart.py
+
+if [ "$1" = "--full" ]; then
+    echo "== full tier (slow system tests + chaos suite) =="
+    python -m pytest -q -m "slow" -p no:cacheprovider
+fi

@@ -1,18 +1,11 @@
 #!/usr/bin/env sh
-# Two-tier test runner: fail fast on the quick tier, then run everything.
-#   scripts/test.sh          # fast tier, then full suite
-#   scripts/test.sh --fast   # fast tier only
+# Two-tier test runner — delegates to scripts/ci.sh so a local run executes
+# the identical gates CI does (syntax gate, fast tier, quickstart smoke,
+# optionally the full tier); the two can't drift.
+#   scripts/test.sh          # fast tier + smoke, then full suite
+#   scripts/test.sh --fast   # fast tier + smoke only
 set -e
-cd "$(dirname "$0")/.."
-export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-
-# -p no:cacheprovider: no .pytest_cache/ bytecode-adjacent artifacts in the tree
-echo "== fast tier (pytest -m 'not slow') =="
-python -m pytest -x -q -m "not slow" -p no:cacheprovider
-
 if [ "$1" = "--fast" ]; then
-    exit 0
+    exec "$(dirname "$0")/ci.sh"
 fi
-
-echo "== full suite (slow tests included) =="
-python -m pytest -q -m "slow" -p no:cacheprovider
+exec "$(dirname "$0")/ci.sh" --full

@@ -12,6 +12,13 @@ from repro.core.cluster import (
     PartitionOffline,
     ReplicationService,
 )
+from repro.core.controller import (
+    ControllerNode,
+    ControllerUnavailable,
+    LogEntry,
+    MetadataCommand,
+    QuorumController,
+)
 from repro.core.control import (
     CONTROL_TOPIC,
     ControlLogger,
@@ -22,6 +29,7 @@ from repro.core.control import (
 )
 from repro.core.consumer import ConsumerGroup, GroupConsumer, range_assign
 from repro.core.log import (
+    METADATA_TOPIC,
     LogConfig,
     OffsetOutOfRange,
     Record,

@@ -62,6 +62,17 @@ DESIGN.md §"Cluster".
 The consumer-offset store (Kafka's ``__consumer_offsets``) is held by the
 cluster controller and mirrored onto every live broker, i.e. replicated at
 the full cluster width, so committed offsets survive any broker loss.
+
+Control plane (DESIGN.md §5). Topology is no longer mutated in place:
+every topology change — broker liveness, partition leadership, ISR
+membership, topic create/delete — is a :class:`MetadataCommand` committed
+through the :class:`~repro.core.controller.QuorumController`'s replicated
+metadata log (majority of N controller nodes) and only then applied to
+the partition ctls. The controller itself fails over by quorum election
+(``kill_controller`` + a daemon tick), and a partitioned controller
+minority can neither elect nor commit, so the control plane has no single
+point of failure and no split-brain window. The lock hierarchy gains a
+leaf: ``metadata lock → partition lock → controller lock``.
 """
 
 from __future__ import annotations
@@ -70,9 +81,15 @@ import os
 import threading
 import time
 import weakref
-from dataclasses import dataclass, replace
+from dataclasses import asdict, dataclass, replace
 from typing import Callable, Iterator, Sequence
 
+from repro.core.controller import (
+    ClusterError,
+    ControllerUnavailable,
+    MetadataCommand,
+    QuorumController,
+)
 from repro.core.log import (
     LogConfig,
     OffsetOutOfRange,
@@ -89,6 +106,7 @@ __all__ = [
     "ClusterConsumer",
     "ClusterError",
     "ClusterProducer",
+    "ControllerUnavailable",
     "NotEnoughReplicasError",
     "NotLeaderError",
     "PartitionMeta",
@@ -101,10 +119,9 @@ _ROUTED_RETRIES = 8
 
 
 # ------------------------------------------------------------------ errors
-class ClusterError(RuntimeError):
-    """Base class for cluster-level failures."""
-
-
+# ClusterError itself lives in repro.core.controller (the shared base
+# module) and is re-exported here; ControllerUnavailable subclasses it so
+# `except ClusterError` retry loops cover controller-quorum windows too.
 class NotLeaderError(ClusterError):
     """The addressed broker is not the current leader for the partition.
 
@@ -186,6 +203,8 @@ class _PartitionCtl:
         "hw",
         "epoch_starts",
         "synced_epoch",
+        "version",
+        "gen",
         "lock",
     )
 
@@ -195,6 +214,7 @@ class _PartitionCtl:
         partition: int,
         replicas: list[int],
         lock: threading.RLock | None = None,
+        gen: int = 0,
     ):
         self.topic = topic
         self.partition = partition
@@ -203,6 +223,13 @@ class _PartitionCtl:
         self.epoch = 0
         self.isr: set[int] = set(replicas)
         self.hw = 0
+        # metadata version: bumped by every applied controller command for
+        # this partition; application is guarded by `pversion > version`,
+        # which makes controller-failover replay idempotent
+        self.version = 0
+        # owning topic's generation (fences replays against a same-name
+        # recreated topic)
+        self.gen = gen
         # Kafka's leader-epoch checkpoint: epoch -> first offset written in
         # that epoch. A rejoining replica truncates to the start of the
         # first epoch it missed — records above may be a deposed leader's
@@ -238,6 +265,12 @@ class ReplicationService:
     ``replicate_all()`` ticks (which remain available) with the same
     leader-epoch reconciliation guarantees: a pass is exactly
     ``BrokerCluster.replicate_partition`` under the partition lock.
+
+    Worker 0 additionally drives the **controller heartbeat**
+    (``BrokerCluster.controller_tick``) once per sweep: quorum lease
+    renewal, controller-leader election on failure, and application of
+    any committed-but-unapplied metadata backlog — so a controller-leader
+    kill fails over within one daemon interval with no client involved.
 
     ``start``/``stop`` are idempotent; the service is also a context
     manager. Unexpected per-partition errors are collected on ``errors``
@@ -299,6 +332,11 @@ class ReplicationService:
             cluster = self._cluster_ref()
             if cluster is None:
                 return  # cluster dropped without stop_replication()
+            if idx == 0:
+                try:
+                    cluster.controller_tick()
+                except (ClusterError, ControllerUnavailable):
+                    pass  # no controller quorum yet — next sweep retries
             for j, (topic, p) in enumerate(cluster.partition_ids()):
                 if j % self.workers != idx:
                     continue
@@ -306,7 +344,7 @@ class ReplicationService:
                     return
                 try:
                     cluster.replicate_partition(topic, p)
-                except (ClusterError, KeyError, IndexError):
+                except (ClusterError, ControllerUnavailable, KeyError, IndexError):
                     continue  # offline/deleted partition — next pass retries
                 except BaseException as e:  # pragma: no cover - diagnostics
                     if len(self.errors) < 16:
@@ -351,6 +389,8 @@ class BrokerCluster:
         allow_unclean_election: bool = False,
         follower_reads: bool = True,
         legacy_global_lock: bool = False,
+        controller_nodes: int = 3,
+        controller_lease_s: float = 1.0,
         clock: Callable[[], float] | None = None,
     ):
         if num_brokers < 1:
@@ -369,6 +409,7 @@ class BrokerCluster:
         self._legacy = legacy_global_lock
         self._meta: dict[tuple[str, int], _PartitionCtl] = {}
         self._configs: dict[str, LogConfig] = {}
+        self._topic_gens: dict[str, int] = {}  # name -> creation generation
         self._committed: dict[str, dict[TopicPartition, int]] = {}
         self._topic_seq = 0  # staggers replica placement across topics
         # topology lock: topic create/delete, broker up/down, offset store.
@@ -377,6 +418,11 @@ class BrokerCluster:
         self._meta_lock = threading.RLock()
         self._data_lock = threading.RLock() if legacy_global_lock else None
         self._services: list[ReplicationService] = []
+        # the replicated control plane: every topology mutation below goes
+        # through a command committed to this quorum's metadata log
+        self.controller = QuorumController(
+            controller_nodes, lease_s=controller_lease_s, clock=self._clock
+        )
 
     # ------------------------------------------------------------------ admin
     def create_topic(self, name: str, cfg: LogConfig | None = None) -> None:
@@ -400,7 +446,39 @@ class BrokerCluster:
                 # acks=all is only accepted while >= 2 replicas are in sync
                 # (so the ack implies single-broker-loss survival)
                 cfg.min_insync_replicas = min(2, rf)
-            self._configs[name] = cfg
+            cmd = MetadataCommand(
+                kind="create_topic", topic=name, cfg=asdict(cfg),
+                gen=self._topic_seq,
+            )
+            self.controller.submit(cmd)
+            self._apply_metadata(cmd)
+
+    def ensure_topic(self, name: str, cfg: LogConfig | None = None) -> None:
+        with self._meta_lock:
+            if name not in self._configs:
+                self.create_topic(name, cfg)
+
+    def delete_topic(self, name: str) -> None:
+        with self._meta_lock:
+            if name not in self._configs:
+                return
+            cmd = MetadataCommand(
+                kind="delete_topic", topic=name, gen=self._topic_gens[name]
+            )
+            self.controller.submit(cmd)
+            self._apply_metadata(cmd)
+
+    def _apply_create_topic(self, cmd: MetadataCommand) -> None:
+        with self._meta_lock:
+            if cmd.topic in self._configs:
+                return  # replay of an already-applied creation
+            cfg = LogConfig(**cmd.cfg)
+            n = len(self.brokers)
+            rf = cfg.replication_factor
+            seed = cmd.gen
+            self._topic_seq = max(self._topic_seq, seed + 1)
+            self._topic_gens[cmd.topic] = seed
+            self._configs[cmd.topic] = cfg
             # every broker materializes the topic locally; only replica-set
             # members ever hold data for a given partition. Spill files are
             # namespaced per broker — replicas seal segments with identical
@@ -412,29 +490,31 @@ class BrokerCluster:
                     local.spill_dir = os.path.join(
                         cfg.spill_dir, f"broker-{br.broker_id}"
                     )
-                br.log.ensure_topic(name, local)
-            seed = self._topic_seq
-            self._topic_seq += 1
+                br.log.ensure_topic(cmd.topic, local)
             for p in range(cfg.num_partitions):
                 start = (p + seed) % n
                 replicas = [(start + j) % n for j in range(rf)]
-                ctl = _PartitionCtl(name, p, replicas, lock=self._data_lock)
+                ctl = _PartitionCtl(
+                    cmd.topic, p, replicas, lock=self._data_lock, gen=seed
+                )
+                self._meta[(cmd.topic, p)] = ctl
                 if not self.brokers[ctl.leader].up:
-                    self._elect(ctl)
-                self._meta[(name, p)] = ctl
+                    with ctl.lock:
+                        try:
+                            self._elect(ctl)
+                        except ControllerUnavailable:
+                            pass  # lazy paths elect once quorum returns
 
-    def ensure_topic(self, name: str, cfg: LogConfig | None = None) -> None:
+    def _apply_delete_topic(self, cmd: MetadataCommand) -> None:
         with self._meta_lock:
-            if name not in self._configs:
-                self.create_topic(name, cfg)
-
-    def delete_topic(self, name: str) -> None:
-        with self._meta_lock:
-            cfg = self._configs.pop(name, None)
+            if self._topic_gens.get(cmd.topic) != cmd.gen:
+                return  # replay against a later same-name incarnation
+            self._topic_gens.pop(cmd.topic, None)
+            cfg = self._configs.pop(cmd.topic, None)
             if cfg is None:
                 return
             ctls = [
-                self._meta.pop((name, p), None)
+                self._meta.pop((cmd.topic, p), None)
                 for p in range(cfg.num_partitions)
             ]
             # sweep the partition locks (sanctioned meta→partition order)
@@ -454,7 +534,7 @@ class BrokerCluster:
                     # through from live replicas by a stale holder
                     ctl.replicas = []
             for br in self.brokers.values():
-                br.log.delete_topic(name)
+                br.log.delete_topic(cmd.topic)
 
     def topics(self) -> list[str]:
         with self._meta_lock:
@@ -506,7 +586,20 @@ class BrokerCluster:
     # ------------------------------------------------------------ replication
     def _leader_broker(self, ctl: _PartitionCtl) -> Broker:
         if ctl.leader is None:
-            raise PartitionOffline(f"{ctl.topic}:{ctl.partition} has no leader")
+            # leaderless (offline) partition: recover lazily when an
+            # eligible candidate exists — e.g. a replica rejoined while
+            # the controller quorum was down, so no election could commit
+            # at rejoin time. Never submit a None-leader election here:
+            # that would churn epochs on every read of an offline
+            # partition.
+            cmd = self._election_command(ctl)
+            if cmd.leader is not None:
+                self.controller.submit(cmd)
+                self._apply_metadata(cmd)
+            if ctl.leader is None:
+                raise PartitionOffline(
+                    f"{ctl.topic}:{ctl.partition} has no leader"
+                )
         br = self.brokers[ctl.leader]
         if not br.up:
             # the controller notices the dead leader lazily (e.g. a client
@@ -521,16 +614,20 @@ class BrokerCluster:
 
     def _replicate_partition(self, ctl: _PartitionCtl) -> None:
         """One follower-fetch pass: copy leader records to live followers,
-        refresh ISR membership, and advance the high watermark."""
+        refresh ISR membership (any change routes through the controller
+        quorum as a ``ShrinkIsr``/``ExpandIsr`` command — with no quorum
+        the committed ISR stands and the HW simply stops advancing), and
+        advance the high watermark."""
         with ctl.lock:
             leader = self._leader_broker(ctl)
             leo = leader.log.end_offset(ctl.topic, ctl.partition)
+            new_isr = set(ctl.isr)
             for bid in ctl.replicas:
                 if bid == ctl.leader:
                     continue
                 br = self.brokers[bid]
                 if not br.up:
-                    ctl.isr.discard(bid)
+                    new_isr.discard(bid)
                     continue
                 local_end = br.log.end_offset(ctl.topic, ctl.partition)
                 last_synced = ctl.synced_epoch.get(bid, -1)
@@ -571,18 +668,52 @@ class BrokerCluster:
                     )
                     local_end += len(values)
                 if local_end == leo:
-                    ctl.isr.add(bid)
+                    new_isr.add(bid)
                     ctl.synced_epoch[bid] = ctl.epoch
                 else:
-                    ctl.isr.discard(bid)
-            ctl.isr.add(ctl.leader)
+                    new_isr.discard(bid)
+            new_isr.add(ctl.leader)
             ctl.synced_epoch[ctl.leader] = ctl.epoch
+            self._propose_isr(ctl, new_isr)
+            # the HW derives from the *committed* ISR: if the quorum was
+            # unavailable and a dead member is still in the ISR, its stale
+            # end pins the HW (safety: nothing is acked that could be lost)
             isr_ends = [
                 self.brokers[b].log.end_offset(ctl.topic, ctl.partition)
                 for b in ctl.isr
             ]
             # HW never regresses below what consumers may already have read
             ctl.hw = max(ctl.hw, min(isr_ends)) if isr_ends else ctl.hw
+
+    def _propose_isr(self, ctl: _PartitionCtl, new_isr: set[int]) -> None:
+        """Route an ISR membership change through the metadata log (Kafka's
+        AlterPartition). Caller holds the partition lock. No-op when the
+        membership is unchanged; swallowed when the controller quorum is
+        unavailable — the committed ISR then stands, which only ever
+        *withholds* HW advances and acks (safe)."""
+        if new_isr == ctl.isr:
+            return
+        removed = ctl.isr - new_isr
+        added = new_isr - ctl.isr
+        try:
+            if removed:
+                cmd = MetadataCommand(
+                    kind="shrink_isr", topic=ctl.topic, partition=ctl.partition,
+                    epoch=ctl.epoch, isr=tuple(sorted(ctl.isr - removed)),
+                    pversion=ctl.version + 1, gen=ctl.gen,
+                )
+                self.controller.submit(cmd)
+                self._apply_metadata(cmd)
+            if added:
+                cmd = MetadataCommand(
+                    kind="expand_isr", topic=ctl.topic, partition=ctl.partition,
+                    epoch=ctl.epoch, isr=tuple(sorted(ctl.isr | added)),
+                    pversion=ctl.version + 1, gen=ctl.gen,
+                )
+                self.controller.submit(cmd)
+                self._apply_metadata(cmd)
+        except ControllerUnavailable:
+            pass
 
     def _commit_batch(
         self,
@@ -649,6 +780,8 @@ class BrokerCluster:
                 self.replicate_partition(topic, p)
             except PartitionOffline:
                 continue  # no live leader to fetch from — skip, not abort
+            except ControllerUnavailable:
+                continue  # no controller quorum — leadership frozen for now
             except (KeyError, IndexError):
                 continue  # topic deleted since the snapshot
 
@@ -672,13 +805,11 @@ class BrokerCluster:
         return any(s.running for s in self._services)
 
     # ----------------------------------------------------------- elections
-    def _elect(self, ctl: _PartitionCtl) -> None:
-        """Deterministic leader election: lowest-id live ISR member wins.
-
-        Only called when the current leader is down or the partition has
-        no leader (every broker-down event and lazy-discovery path).
-        Caller holds the partition lock.
-        """
+    def _election_command(self, ctl: _PartitionCtl) -> MetadataCommand:
+        """Deterministic leader choice: lowest-id live ISR member wins
+        (unclean election falls back to any live replica). Caller holds
+        the partition lock; the choice becomes an ``ElectLeader`` command
+        that must commit to the controller quorum before it applies."""
         candidates = sorted(
             b for b in ctl.isr if self.brokers[b].up and b != ctl.leader
         )
@@ -687,79 +818,125 @@ class BrokerCluster:
             candidates = sorted(
                 b for b in ctl.replicas if self.brokers[b].up
             )
-        if not candidates:
-            ctl.leader = None
-            ctl.epoch += 1
-            return
-        ctl.leader = candidates[0]
-        ctl.epoch += 1
+        new_leader = candidates[0] if candidates else None
         # live ISR survivors stay in-sync (they reconcile against the new
-        # leader on the next replication pass)
-        ctl.isr = {b for b in ctl.isr if self.brokers[b].up} | {ctl.leader}
-        new_leo = self.brokers[ctl.leader].log.end_offset(ctl.topic, ctl.partition)
-        ctl.epoch_starts[ctl.epoch] = new_leo
-        ctl.synced_epoch[ctl.leader] = ctl.epoch
-        # at acks=all the new leader holds every record below the HW, so the
-        # HW is stable; an unclean (or acks<all) election may regress it
-        ctl.hw = min(ctl.hw, new_leo)
-        # a deposed-but-live old leader (healed network partition) is
-        # reconciled as a follower on the next replication pass
+        # leader on the next replication pass); a leaderless (offline)
+        # partition keeps its last-known ISR as the eligibility list
+        isr = None
+        if new_leader is not None:
+            isr = tuple(sorted(
+                {b for b in ctl.isr if self.brokers[b].up} | {new_leader}
+            ))
+        return MetadataCommand(
+            kind="elect_leader", topic=ctl.topic, partition=ctl.partition,
+            leader=new_leader, epoch=ctl.epoch + 1, isr=isr,
+            pversion=ctl.version + 1, gen=ctl.gen,
+        )
+
+    def _elect(self, ctl: _PartitionCtl) -> None:
+        """Change partition leadership through the replicated control
+        plane: the election decision commits to the controller quorum's
+        metadata log, then applies. Caller holds the partition lock.
+        Raises :class:`ControllerUnavailable` (leadership unchanged) when
+        the command cannot reach a controller majority — a partitioned
+        controller minority can never move a leader (split-brain safety).
+        """
+        cmd = self._election_command(ctl)
+        self.controller.submit(cmd)
+        self._apply_metadata(cmd)
 
     # ------------------------------------------------------------ chaos hooks
     def kill_broker(self, broker_id: int, *, defer_election: bool = False) -> None:
         """Hard-crash a broker: every partition it led fails over.
 
-        ``defer_election=True`` models the detection gap before the
-        controller notices (Kafka's session timeout): the broker is down
-        but elections wait for the next replication pass (a daemon tick or
-        explicit ``replicate_all``) or the next *StreamBackend-facade*
-        produce/read to that partition, which elect through the dead
-        leader lazily. Direct broker-protocol clients
-        (``ClusterProducer``/``ClusterConsumer``) see
-        :class:`BrokerUnavailable` until one of those runs — the window
-        follower reads are designed to bridge.
+        The liveness transition routes through the controller quorum as a
+        ``RegisterBroker`` command; its application shrinks ISRs and
+        elects through the dead leader. ``defer_election=True`` models the
+        detection gap before the controller notices (Kafka's session
+        timeout): the broker is down but nothing is registered — elections
+        wait for the next replication pass (a daemon tick or explicit
+        ``replicate_all``) or the next *StreamBackend-facade* produce/read
+        to that partition, which elect through the dead leader lazily.
+        Direct broker-protocol clients (``ClusterProducer``/
+        ``ClusterConsumer``) see :class:`BrokerUnavailable` until one of
+        those runs — the window follower reads are designed to bridge.
+        With no controller quorum the registration itself is deferred the
+        same way (the daemon retries once quorum returns).
         """
         with self._meta_lock:
             self.brokers[broker_id].alive = False
             if not defer_election:
-                self._on_broker_down(broker_id)
+                self._register_broker(broker_id, up=False)
 
     def partition_broker(self, broker_id: int, *, defer_election: bool = False) -> None:
         """Network-partition a broker away from the cluster."""
         with self._meta_lock:
             self.brokers[broker_id].reachable = False
             if not defer_election:
-                self._on_broker_down(broker_id)
-
-    def _on_broker_down(self, broker_id: int) -> None:
-        for ctl in self._meta.values():
-            with ctl.lock:
-                if broker_id in ctl.isr and broker_id != ctl.leader:
-                    ctl.isr.discard(broker_id)
-                if ctl.leader == broker_id:
-                    self._elect(ctl)
+                self._register_broker(broker_id, up=False)
 
     def restart_broker(self, broker_id: int) -> None:
         """Bring a crashed broker back; it rejoins as a follower."""
         with self._meta_lock:
             self.brokers[broker_id].alive = True
-            self._rejoin(broker_id)
+            if not self._register_broker(broker_id, up=True):
+                # no controller quorum: still catch up physically — ISR
+                # re-entry (a quorum-committed ExpandIsr) waits for quorum
+                self._rejoin(broker_id)
 
     def heal_broker(self, broker_id: int) -> None:
         """Heal a network partition; the broker rejoins as a follower."""
         with self._meta_lock:
             self.brokers[broker_id].reachable = True
-            self._rejoin(broker_id)
+            if not self._register_broker(broker_id, up=True):
+                self._rejoin(broker_id)
+
+    def _register_broker(self, broker_id: int, *, up: bool) -> bool:
+        """Commit a broker liveness transition to the metadata log and
+        apply it. Returns False (transition stays pending) when there is
+        no controller quorum — lazy election / rejoin paths complete the
+        work once quorum returns."""
+        cmd = MetadataCommand(kind="register_broker", broker_id=broker_id, up=up)
+        try:
+            self.controller.submit(cmd)
+        except ControllerUnavailable:
+            return False
+        self._apply_metadata(cmd)
+        return True
+
+    def _apply_register_broker(self, cmd: MetadataCommand) -> None:
+        bid = cmd.broker_id
+        if cmd.up:
+            self._rejoin(bid)
+            return
+        with self._meta_lock:
+            ctls = list(self._meta.values())
+        for ctl in ctls:
+            with ctl.lock:
+                if bid in ctl.isr and bid != ctl.leader:
+                    self._propose_isr(ctl, set(ctl.isr) - {bid})
+                if ctl.leader == bid and not self.brokers[bid].up:
+                    try:
+                        self._elect(ctl)
+                    except ControllerUnavailable:
+                        # quorum lost mid-sweep: this partition's election
+                        # stays pending; daemon/lazy paths retry
+                        continue
 
     def _rejoin(self, broker_id: int) -> None:
         br = self.brokers[broker_id]
-        for ctl in self._meta.values():
+        with self._meta_lock:
+            ctls = list(self._meta.values())
+        for ctl in ctls:
             with ctl.lock:
                 if broker_id not in ctl.replicas:
                     continue
                 if ctl.leader is None:
                     # partition was offline — the rejoining replica restores it
-                    self._elect(ctl)
+                    try:
+                        self._elect(ctl)
+                    except ControllerUnavailable:
+                        pass
                     continue
                 if ctl.leader == broker_id:
                     continue
@@ -772,10 +949,124 @@ class BrokerCluster:
                     # live ISR member: this partition stays offline, but the
                     # rejoin sweep — and the offset mirror below — continue
                     continue
+                except ControllerUnavailable:
+                    continue
         # mirror the (cluster-wide replicated) offset store back onto it
-        for group, offsets in self._committed.items():
+        with self._meta_lock:
+            committed = {g: dict(o) for g, o in self._committed.items()}
+        for group, offsets in committed.items():
             for tp, off in offsets.items():
                 br.log.commit_offset(group, tp, off)
+
+    # -------------------------------------------------- metadata application
+    def _apply_metadata(self, cmd: MetadataCommand) -> None:
+        """Apply one COMMITTED metadata command to cluster state — the
+        state-machine half of the replicated control plane. Idempotent:
+        partition commands are guarded by ``pversion``/topic generation,
+        topic commands by existence, broker commands by liveness checks —
+        so controller-failover replay (``controller_tick`` draining the
+        committed-but-unapplied backlog) can never half-apply or
+        double-apply a transition."""
+        kind = cmd.kind
+        if kind == "noop":
+            return
+        if kind == "register_broker":
+            self._apply_register_broker(cmd)
+            return
+        if kind == "create_topic":
+            self._apply_create_topic(cmd)
+            return
+        if kind == "delete_topic":
+            self._apply_delete_topic(cmd)
+            return
+        # partition-scoped commands
+        key = (cmd.topic, cmd.partition)
+        ctl = self._meta.get(key)
+        if ctl is None:
+            return
+        with ctl.lock:
+            # re-validate under the ctl lock: a concurrent delete_topic
+            # pops the ctl from _meta (under the metadata lock) before
+            # fencing it under this lock — a backlog replay that applied
+            # past that check could un-fence a deleted partition
+            if self._meta.get(key) is not ctl:
+                return  # deleted (and fenced) since the lookup
+            if cmd.gen is not None and self._topic_gens.get(cmd.topic) != cmd.gen:
+                return  # topic deleted/recreated since the command committed
+            if cmd.pversion is None or cmd.pversion <= ctl.version:
+                return  # already applied (or a stale duplicate)
+            ctl.version = cmd.pversion
+            if kind == "elect_leader":
+                ctl.epoch = cmd.epoch
+                ctl.leader = cmd.leader
+                if cmd.leader is None:
+                    return  # offline fence: epoch bumped, ISR retained
+                ctl.isr = set(cmd.isr)
+                new_leo = self.brokers[cmd.leader].log.end_offset(
+                    ctl.topic, ctl.partition
+                )
+                ctl.epoch_starts[cmd.epoch] = new_leo
+                ctl.synced_epoch[cmd.leader] = cmd.epoch
+                # at acks=all the new leader holds every record below the
+                # HW, so the HW is stable; an unclean (or acks<all)
+                # election may regress it
+                ctl.hw = min(ctl.hw, new_leo)
+                # a deposed-but-live old leader (healed network partition)
+                # is reconciled as a follower on the next replication pass
+            elif kind in ("shrink_isr", "expand_isr"):
+                ctl.isr = set(cmd.isr)
+
+    # -------------------------------------------------- controller lifecycle
+    def controller_tick(self) -> bool:
+        """One control-plane heartbeat: quorum lease renewal / controller
+        election, then apply any committed-but-unapplied metadata backlog
+        (commands a dead controller leader committed but never applied),
+        then — when controller leadership changed — complete partition
+        elections the dead controller left pending. Returns True on a
+        controller leadership change. Driven by the replication daemon."""
+        changed = self.controller.tick()
+        for entry in self.controller.take_unapplied():
+            self._apply_metadata(entry.command)
+        if changed:
+            self._complete_pending_elections()
+        return changed
+
+    def _complete_pending_elections(self) -> None:
+        """Elect through every dead partition leader — and restore
+        leaderless (offline) partitions that regained an eligible replica
+        while the quorum was down (a new controller leader's first duty
+        after winning its own election)."""
+        with self._meta_lock:
+            ctls = list(self._meta.values())
+        for ctl in ctls:
+            with ctl.lock:
+                leader_down = (
+                    ctl.leader is not None and not self.brokers[ctl.leader].up
+                )
+                if not leader_down and ctl.leader is not None:
+                    continue
+                cmd = self._election_command(ctl)
+                if ctl.leader is None and cmd.leader is None:
+                    continue  # still no eligible candidate: stay offline
+                try:
+                    self.controller.submit(cmd)
+                    self._apply_metadata(cmd)
+                except ControllerUnavailable:
+                    return
+
+    def kill_controller(self) -> int:
+        """Chaos hook: crash the current controller-leader node (electing
+        one first if the quorum is fresh). Returns the killed node id; the
+        surviving quorum elects a successor on the next controller tick
+        and completes any partition elections left pending."""
+        lid = self.controller.ensure_leader()
+        self.controller.kill_node(lid)
+        return lid
+
+    def restart_controller(self, node_id: int) -> None:
+        """Bring a crashed controller node back; it rejoins as a follower
+        and its log is reconciled by the next leader heartbeat."""
+        self.controller.restart_node(node_id)
 
     def live_brokers(self) -> list[int]:
         return sorted(b.broker_id for b in self.brokers.values() if b.up)

@@ -1,0 +1,571 @@
+"""Quorum controller — a Raft-style replicated control plane.
+
+PR-1/PR-2 hung the whole cluster's fault-tolerance story off a single
+in-process controller that could not itself fail: broker liveness,
+partition leadership, ISR sets and leader epochs were mutated directly
+under the metadata lock. This module replaces that with the KRaft-shaped
+design the paper's availability claims actually need:
+
+* **Replicated metadata log.** Controller state changes are *commands*
+  (:class:`MetadataCommand`: ``RegisterBroker``, ``ElectLeader``,
+  ``ShrinkIsr``, ``ExpandIsr``, ``CreateTopic``, ``DeleteTopic``)
+  appended to a log replicated across N controller nodes. Each node's
+  log **is** a :class:`~repro.core.log.StreamLog` topic
+  (``__cluster_metadata``) — the same segment substrate the data plane
+  uses, reusing its append/point-read/``truncate_to`` machinery for
+  Raft's log reconciliation.
+* **Term-based elections.** A candidate bumps the term and requests
+  votes; a voter grants only if the candidate's log is at least as
+  up-to-date as its own (Raft's §5.4.1 election restriction, which is
+  what guarantees committed commands survive controller failover). A
+  candidate that cannot see a majority doesn't bump terms at all
+  (pre-vote), so a partitioned minority node can neither elect itself
+  nor disrupt the quorum's term sequence.
+* **Majority commit.** A command is *committed* once it is on a majority
+  of nodes; only committed commands are ever applied to cluster state.
+  A new leader appends a no-op barrier entry in its own term — when that
+  commits, every inherited entry commits with it (Raft's
+  no-direct-commit-of-prior-term-entries rule). A command submitted to a
+  leader that dies mid-commit is therefore either durably applied by the
+  new leader (it reached a majority-electable node) or cleanly truncated
+  (it lived only on the dead leader) — never half-applied.
+* **Leader lease.** The leader holds a wall-clock lease renewed on every
+  majority round (commit or heartbeat). A *partitioned* leader blocks
+  elections until its lease expires (no dual-leader window); a *dead*
+  leader is replaced immediately. A deposed leader's late writes are
+  fenced twice over: it cannot reach a majority, and any node that
+  observed a higher term rejects its entries outright.
+
+The controller is a pure consensus module: it never touches partition or
+cluster-metadata locks. :class:`~repro.core.cluster.BrokerCluster`
+submits commands (possibly while holding a partition lock — the lock
+hierarchy is ``metadata lock → partition lock → controller lock``) and
+applies each committed command itself; committed-but-unapplied backlog
+(controller failover with the submitter gone) is drained by
+``BrokerCluster.controller_tick``, which the replication daemon drives.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import asdict, dataclass
+from typing import Callable, Iterator
+
+from repro.core.log import METADATA_TOPIC, LogConfig, StreamLog
+
+__all__ = [
+    "ClusterError",
+    "ControllerNode",
+    "ControllerUnavailable",
+    "LogEntry",
+    "MetadataCommand",
+    "QuorumController",
+]
+
+
+class ClusterError(RuntimeError):
+    """Base class for cluster-level failures. Defined here (the module
+    both :mod:`repro.core.cluster` and this one can import) and
+    re-exported by ``cluster``, so client retry loops written against
+    ``except ClusterError`` also cover controller-quorum conditions."""
+
+
+class ControllerUnavailable(ClusterError):
+    """No controller leader can commit: quorum lost, lease held by an
+    unreachable leader, or the submitting node was fenced/deposed. The
+    submitted command is NOT committed (it may sit uncommitted on a
+    minority of nodes, where log reconciliation will truncate it)."""
+
+
+@dataclass(frozen=True)
+class MetadataCommand:
+    """One replicated control-plane command (the metadata-log record).
+
+    ``kind`` selects the state transition; the remaining fields are its
+    payload (unused ones stay None). ``pversion`` is the per-partition
+    metadata version the command produces — application is guarded by
+    ``pversion > ctl.version``, which makes replay after controller
+    failover idempotent and makes lost (uncommitted) commands harmless:
+    their version number is simply reissued by the next command.
+    """
+
+    kind: str  # register_broker | elect_leader | shrink_isr | expand_isr
+    #          | create_topic | delete_topic | noop
+    topic: str | None = None
+    partition: int | None = None
+    broker_id: int | None = None
+    up: bool | None = None
+    leader: int | None = None
+    epoch: int | None = None
+    isr: tuple[int, ...] | None = None
+    pversion: int | None = None
+    cfg: dict | None = None  # create_topic: LogConfig fields
+    gen: int | None = None  # topic generation (fences delete-vs-recreate)
+    note: str | None = None  # free-form tag (tests mark entries with it)
+
+    def to_bytes(self, term: int) -> bytes:
+        body = {k: v for k, v in asdict(self).items() if v is not None}
+        if self.isr is not None:
+            body["isr"] = list(self.isr)
+        return json.dumps({"term": term, "cmd": body}, sort_keys=True).encode()
+
+    @staticmethod
+    def from_bytes(payload: bytes) -> tuple[int, "MetadataCommand"]:
+        obj = json.loads(bytes(payload).decode())
+        body = obj["cmd"]
+        if "isr" in body:
+            body["isr"] = tuple(body["isr"])
+        return obj["term"], MetadataCommand(**body)
+
+
+def _is_barrier(cmd: MetadataCommand) -> bool:
+    """A new leader's untagged no-op barrier entry (pure consensus
+    bookkeeping — never surfaced to the state machine or log readers)."""
+    return cmd.kind == "noop" and cmd.note is None
+
+
+@dataclass(frozen=True)
+class LogEntry:
+    """One committed metadata-log entry as handed to the state machine."""
+
+    term: int
+    index: int
+    command: MetadataCommand
+
+
+class ControllerNode:
+    """One controller node: durable term/vote plus its metadata log.
+
+    The log is a real :class:`StreamLog` topic — offsets are Raft log
+    indexes, ``truncate_to`` is Raft's conflict-suffix truncation, and a
+    killed node that restarts keeps its durable state (log, term, vote),
+    exactly the persistence Raft assumes.
+
+    ``alive`` models a crashed controller process; ``reachable`` models a
+    network partition. Either way the node is invisible to its peers.
+    """
+
+    __slots__ = ("node_id", "term", "voted_for", "won_term", "log", "_terms",
+                 "commit_count", "alive", "reachable")
+
+    def __init__(self, node_id: int, clock: Callable[[], float] | None = None):
+        self.node_id = node_id
+        self.term = 0
+        self.voted_for: int | None = None
+        # highest term this node won an election for: a node may only act
+        # as leader (append + replicate outward) in a term it won — a
+        # restarted follower sharing the leader's term must never push its
+        # divergent same-term log at peers (it could truncate committed
+        # entries, since conflict detection is by term)
+        self.won_term = -1
+        self.log = StreamLog(clock=clock)
+        self.log.create_topic(METADATA_TOPIC, LogConfig(num_partitions=1))
+        self._terms: list[int] = []  # term of entry i (in-memory index)
+        self.commit_count = 0  # entries [0, commit_count) are committed
+        self.alive = True
+        self.reachable = True
+
+    @property
+    def up(self) -> bool:
+        return self.alive and self.reachable
+
+    def end(self) -> int:
+        return len(self._terms)
+
+    def last_term(self) -> int:
+        return self._terms[-1] if self._terms else 0
+
+    def append(self, term: int, cmd: MetadataCommand) -> int:
+        """Append one entry; returns its index (== StreamLog offset)."""
+        _p, offset = self.log.produce(METADATA_TOPIC, cmd.to_bytes(term))
+        assert offset == len(self._terms)
+        self._terms.append(term)
+        return offset
+
+    def entry(self, index: int) -> LogEntry:
+        rec = self.log.read_one(METADATA_TOPIC, 0, index)
+        term, cmd = MetadataCommand.from_bytes(rec.value)
+        return LogEntry(term=term, index=index, command=cmd)
+
+    def entries(self, start: int = 0, stop: int | None = None) -> Iterator[LogEntry]:
+        stop = self.end() if stop is None else stop
+        for i in range(start, stop):
+            yield self.entry(i)
+
+    def truncate(self, index: int) -> None:
+        """Drop entries at ``index`` and beyond (conflict reconciliation)."""
+        self.log.truncate_to(METADATA_TOPIC, 0, index)
+        del self._terms[index:]
+        self.commit_count = min(self.commit_count, index)
+
+
+class QuorumController:
+    """N-node Raft-style quorum over the cluster metadata log.
+
+    All public methods are safe to call from data-plane threads: the
+    single internal lock is a leaf in the cluster lock hierarchy
+    (``metadata lock → partition lock → controller lock``) — no method
+    ever calls back into cluster or partition state.
+
+    This is an in-process model of the consensus protocol, not a wire
+    implementation: RPCs are direct method calls gated by a visibility
+    rule (two nodes exchange messages iff both are alive and both are
+    reachable), which is exactly the level the chaos suite needs to
+    prove split-brain safety and failover liveness.
+    """
+
+    def __init__(
+        self,
+        num_nodes: int = 3,
+        *,
+        lease_s: float = 1.0,
+        clock: Callable[[], float] | None = None,
+    ):
+        if num_nodes < 1:
+            raise ValueError("need at least one controller node")
+        self._clock = clock or time.time
+        self.lease_s = lease_s
+        self.nodes: dict[int, ControllerNode] = {
+            i: ControllerNode(i, clock=self._clock) for i in range(num_nodes)
+        }
+        self._majority = num_nodes // 2 + 1
+        self.leader_id: int | None = None
+        self._lease_until = 0.0
+        self.elections = 0  # completed leadership changes (observability)
+        self._applied: set[int] = set()  # entry indexes handed to the SM
+        self._lock = threading.RLock()
+        # test hook: crash the leader mid-commit ("append": before any
+        # replication; "replicate": after reaching exactly one follower)
+        self.crash_leader_after: str | None = None
+
+    # ------------------------------------------------------------- topology
+    @staticmethod
+    def _visible(a: ControllerNode, b: ControllerNode) -> bool:
+        if a is b:
+            return a.alive
+        return a.alive and b.alive and a.reachable and b.reachable
+
+    def leader(self) -> int | None:
+        with self._lock:
+            return self.leader_id
+
+    def term(self) -> int:
+        with self._lock:
+            return max(n.term for n in self.nodes.values())
+
+    def describe(self) -> dict:
+        with self._lock:
+            return {
+                "leader": self.leader_id,
+                "elections": self.elections,
+                "lease_until": self._lease_until,
+                "nodes": {
+                    n.node_id: {
+                        "term": n.term,
+                        "end": n.end(),
+                        "commit": n.commit_count,
+                        "alive": n.alive,
+                        "reachable": n.reachable,
+                    }
+                    for n in self.nodes.values()
+                },
+            }
+
+    # ---------------------------------------------------------- chaos hooks
+    def kill_node(self, node_id: int) -> None:
+        """Crash a controller node (durable state survives for restart)."""
+        with self._lock:
+            self.nodes[node_id].alive = False
+
+    def restart_node(self, node_id: int) -> None:
+        with self._lock:
+            self.nodes[node_id].alive = True
+
+    def partition_node(self, node_id: int) -> None:
+        """Isolate a node from every peer (it may still act locally)."""
+        with self._lock:
+            self.nodes[node_id].reachable = False
+
+    def heal_node(self, node_id: int) -> None:
+        with self._lock:
+            self.nodes[node_id].reachable = True
+
+    # ------------------------------------------------------------ elections
+    def _try_elect_locked(self, candidate_id: int | None = None) -> bool:
+        """One election round. Without an explicit candidate, up nodes run
+        in most-up-to-date-log-first order (then lowest id — deterministic),
+        so the first eligible candidate wins whenever a majority is up."""
+        if candidate_id is not None:
+            cands = [self.nodes[candidate_id]]
+        else:
+            cands = sorted(
+                (n for n in self.nodes.values() if n.up),
+                key=lambda n: (-n.last_term(), -n.end(), n.node_id),
+            )
+        for cand in cands:
+            if not cand.alive:
+                continue
+            visible = [n for n in self.nodes.values() if self._visible(cand, n)]
+            if len(visible) < self._majority:
+                continue  # pre-vote: cannot win, don't disturb terms
+            term = max(n.term for n in visible) + 1
+            votes = 0
+            for n in visible:
+                # grant iff the candidate's log is at least as up-to-date
+                # (Raft §5.4.1) — the voter's term advances either way
+                grant = (cand.last_term(), cand.end()) >= (n.last_term(), n.end())
+                n.term = term
+                n.voted_for = cand.node_id if grant else None
+                votes += 1 if grant else 0
+            if votes < self._majority:
+                continue
+            self.leader_id = cand.node_id
+            cand.won_term = term
+            self.elections += 1
+            self._lease_until = self._clock() + self.lease_s
+            # no-op barrier in the new term: when it commits, every entry
+            # inherited from prior terms commits with it
+            cand.append(term, MetadataCommand(kind="noop"))
+            self._heartbeat_locked(cand)
+            return True
+        if candidate_id is None:
+            self.leader_id = None
+        return False
+
+    def try_elect(self, candidate_id: int) -> bool:
+        """Run an election round with an explicit candidate (chaos tests:
+        a partitioned minority node must fail here)."""
+        with self._lock:
+            return self._try_elect_locked(candidate_id)
+
+    def _ensure_leader_locked(self) -> ControllerNode:
+        ldr = self.nodes.get(self.leader_id) if self.leader_id is not None else None
+        if ldr is not None and ldr.up and ldr.won_term == ldr.term:
+            return ldr
+        if (
+            ldr is not None
+            and ldr.alive
+            and not ldr.reachable
+            and self._clock() < self._lease_until
+        ):
+            # a partitioned (not crashed) leader may still be serving its
+            # own minority view: its lease must expire before a new leader
+            # can be chosen (no dual-leader window)
+            raise ControllerUnavailable(
+                f"controller {ldr.node_id} unreachable; lease not expired"
+            )
+        self._try_elect_locked()
+        if self.leader_id is None:
+            raise ControllerUnavailable("no controller quorum")
+        return self.nodes[self.leader_id]
+
+    def ensure_leader(self) -> int:
+        """Elect (if needed) and return the current leader node id."""
+        with self._lock:
+            return self._ensure_leader_locked().node_id
+
+    # ---------------------------------------------------------- replication
+    def _replicate_to_locked(self, ldr: ControllerNode, f: ControllerNode) -> bool:
+        """Bring follower ``f`` up to ``ldr``'s log (AppendEntries):
+        truncate the conflicting suffix, copy missing entries, propagate
+        the commit index. Returns False when unreachable or fenced."""
+        if not self._visible(ldr, f):
+            return False
+        if f.term > ldr.term:
+            return False  # higher term: the caller must step down
+        f.term = ldr.term
+        # longest common prefix by entry term (logs are small — the
+        # in-memory term index makes this a list comparison)
+        n = min(f.end(), ldr.end())
+        common = n
+        for i in range(n):
+            if f._terms[i] != ldr._terms[i]:
+                common = i
+                break
+        if f.end() > common:
+            f.truncate(common)
+        if common < ldr.end():
+            values, keys, timestamps = ldr.log.replica_fetch(
+                METADATA_TOPIC, 0, common, ldr.end() - common
+            )
+            f.log.replica_append(METADATA_TOPIC, 0, values, keys, timestamps)
+            f._terms.extend(ldr._terms[common:])
+        f.commit_count = min(ldr.commit_count, f.end())
+        return True
+
+    def _heartbeat_locked(self, ldr: ControllerNode) -> bool:
+        """One majority round from ``ldr``: replicate the log, advance the
+        commit index, renew the lease. Returns True on majority ack."""
+        acks = 1
+        for n in self.nodes.values():
+            if n is ldr:
+                continue
+            if self._visible(ldr, n) and n.term > ldr.term:
+                # fenced: a higher-term leader exists somewhere
+                ldr.term = n.term
+                if self.leader_id == ldr.node_id:
+                    self.leader_id = None
+                return False
+            if self._replicate_to_locked(ldr, n):
+                acks += 1
+        if acks < self._majority:
+            return False
+        if ldr._terms and ldr._terms[-1] == ldr.term:
+            # every entry is on a majority, and the tail is own-term: the
+            # whole log commits (the no-op barrier guarantees this holds
+            # from the first round of any new term)
+            ldr.commit_count = ldr.end()
+        if self.leader_id == ldr.node_id:
+            self._lease_until = max(
+                self._lease_until, self._clock() + self.lease_s
+            )
+        return True
+
+    def tick(self) -> bool:
+        """One controller heartbeat: renew the lease, catch followers up,
+        and run an election when the leader is dead (immediately) or
+        unreachable (after lease expiry). Returns True when leadership
+        changed — the cluster then completes pending partition elections.
+        Driven by :class:`~repro.core.cluster.ReplicationService`."""
+        with self._lock:
+            ldr = (
+                self.nodes.get(self.leader_id)
+                if self.leader_id is not None
+                else None
+            )
+            if ldr is not None and ldr.up and ldr.won_term == ldr.term:
+                self._heartbeat_locked(ldr)
+                if self.leader_id == ldr.node_id:
+                    return False
+                # fenced mid-heartbeat: fall through to re-elect
+            elif (
+                ldr is not None
+                and ldr.alive
+                and not ldr.reachable
+                and self._clock() < self._lease_until
+            ):
+                return False  # partitioned leader still holds its lease
+            old = self.leader_id
+            self._try_elect_locked()
+            return self.leader_id is not None and self.leader_id != old
+
+    # --------------------------------------------------------------- submit
+    def submit(self, cmd: MetadataCommand) -> LogEntry:
+        """Append ``cmd`` to the current leader's log and replicate it to
+        a majority. Returns the committed entry; the caller applies it to
+        cluster state. Raises :class:`ControllerUnavailable` when no
+        leader can be established or the command cannot reach a majority
+        — in that case the command is NOT committed and must not be
+        applied."""
+        with self._lock:
+            ldr = self._ensure_leader_locked()
+            return self._submit_from_locked(ldr, cmd)
+
+    def submit_from(self, node_id: int, cmd: MetadataCommand) -> LogEntry:
+        """Submit acting as a specific node (chaos tests: a deposed leader
+        attempting a late write must be fenced)."""
+        with self._lock:
+            node = self.nodes[node_id]
+            if not node.alive:
+                raise ControllerUnavailable(f"controller {node_id} is dead")
+            return self._submit_from_locked(node, cmd)
+
+    def _submit_from_locked(
+        self, ldr: ControllerNode, cmd: MetadataCommand
+    ) -> LogEntry:
+        if ldr.won_term != ldr.term:
+            # not the elected leader for its current term (e.g. a restarted
+            # follower that missed same-term commits): letting it replicate
+            # outward could truncate committed entries on its peers
+            raise ControllerUnavailable(
+                f"controller {ldr.node_id} is not the leader for term "
+                f"{ldr.term}"
+            )
+        term = ldr.term
+        index = ldr.append(term, cmd)
+        if self.crash_leader_after == "append":
+            # die before any replication: the entry lives only on this
+            # node and will be truncated by the next leader's heartbeat
+            self.crash_leader_after = None
+            ldr.alive = False
+            raise ControllerUnavailable(
+                f"controller {ldr.node_id} crashed before replicating"
+            )
+        acks = 1
+        for n in self.nodes.values():
+            if n is ldr:
+                continue
+            if self._visible(ldr, n) and n.term > ldr.term:
+                # fenced: step down, refuse the write
+                ldr.term = n.term
+                if self.leader_id == ldr.node_id:
+                    self.leader_id = None
+                raise ControllerUnavailable(
+                    f"controller {ldr.node_id} deposed (term {n.term} observed)"
+                )
+            if self._replicate_to_locked(ldr, n):
+                acks += 1
+                if self.crash_leader_after == "replicate":
+                    # die after reaching one follower but before commit:
+                    # the entry is on a majority-electable node, so the
+                    # next leader inherits and commits it
+                    self.crash_leader_after = None
+                    ldr.alive = False
+                    raise ControllerUnavailable(
+                        f"controller {ldr.node_id} crashed mid-commit"
+                    )
+        if acks < self._majority:
+            raise ControllerUnavailable(
+                f"metadata command reached {acks}/{len(self.nodes)} nodes; "
+                f"majority is {self._majority}"
+            )
+        ldr.commit_count = ldr.end()
+        if self.leader_id == ldr.node_id:
+            self._lease_until = max(
+                self._lease_until, self._clock() + self.lease_s
+            )
+        self._applied.add(index)  # the submitting caller applies it now
+        return LogEntry(term=term, index=index, command=cmd)
+
+    # -------------------------------------------------------- state machine
+    def take_unapplied(self) -> list[LogEntry]:
+        """Committed entries not yet handed to the state machine, in log
+        order (controller-failover backlog: committed by a dead leader,
+        or inherited and committed via the no-op barrier). Entries are
+        marked as handed out; application itself is idempotent
+        (``pversion`` guards), so a duplicate hand-out would be harmless."""
+        with self._lock:
+            ldr = (
+                self.nodes.get(self.leader_id)
+                if self.leader_id is not None
+                else None
+            )
+            if ldr is None or not ldr.up:
+                return []
+            out = []
+            for i in range(ldr.commit_count):
+                if i in self._applied:
+                    continue
+                entry = ldr.entry(i)
+                self._applied.add(i)
+                if not _is_barrier(entry.command):
+                    out.append(entry)
+            return out
+
+    def committed_commands(self) -> list[MetadataCommand]:
+        """The committed metadata log (minus no-ops), from the leader."""
+        with self._lock:
+            ldr = (
+                self.nodes.get(self.leader_id)
+                if self.leader_id is not None
+                else None
+            )
+            if ldr is None:
+                return []
+            return [
+                e.command
+                for e in ldr.entries(0, ldr.commit_count)
+                if not _is_barrier(e.command)
+            ]

@@ -37,6 +37,7 @@ from typing import Callable, Iterator, Protocol, Sequence
 import numpy as np
 
 __all__ = [
+    "METADATA_TOPIC",
     "LogConfig",
     "OffsetOutOfRange",
     "Record",
@@ -45,6 +46,12 @@ __all__ = [
     "StreamLog",
     "TopicPartition",
 ]
+
+# The cluster-metadata topic (KRaft's ``@metadata``): each controller
+# node's replicated metadata log is an ordinary StreamLog topic of this
+# name — offsets are Raft log indexes and ``truncate_to`` is Raft's
+# conflict-suffix truncation. See repro.core.controller.
+METADATA_TOPIC = "__cluster_metadata"
 
 
 class OffsetOutOfRange(LookupError):
@@ -631,6 +638,18 @@ class StreamLog:
         self, topic: str, partition: int, offset: int, max_records: int = 1024
     ) -> RecordBatch:
         return self._partition(topic, partition).read(offset, max_records)
+
+    def read_one(self, topic: str, partition: int, offset: int) -> Record:
+        """Point read of a single record, key included (the metadata-log
+        replay path: a controller deserializes one committed command)."""
+        part = self._partition(topic, partition)
+        with part.lock:
+            if part._bounded_count(offset, 1) < 1:
+                raise OffsetOutOfRange(
+                    f"{topic}:{partition} offset {offset} is past the end"
+                )
+            seg = part.segments[part._segment_for(offset)]
+            return seg.record(topic, partition, offset - seg.base_offset)
 
     def read_range(
         self, topic: str, partition: int, offset: int, length: int

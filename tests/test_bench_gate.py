@@ -1,0 +1,80 @@
+"""benchmarks/check_bench.py — the nightly CI benchmark regression gate.
+
+The gate is stdlib-only and file-driven, so these tests exercise it
+exactly as CI does: the checked-in ``BENCH_replication.json`` must pass,
+a doctored throughput regression must fail, and schema violations
+(truncated/hand-edited files) must fail loudly.
+"""
+
+import importlib.util
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def load_gate():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", ROOT / "benchmarks" / "check_bench.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def load_results():
+    return json.loads((ROOT / "BENCH_replication.json").read_text())
+
+
+def test_checked_in_results_pass_gate():
+    gate = load_gate()
+    failures = gate.check(
+        load_results(), gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert failures == []
+    # and the CLI path CI invokes exits 0
+    assert gate.main([str(ROOT / "BENCH_replication.json")]) == 0
+
+
+def test_throughput_regression_fails_gate():
+    gate = load_gate()
+    results = load_results()
+    results["contended"]["contended_t4_rf3_acksall"]["msgs_per_s"] = (
+        0.5 * gate.PR2_BASELINE_MSGS_PER_S  # 50% of baseline: > 20% drop
+    )
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("regression" in f for f in failures)
+
+
+def test_within_tolerance_passes_gate():
+    gate = load_gate()
+    results = load_results()
+    results["contended"]["contended_t4_rf3_acksall"]["msgs_per_s"] = (
+        0.85 * gate.PR2_BASELINE_MSGS_PER_S  # 15% drop: inside 20%
+    )
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert failures == []
+
+
+def test_schema_violations_fail_gate():
+    gate = load_gate()
+    results = load_results()
+    del results["controller"]
+    results["contended"].pop("contended_t4_rf3_acksall_globallock")
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("controller" in f for f in failures)
+    assert any("globallock" in f for f in failures)
+
+
+def test_unreadable_file_fails_cli(tmp_path):
+    gate = load_gate()
+    assert gate.main([str(tmp_path / "missing.json")]) == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert gate.main([str(bad)]) == 1

@@ -19,7 +19,13 @@ import pytest
 import repro.core as core
 import repro.data as data
 from repro.configs import copd_mlp
-from repro.core.cluster import BrokerCluster, ClusterError, ClusterProducer
+from repro.core.cluster import (
+    BrokerCluster,
+    ClusterError,
+    ClusterProducer,
+    ControllerUnavailable,
+)
+from repro.core.controller import MetadataCommand
 from repro.core.consumer import ConsumerGroup
 from repro.core.control import ControlLogger
 from repro.core.log import LogConfig, TopicPartition
@@ -268,6 +274,169 @@ def test_follower_reads_keep_inference_serving_through_election():
             assert infer.drain() >= 10
     finally:
         infer.close()
+
+
+def test_controller_and_partition_leader_die_same_tick_zero_acked_loss():
+    """The PR-3 acceptance scenario: 3 controller nodes, background daemon
+    running, producer threads streaming at acks=all — and in one tick both
+    the controller leader *and* a partition leader are killed (the
+    partition kill deferred, so only the controller can complete the
+    election). A surviving controller quorum elects a new leader, the new
+    leader completes the pending partition election, and every record
+    acked before or after the double kill survives exactly once, in
+    order."""
+    c = BrokerCluster(3, default_acks="all", controller_lease_s=0.2)
+    c.create_topic(
+        "copd", LogConfig(num_partitions=2, replication_factor=3)
+    )
+    c.start_replication(interval_s=0.002, workers=2)
+    n_each, kill_at = 200, 40
+    acked: dict[int, list[bytes]] = {0: [], 1: []}
+    errors: list[BaseException] = []
+    reached_kill_point = threading.Barrier(3)  # 2 producers + killer
+    killed: dict[str, int] = {}
+
+    def produce(tid):
+        prod = ClusterProducer(c, acks="all", retries=10)
+        sent = 0
+        deadline = time.monotonic() + 60
+        try:
+            while sent < n_each:
+                vals = [f"p{tid}-{sent + j}".encode() for j in range(4)]
+                while True:
+                    try:
+                        prod.send_batch("copd", vals, partition=tid)
+                        break
+                    except ClusterError:
+                        # client backoff while controller + partition
+                        # elections are both in flight; an un-acked batch
+                        # is retried (acks=all never duplicates: the ack
+                        # is withheld unless the batch committed)
+                        if time.monotonic() > deadline:
+                            raise
+                        time.sleep(0.002)
+                acked[tid].extend(vals)  # the ack happened: must survive
+                sent += 4
+                if sent == kill_at:
+                    reached_kill_point.wait(timeout=60)
+        except BaseException as e:
+            errors.append(e)
+            reached_kill_point.abort()  # wake the other waiters to fail fast
+            raise
+
+    threads = [threading.Thread(target=produce, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        reached_kill_point.wait(timeout=60)
+        # same tick: the controller leader dies AND partition 0's leader
+        # dies with its election deferred — only a new controller leader
+        # can complete it
+        killed["controller"] = c.kill_controller()
+        victim = c.leader_for("copd", 0)
+        killed["broker"] = victim
+        c.kill_broker(victim, defer_election=True)
+    except threading.BrokenBarrierError:
+        pass  # a producer failed early; the errors assert below reports it
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "producer hung"
+    assert errors == [], f"producers failed through double failover: {errors}"
+    # a quorum elected a replacement controller (not the dead node)...
+    assert c.controller.leader() is not None
+    assert c.controller.leader() != killed["controller"]
+    # ...and the pending partition election completed on it
+    assert c.leader_for("copd", 0) != killed["broker"]
+    c.stop_replication()
+    for p, vals in acked.items():
+        assert len(vals) == n_each  # every send was acked
+        got = c.read_range("copd", p, 0, len(vals))
+        assert [bytes(v) for v in got.values] == vals, (
+            f"partition {p}: acked records lost/duplicated after the "
+            "controller + partition leader double kill"
+        )
+
+
+def test_follower_reads_serve_while_controller_and_partition_leader_dead():
+    """Deterministic half of the acceptance scenario (no daemon): with the
+    controller leader AND a partition leader both dead, the partition
+    election is genuinely pending — and committed records keep serving
+    from in-sync followers. One explicit controller tick then elects a
+    new controller leader, which completes the partition election."""
+    c = BrokerCluster(3, default_acks="all", controller_lease_s=0.2)
+    c.create_topic("copd", LogConfig(num_partitions=1, replication_factor=3))
+    msgs = [f"r{i}".encode() for i in range(50)]
+    c.produce_batch("copd", msgs, partition=0, acks="all")
+
+    dead_ctrl = c.kill_controller()
+    victim = c.leader_for("copd", 0)
+    c.kill_broker(victim, defer_election=True)
+    assert c.leader_for("copd", 0) == victim  # election pending
+
+    # acked records below the HW serve from an in-sync follower while both
+    # the partition leader and the controller leader are gone
+    got = c.read("copd", 0, 0, 50)
+    assert [bytes(v) for v in got.values] == msgs
+    assert c.leader_for("copd", 0) == victim  # the read elected nothing
+
+    assert c.controller_tick()  # quorum elects a successor controller...
+    assert c.controller.leader() != dead_ctrl
+    new_leader = c.leader_for("copd", 0)
+    assert new_leader != victim  # ...which completed the pending election
+    # the new partition leader accepts acks=all traffic end to end
+    c.produce_batch("copd", [b"post-failover"], partition=0, acks="all")
+    got = c.read_range("copd", 0, 0, 51)
+    assert bytes(got.values[-1]) == b"post-failover"
+
+
+def test_minority_controller_partition_cannot_elect_or_commit_metadata():
+    """Split-brain safety end to end: isolate the controller leader (a
+    minority of one). It can neither elect itself nor commit metadata —
+    so it cannot move partition leadership — while the majority side
+    fails over both the controller and, after a broker kill, the
+    partition, without ever losing an acked record."""
+    c = BrokerCluster(3, default_acks="all", controller_lease_s=0.05)
+    c.create_topic("copd", LogConfig(num_partitions=1, replication_factor=3))
+    msgs = [f"r{i}".encode() for i in range(30)]
+    c.produce_batch("copd", msgs, partition=0, acks="all")
+
+    old_ctrl = c.controller.ensure_leader()
+    c.controller.partition_node(old_ctrl)
+
+    # the isolated minority cannot elect...
+    assert not c.controller.try_elect(old_ctrl)
+    # ...and its late metadata writes cannot commit (fenced by quorum)
+    with pytest.raises(ControllerUnavailable):
+        c.controller.submit_from(
+            old_ctrl,
+            MetadataCommand(kind="elect_leader", topic="copd", partition=0,
+                            leader=0, epoch=99, isr=(0,), pversion=99),
+        )
+    ctl = c._meta[("copd", 0)]
+    assert ctl.epoch != 99  # the split-brain write never applied
+
+    # majority side: after the lease expires it elects a new controller
+    deadline = time.monotonic() + 10
+    while not c.controller_tick():
+        assert time.monotonic() < deadline, "majority never elected"
+        time.sleep(0.01)
+    assert c.controller.leader() != old_ctrl
+
+    # and metadata commits keep working: a broker kill fails over cleanly
+    victim = c.leader_for("copd", 0)
+    c.kill_broker(victim)
+    assert c.leader_for("copd", 0) != victim
+    got = c.read_range("copd", 0, 0, len(msgs))
+    assert [bytes(v) for v in got.values] == msgs
+
+    # the healed ex-controller rejoins as a follower; its uncommitted
+    # split-brain entry is truncated by log reconciliation
+    c.controller.heal_node(old_ctrl)
+    c.controller_tick()
+    node = c.controller.nodes[old_ctrl]
+    assert not any(
+        e.command.epoch == 99 for e in node.entries() if e.command.epoch
+    )
 
 
 def test_stream_replay_to_new_deployment_after_failure():
