@@ -13,7 +13,13 @@ Two checks, wired into the nightly CI job right after the benchmark run
   absolute baseline is hardware-specific (``--baseline`` overrides it on
   other machines), so the gate also enforces the hardware-independent
   relative floor ``speedup_4threads >= MIN_SPEEDUP_4T`` (concurrent vs
-  global-lock data plane, measured in the same run).
+  global-lock data plane, measured in the same run);
+* **idempotent overhead** — the exactly-once producer path (PR-4) must
+  cost at most ``IDEM_MAX_OVERHEAD`` (15%) versus the same run's
+  non-idempotent rf=3/acks=all baseline. The statistic is the **median
+  within-pair ratio** over the recorded back-to-back run pairs —
+  recomputed from the pair throughputs, never trusted from a stored
+  ratio, and immune to the shared host's absolute-speed drift.
 
 Exit code 0 on pass, 1 on any failure (the CI job fails on non-zero).
 
@@ -35,16 +41,41 @@ TOLERANCE = 0.20
 # hardware-independent floor: the concurrent data plane must stay at
 # least this much faster than the same run's global-lock baseline
 MIN_SPEEDUP_4T = 1.5
+# exactly-once tax budget: idempotent rf3/acksall may cost at most this
+# fraction vs the same run's non-idempotent baseline
+IDEM_MAX_OVERHEAD = 0.15
 
 ACCEPTANCE_KEY = "contended_t4_rf3_acksall"
 
 REQUIRED_SECTIONS = ("config", "single", "contended", "speedup_4threads",
-                     "controller")
+                     "idempotent", "controller")
 REQUIRED_CONTENDED = (
     "contended_t1_rf3_acksall",
     "contended_t4_rf3_acksall",
     "contended_t4_rf3_acksall_globallock",
 )
+
+
+def _idempotent_overhead(idem: dict) -> tuple[float, int] | None:
+    """``(median overhead ratio, valid pair count)`` recomputed from the
+    recorded throughput pairs — never trusted from a stored
+    ``overhead_frac`` a hand-edit could detach from its inputs. Each pair
+    ran back to back, so its ratio is immune to the shared host's
+    absolute-speed drift. None when no valid pair exists (schema
+    failure)."""
+    pairs = idem.get("pairs")
+    if not isinstance(pairs, list):
+        return None
+    ratios = sorted(
+        p["baseline_msgs_per_s"] / p["idempotent_msgs_per_s"] - 1.0
+        for p in pairs
+        if isinstance(p, dict)
+        and p.get("baseline_msgs_per_s", 0) > 0
+        and p.get("idempotent_msgs_per_s", 0) > 0
+    )
+    if not ratios:
+        return None
+    return ratios[len(ratios) // 2], len(ratios)
 
 
 def check(results: dict, baseline: float, tolerance: float) -> list[str]:
@@ -75,6 +106,36 @@ def check(results: dict, baseline: float, tolerance: float) -> list[str]:
     if not isinstance(failover, dict) or failover.get("best_s", 0) <= 0:
         failures.append("schema: controller['failover']['best_s'] missing "
                         "or non-positive")
+
+    idem = results.get("idempotent", {})
+    idem = idem if isinstance(idem, dict) else {}
+    base_row = idem.get("baseline_rf3_acksall")
+    idem_row = idem.get("idempotent_rf3_acksall")
+    if not (isinstance(base_row, dict) and base_row.get("msgs_per_s", 0) > 0):
+        failures.append(
+            "schema: idempotent['baseline_rf3_acksall'] missing or "
+            "non-positive"
+        )
+    if not (isinstance(idem_row, dict) and idem_row.get("msgs_per_s", 0) > 0):
+        failures.append(
+            "schema: idempotent['idempotent_rf3_acksall'] missing or "
+            "non-positive"
+        )
+    measured = _idempotent_overhead(idem)
+    if measured is None:
+        failures.append(
+            "schema: idempotent['pairs'] missing or holds no valid "
+            "(baseline, idempotent) throughput pair"
+        )
+    else:
+        overhead, n_pairs = measured
+        if overhead > IDEM_MAX_OVERHEAD:
+            failures.append(
+                f"regression: idempotent-producer overhead {overhead:.1%} "
+                f"(median across {n_pairs} valid paired runs) exceeds "
+                f"the {IDEM_MAX_OVERHEAD:.0%} budget vs the acks=all "
+                "non-idempotent baseline"
+            )
 
     row = contended.get(ACCEPTANCE_KEY)
     if isinstance(row, dict) and row.get("msgs_per_s", 0) > 0:
@@ -115,10 +176,13 @@ def main(argv: list[str] | None = None) -> int:
 
     got = results["contended"][ACCEPTANCE_KEY]["msgs_per_s"]
     fo = results["controller"]["failover"]["best_s"]
+    overhead, _ = _idempotent_overhead(results["idempotent"])
     print(
         f"check_bench: OK — {ACCEPTANCE_KEY} {got:,.0f} msgs/s "
         f"(baseline {args.baseline:,.0f}, tolerance {args.tolerance:.0%}); "
         f"speedup_4threads {results['speedup_4threads']:.2f}x; "
+        f"idempotent overhead {overhead:+.1%} (budget "
+        f"{IDEM_MAX_OVERHEAD:.0%}); "
         f"controller failover {fo * 1e3:.1f} ms"
     )
     return 0

@@ -1,8 +1,9 @@
 """Quickstart — the paper's own validation (§VI), end to end in ~30 lines.
 
 Define a model -> create a configuration -> deploy for training -> stream
-the (synthetic) HCOPD dataset through the log -> train -> deploy the
-trained model -> stream inference requests -> read predictions.
+the (synthetic) HCOPD dataset through a replicated 3-broker cluster with
+exactly-once idempotent producers -> train -> deploy the trained model ->
+stream inference requests -> read predictions.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,7 +20,9 @@ from repro.train import TrainingJob, adamw
 
 
 def main():
-    log, registry = core.StreamLog(), core.Registry()
+    # a replicated cluster (rf=3, acks=all) — the same StreamBackend
+    # surface as a bare StreamLog, with broker failover underneath
+    log, registry = core.BrokerCluster(3), core.Registry()
 
     # A) define the ML model (paper Listing 1/2: just the model definition)
     spec = registry.register_model("copd-mlp", description="HCOPD classifier")
@@ -34,10 +37,12 @@ def main():
         [FieldSpec("data", "float32", (copd_mlp.N_FEATURES,))],
         [FieldSpec("label", "int32", ())],
     )
-    log.create_topic("copd")
+    log.create_topic("copd", core.LogConfig(num_partitions=2))
     dataset = copd_mlp.synth_dataset()
+    # two idempotent producer threads, one per partition: client retries
+    # after a lost ack can never duplicate a training record (DESIGN §7)
     msg = data.ingest(log, "copd", codec, dataset, deployment.deployment_id,
-                      validation_rate=0.2)
+                      validation_rate=0.2, num_threads=2, idempotent=True)
     print(f"streamed {msg.total_msg} records as {[str(r) for r in msg.ranges]}")
 
     # the training Job (paper Algorithm 1)

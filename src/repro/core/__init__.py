@@ -27,11 +27,18 @@ from repro.core.control import (
     poll_control,
     send_control,
 )
-from repro.core.consumer import ConsumerGroup, GroupConsumer, range_assign
+from repro.core.consumer import (
+    ConsumerGroup,
+    GroupConsumer,
+    RebalanceError,
+    range_assign,
+)
 from repro.core.log import (
     METADATA_TOPIC,
     LogConfig,
     OffsetOutOfRange,
+    OutOfOrderSequence,
+    ProducerFenced,
     Record,
     RecordBatch,
     StreamBackend,

@@ -32,6 +32,11 @@ the JAX-side reproduction:
   clients: they cache partition metadata, route to the cached leader, and
   on :class:`NotLeaderError` / :class:`BrokerUnavailable` refresh metadata
   and retry — exactly the real Kafka client protocol loop.
+  ``ClusterProducer(idempotent=True)`` stamps batches with a
+  quorum-committed ``(pid, epoch)`` identity and per-partition sequences,
+  turning that retry loop **exactly-once**: a re-sent committed batch
+  dedups on the leader (and on any follower that inherits leadership) to
+  its original offsets — see DESIGN.md §7.
 
 Concurrency model (DESIGN.md §4). The data plane is partition-parallel:
 
@@ -77,6 +82,7 @@ leaf: ``metadata lock → partition lock → controller lock``.
 
 from __future__ import annotations
 
+import hashlib
 import os
 import threading
 import time
@@ -93,6 +99,7 @@ from repro.core.controller import (
 from repro.core.log import (
     LogConfig,
     OffsetOutOfRange,
+    ProducerFenced,
     RecordBatch,
     StreamLog,
     TopicPartition,
@@ -111,6 +118,7 @@ __all__ = [
     "NotLeaderError",
     "PartitionMeta",
     "PartitionOffline",
+    "ProducerFenced",
     "ReplicationService",
 ]
 
@@ -412,6 +420,14 @@ class BrokerCluster:
         self._topic_gens: dict[str, int] = {}  # name -> creation generation
         self._committed: dict[str, dict[TopicPartition, int]] = {}
         self._topic_seq = 0  # staggers replica placement across topics
+        # idempotent-producer id space: grants are AllocatePid commands
+        # committed to the metadata log, so ids stay unique across
+        # controller failovers. _producer_epochs is the cluster-wide fence
+        # (pid -> newest granted epoch): an append from an older epoch is
+        # a zombie and rejected before it touches any partition.
+        self._next_pid = 0
+        self._producer_names: dict[str, tuple[int, int]] = {}
+        self._producer_epochs: dict[int, int] = {}
         # topology lock: topic create/delete, broker up/down, offset store.
         # Data-plane work runs under per-partition ctl locks instead; in
         # legacy mode every ctl shares _data_lock, restoring one-big-lock.
@@ -536,6 +552,47 @@ class BrokerCluster:
             for br in self.brokers.values():
                 br.log.delete_topic(cmd.topic)
 
+    def init_producer(self, name: str | None = None) -> tuple[int, int]:
+        """Grant an idempotent-producer identity: ``(pid, epoch)``.
+
+        The grant is an ``AllocatePid`` command committed to the
+        controller quorum's metadata log before it is usable, so producer
+        ids stay unique across controller failovers (a successor inherits
+        every committed grant and allocates above them).
+
+        ``name`` opts into *named* re-initialization (Kafka's
+        transactional.id shape): re-initializing an existing name returns
+        the same pid with a bumped epoch, and the bump — also committed —
+        fences the previous incarnation cluster-wide: any append it still
+        has in flight fails with :class:`~repro.core.log.ProducerFenced`
+        (zombie fencing). Raises :class:`ControllerUnavailable` with no
+        quorum — an unfenced identity must never be handed out.
+        """
+        with self._meta_lock:
+            if name is not None and name in self._producer_names:
+                pid, ep = self._producer_names[name]
+                ep += 1
+            else:
+                pid, ep = self._next_pid, 0
+            cmd = MetadataCommand(
+                kind="allocate_pid", pid=pid, producer_epoch=ep, name=name
+            )
+            self.controller.submit(cmd)
+            self._apply_metadata(cmd)
+            return pid, ep
+
+    def _apply_allocate_pid(self, cmd: MetadataCommand) -> None:
+        with self._meta_lock:
+            self._next_pid = max(self._next_pid, cmd.pid + 1)
+            if cmd.producer_epoch > self._producer_epochs.get(cmd.pid, -1):
+                self._producer_epochs[cmd.pid] = cmd.producer_epoch
+            if cmd.name is not None:
+                known = self._producer_names.get(cmd.name)
+                if known is None or cmd.producer_epoch >= known[1]:
+                    self._producer_names[cmd.name] = (
+                        cmd.pid, cmd.producer_epoch
+                    )
+
     def topics(self) -> list[str]:
         with self._meta_lock:
             return sorted(self._configs)
@@ -658,13 +715,14 @@ class BrokerCluster:
                     # drop everything and re-fetch from the leader's log start
                     local_end = br.log.reset_to(ctl.topic, ctl.partition, lstart)
                 while local_end < leo:
-                    values, keys, timestamps = leader.log.replica_fetch(
+                    values, keys, timestamps, prods = leader.log.replica_fetch(
                         ctl.topic, ctl.partition, local_end, _REPLICA_FETCH_CHUNK
                     )
                     if not values:
                         break
                     br.log.replica_append(
-                        ctl.topic, ctl.partition, values, keys, timestamps
+                        ctl.topic, ctl.partition, values, keys, timestamps,
+                        prods=prods,
                     )
                     local_end += len(values)
                 if local_end == leo:
@@ -723,6 +781,7 @@ class BrokerCluster:
         now_ms: int,
         first: int,
         last: int,
+        producer: tuple[int, int, int] | None = None,
     ) -> None:
         """Synchronous ISR replication for one acked batch (caller holds
         the partition lock and just appended ``[first, last]`` on the
@@ -760,7 +819,15 @@ class BrokerCluster:
             ):
                 need_full = True
                 continue
-            fbr.log.replica_append(ctl.topic, ctl.partition, values, keys, now_ms)
+            # the push carries the batch's producer stamp, so the
+            # follower's dedup table tracks the leader's — if this
+            # follower wins a mid-append election, the client's retry of
+            # this very batch resolves to these offsets instead of
+            # re-appending (exactly-once through failover)
+            fbr.log.replica_append(
+                ctl.topic, ctl.partition, values, keys, now_ms,
+                producer=producer,
+            )
         if need_full:
             self._replicate_partition(ctl)
         else:
@@ -979,6 +1046,9 @@ class BrokerCluster:
         if kind == "delete_topic":
             self._apply_delete_topic(cmd)
             return
+        if kind == "allocate_pid":
+            self._apply_allocate_pid(cmd)
+            return
         # partition-scoped commands
         key = (cmd.topic, cmd.partition)
         ctl = self._meta.get(key)
@@ -1090,6 +1160,7 @@ class BrokerCluster:
         keys: Sequence[bytes | None] | None = None,
         acks: int | str | None = None,
         epoch: int | None = None,
+        producer: tuple[int, int, int] | None = None,
     ) -> tuple[int, int]:
         """Leader-side ProduceRequest. Returns ``(first, last)`` offsets.
 
@@ -1111,6 +1182,17 @@ class BrokerCluster:
         follower won the election mid-call) and acking is exact, never
         duplicated. Zero-acked-loss therefore holds under concurrent
         broker failures without re-append duplicates.
+
+        ``producer=(pid, epoch, base_seq)`` makes the append idempotent:
+        the leader's per-partition producer-state table resolves a retried
+        batch — same pid/epoch/sequences, e.g. the response to an append
+        that *did* commit was lost, so the client re-sent it — to its
+        original offsets instead of re-appending. That closes the one
+        duplicate window the ``hw > last`` test cannot: a committed append
+        whose ack never reached the client. A stale producer epoch raises
+        :class:`~repro.core.log.ProducerFenced` (zombie fencing; fatal,
+        never retried); a sequence gap raises
+        :class:`~repro.core.log.OutOfOrderSequence`.
         """
         acks = self.default_acks if acks is None else acks
         if acks not in (0, 1, "all", -1):
@@ -1135,11 +1217,39 @@ class BrokerCluster:
             # stamp the batch once so leader and followers agree on record
             # timestamps (and therefore on retention_ms expiry)
             now_ms = int(self._clock() * 1000)
-            first, last = br.log.replica_append(
-                topic, partition, values, keys, now_ms
-            )
+            if producer is not None:
+                pid, pep, pseq = producer
+                known = self._producer_epochs.get(pid)  # plain dict read
+                if known is not None and pep < known:
+                    # cluster-wide zombie fence: a newer incarnation of
+                    # this producer id was granted (AllocatePid with a
+                    # bumped epoch) — reject even on partitions the new
+                    # incarnation has not written to yet
+                    raise ProducerFenced(
+                        f"producer {pid} epoch {pep} fenced by granted "
+                        f"epoch {known}"
+                    )
+                first, last, dup = br.log.producer_append(
+                    topic, partition, values, keys, now_ms, pid, pep, pseq
+                )
+                if dup:
+                    # the batch is already in the log from a previous
+                    # delivery; make sure it is *committed* before acking
+                    # its original offsets (it may have ridden a direct
+                    # push whose HW advance died with the old leader)
+                    if acks in ("all", -1) and ctl.hw <= last:
+                        self._replicate_partition(ctl)
+                        if ctl.hw <= last:
+                            raise NotLeaderError(topic, partition, ctl.leader)
+                    return first, last
+            else:
+                first, last = br.log.replica_append(
+                    topic, partition, values, keys, now_ms
+                )
             if acks in ("all", -1):
-                self._commit_batch(ctl, values, keys, now_ms, first, last)
+                self._commit_batch(
+                    ctl, values, keys, now_ms, first, last, producer
+                )
                 if ctl.hw <= last:
                     # leadership moved under us mid-append and the batch
                     # did not commit: it must not be acknowledged (a new
@@ -1445,6 +1555,19 @@ class ClusterProducer:
     :class:`BrokerUnavailable` (cached leader died), it refreshes metadata
     and retries — so a broker loss mid-stream costs one round-trip, not the
     stream.
+
+    ``idempotent=True`` upgrades that retry loop from at-least-once to
+    **exactly-once**: the producer asks the cluster for a committed
+    ``(pid, epoch)`` identity (:meth:`BrokerCluster.init_producer`) and
+    stamps every batch with per-partition sequence numbers, so a retry of
+    a batch whose ack was lost — or that landed on a deposed leader whose
+    direct push already committed it — resolves to the *original* offsets
+    instead of re-appending. ``producer_name`` additionally pins a stable
+    identity: re-initializing the same name bumps the epoch and fences the
+    previous incarnation (its in-flight appends raise
+    :class:`~repro.core.log.ProducerFenced`, which is fatal and never
+    retried here). Each producer instance is single-threaded, like the
+    rest of the client surface.
     """
 
     def __init__(
@@ -1453,10 +1576,38 @@ class ClusterProducer:
         *,
         acks: int | str = "all",
         retries: int = 5,
+        idempotent: bool = False,
+        producer_name: str | None = None,
     ):
         self.cluster = cluster
         self.acks = acks
         self.retries = retries
+        self.idempotent = idempotent or producer_name is not None
+        if self.idempotent and acks not in ("all", -1):
+            # as in Kafka: idempotence requires acks=all. At acks=0/1 an
+            # acked suffix may be truncated by reconciliation, after which
+            # the producer's next sequence looks like a gap and dies with
+            # OutOfOrderSequence — turning permitted acks<all loss into a
+            # fatal client error. Refuse the combination up front.
+            raise ValueError(
+                f"idempotent producers require acks='all' (got {acks!r})"
+            )
+        self.producer_id: int | None = None
+        self.producer_epoch: int | None = None
+        if self.idempotent:
+            self.producer_id, self.producer_epoch = cluster.init_producer(
+                producer_name
+            )
+        self._seqs: dict[tuple[str, int], int] = {}  # next seq per partition
+        # an idempotent send that failed is *unresolved*: some attempt may
+        # have appended the batch under its sequence even though no ack
+        # arrived. Re-using that sequence for a DIFFERENT batch could
+        # silently dedup the new data against the old batch's offsets
+        # (data loss), so the partition is pinned to a same-batch
+        # continuation: tp -> (seq, payload digest). Re-sending the
+        # identical batch resumes the retry exactly-once; anything else
+        # raises ProducerFenced (recovery: a new producer, fresh pid).
+        self._unresolved: dict[tuple[str, int], tuple[int, bytes]] = {}
         self._meta = _MetadataCache(cluster)
         self._sticky: dict[str, int] = {}
 
@@ -1493,21 +1644,88 @@ class ClusterProducer:
         if partition is None:
             k = keys[0] if keys else None
             partition = self._pick_partition(topic, k)
+        producer = None
+        if self.idempotent:
+            tp = (topic, partition)
+            pending = self._unresolved.get(tp)
+            if pending is not None:
+                if self._fingerprint(values, keys) != pending[1]:
+                    raise ProducerFenced(
+                        f"producer {self.producer_id} has an unresolved "
+                        f"send on {topic}:{partition} (ack never arrived; "
+                        "the batch may be committed under its sequence): "
+                        "only an identical re-send may continue — create "
+                        "a new producer to move on"
+                    )
+                seq = pending[0]  # continuation of the unresolved retry
+            else:
+                seq = self._seqs.get(tp, 0)
+            # the same (pid, epoch, seq) stamp rides every retry of this
+            # batch, so a re-send of an already-committed append dedups on
+            # the broker and returns the original offsets; the sequence
+            # only advances once the batch is acknowledged
+            producer = (self.producer_id, self.producer_epoch, seq)
         last_err: ClusterError | None = None
-        for _ in range(self.retries + 1):
-            try:
-                leader = self._meta.leader(topic, partition)
-                first, last = self.cluster.broker_append(
-                    leader, topic, partition, values, keys=keys, acks=self.acks
+        try:
+            for _ in range(self.retries + 1):
+                try:
+                    leader = self._meta.leader(topic, partition)
+                    first, last = self.cluster.broker_append(
+                        leader, topic, partition, values, keys=keys,
+                        acks=self.acks, producer=producer,
+                    )
+                    if producer is not None:
+                        self._unresolved.pop((topic, partition), None)
+                        self._seqs[(topic, partition)] = (
+                            producer[2] + len(values)
+                        )
+                    return partition, first, last
+                except NotLeaderError as e:
+                    self._meta.note_leader_hint(topic, partition, e.leader_hint)
+                    last_err = e
+                except (BrokerUnavailable, PartitionOffline) as e:
+                    self._meta.invalidate(topic, partition)
+                    last_err = e
+            raise last_err  # exhausted retries
+        except BaseException:
+            if producer is not None:
+                # ANY non-success exit — exhausted retries, or an error
+                # outside the retried set (NotEnoughReplicasError, a
+                # quorum window, ...) escaping after an earlier attempt
+                # may already have appended — leaves the outcome unknown:
+                # pin this partition's sequence to an identical re-send
+                # of this batch
+                self._unresolved[(topic, partition)] = (
+                    producer[2], self._fingerprint(values, keys)
                 )
-                return partition, first, last
-            except NotLeaderError as e:
-                self._meta.note_leader_hint(topic, partition, e.leader_hint)
-                last_err = e
-            except (BrokerUnavailable, PartitionOffline) as e:
-                self._meta.invalidate(topic, partition)
-                last_err = e
-        raise last_err  # exhausted retries
+            raise
+
+    @staticmethod
+    def _fingerprint(
+        values: Sequence[bytes], keys: Sequence[bytes | None] | None
+    ) -> bytes:
+        """Identity of a batch's contents, used only around unresolved
+        sends (never on the happy path): a continuation re-send must carry
+        the same payload or the pinned sequence would ack wrong data. A
+        real digest, not Python's ``hash()`` — a collision here acks new
+        data at old offsets, the exact loss this mechanism prevents."""
+        h = hashlib.sha256()
+        for v in values:
+            h.update(len(v).to_bytes(4, "big"))
+            h.update(v)
+        h.update(b"\xffK")
+        # keys=None and keys=[None]*n append identically, so they must
+        # fingerprint identically too (a continuation must not be wedged
+        # by spelling the same batch the other way)
+        if keys is not None and any(k is not None for k in keys):
+            for k in keys:
+                if k is None:
+                    h.update(b"\xff\xff\xff\xff")
+                else:
+                    kb = bytes(k)
+                    h.update(len(kb).to_bytes(4, "big"))
+                    h.update(kb)
+        return h.digest()
 
 
 class ClusterConsumer:

@@ -20,7 +20,13 @@ committed offsets live in the cluster-replicated offset store, so a group
 resumes from its committed offsets on the new leader after a broker loss.
 A partition that is momentarily unavailable (leader election in flight,
 no in-sync follower to serve) is skipped for that poll rather than
-failing the member — the next poll retries it.
+failing the member — the next poll retries it; the same applies to
+resolving its committed offset after a rebalance. Offset commits are
+fenced on the generation the positions were polled under, so a zombie
+member (evicted, or holding positions from before a rebalance) can never
+rewind the committed offset under a partition's new owner; eviction
+surfaces as a typed :class:`RebalanceError` with
+:meth:`GroupConsumer.rejoin` as the recovery path.
 
 The coordinator is thread-safe; each :class:`GroupConsumer` is owned by
 one member thread (positions are member-local), so N members may poll the
@@ -43,7 +49,16 @@ from repro.core.log import (
     TopicPartition,
 )
 
-__all__ = ["ConsumerGroup", "GroupConsumer", "range_assign"]
+__all__ = ["ConsumerGroup", "GroupConsumer", "RebalanceError", "range_assign"]
+
+
+class RebalanceError(RuntimeError):
+    """The member was evicted from its group (missed heartbeats — another
+    member now owns its partitions) or tried to act under a stale
+    generation. Deliberately NOT a ``ClusterError``: cluster retry loops
+    must not blindly re-poll as a zombie. Recover with
+    :meth:`GroupConsumer.rejoin` and poll again — positions restart from
+    the group's committed offsets (at-least-once)."""
 
 
 def range_assign(
@@ -105,11 +120,35 @@ class ConsumerGroup:
             tps.extend(TopicPartition(t, p) for p in range(self.log.num_partitions(t)))
         return tps
 
-    def join(self, member_id: str) -> "GroupConsumer":
+    def join(
+        self,
+        member_id: str,
+        *,
+        on_revoked: Callable[[list[TopicPartition]], None] | None = None,
+        on_assigned: Callable[[list[TopicPartition]], None] | None = None,
+    ) -> "GroupConsumer":
+        """Add a member; returns its :class:`GroupConsumer` view.
+
+        ``on_revoked`` / ``on_assigned`` are rebalance listener hooks
+        (Kafka's ConsumerRebalanceListener): when the member observes a
+        generation change at its next poll, ``on_revoked`` fires with the
+        partitions it lost *before* positions reset, ``on_assigned`` with
+        the new assignment after.
+        """
         with self._lock:
             self._members[member_id] = _Member(member_id, self._clock())
             self._rebalance()
-            return GroupConsumer(self, member_id)
+            return GroupConsumer(
+                self, member_id,
+                on_revoked=on_revoked, on_assigned=on_assigned,
+            )
+
+    def rejoin(self, member_id: str) -> None:
+        """Re-register an evicted member (recovery after
+        :class:`RebalanceError`); triggers a rebalance like any join."""
+        with self._lock:
+            self._members[member_id] = _Member(member_id, self._clock())
+            self._rebalance()
 
     def leave(self, member_id: str) -> None:
         with self._lock:
@@ -120,7 +159,12 @@ class ConsumerGroup:
         with self._lock:
             m = self._members.get(member_id)
             if m is None:
-                raise KeyError(f"{member_id} not in group {self.group_id}")
+                # typed, recoverable: the poll loop can rejoin() instead
+                # of dying on a raw KeyError (the member was expired by
+                # failure detection between two polls)
+                raise RebalanceError(
+                    f"{member_id} evicted from group {self.group_id}"
+                )
             m.last_heartbeat = self._clock()
 
     def expire_dead_members(self) -> list[str]:
@@ -151,6 +195,14 @@ class ConsumerGroup:
         with self._lock:
             return list(self._assignment.get(member_id, []))
 
+    def assignment_with_generation(
+        self, member_id: str
+    ) -> tuple[int, list[TopicPartition]]:
+        """Assignment plus the generation it belongs to, read atomically —
+        the pair a member needs to fence its commits on."""
+        with self._lock:
+            return self.generation, list(self._assignment.get(member_id, []))
+
     @property
     def members(self) -> list[str]:
         with self._lock:
@@ -164,34 +216,105 @@ class ConsumerGroup:
     def commit(self, tp: TopicPartition, offset: int) -> None:
         self.log.commit_offset(self.group_id, tp, offset)
 
+    def commit_member(
+        self,
+        member_id: str,
+        generation: int,
+        positions: dict[TopicPartition, int],
+    ) -> bool:
+        """Generation-fenced offset commit (Kafka's OffsetCommit with
+        ``generation_id`` validation). Publishes ``positions`` only when
+        they were polled under the **current** generation by a member
+        that is still in the group *and* still owns each partition —
+        otherwise nothing commits and False returns. This is what stops a
+        zombie (a member that kept stale positions across a rebalance)
+        from rewinding the committed offset under the partition's new
+        owner. Atomic with the membership/assignment check: the group
+        lock is held across validation and the commits, so a rebalance
+        cannot interleave between them."""
+        with self._lock:
+            if generation != self.generation or member_id not in self._members:
+                return False
+            assigned = set(self._assignment.get(member_id, ()))
+            for tp, off in positions.items():
+                if tp in assigned:
+                    self.log.commit_offset(self.group_id, tp, off)
+            return True
+
 
 class GroupConsumer:
     """One member's view: poll assigned partitions from committed offsets.
 
     ``poll`` returns record batches and advances *local* positions;
     ``commit`` publishes them (at-least-once: a crash between poll and
-    commit re-delivers).
+    commit re-delivers). Commits are **generation-fenced**: positions
+    only publish under the generation they were polled in, for partitions
+    this member still owns — a zombie's stale commit is dropped (returns
+    False) instead of rewinding the new owner's offset. An evicted member
+    sees a typed :class:`RebalanceError` from ``poll`` and can
+    :meth:`rejoin` instead of dying.
     """
 
-    def __init__(self, group: ConsumerGroup, member_id: str):
+    def __init__(
+        self,
+        group: ConsumerGroup,
+        member_id: str,
+        *,
+        on_revoked: Callable[[list[TopicPartition]], None] | None = None,
+        on_assigned: Callable[[list[TopicPartition]], None] | None = None,
+    ):
         self.group = group
         self.member_id = member_id
         self._positions: dict[TopicPartition, int] = {}
+        self._assigned: list[TopicPartition] = []  # last observed assignment
         self._generation_seen = -1
+        self._on_revoked = on_revoked
+        self._on_assigned = on_assigned
 
     def _sync_assignment(self) -> list[TopicPartition]:
-        assignment = self.group.assignment(self.member_id)
-        if self.group.generation != self._generation_seen:
+        # generation and assignment are read atomically: racing on the
+        # two separately could pair a new assignment with a stale
+        # generation and mis-fence the next commit
+        gen, assignment = self.group.assignment_with_generation(self.member_id)
+        if gen != self._generation_seen:
+            if self._on_revoked is not None and self._generation_seen >= 0:
+                # diff against the previously *observed assignment*, not
+                # _positions: a partition whose committed offset never
+                # resolved (mid-election skips) was still owned and must
+                # still be reported revoked, or listeners doing
+                # per-partition cleanup leak it
+                revoked = sorted(
+                    set(self._assigned) - set(assignment),
+                    key=lambda tp: (tp.topic, tp.partition),
+                )
+                if revoked:
+                    self._on_revoked(revoked)
             # after a rebalance, restart from the group's committed offsets
-            self._positions = {tp: self.group.committed(tp) for tp in assignment}
-            self._generation_seen = self.group.generation
+            self._positions = {}
+            self._assigned = list(assignment)
+            self._generation_seen = gen
+            if self._on_assigned is not None:
+                self._on_assigned(list(assignment))
+        for tp in assignment:
+            if tp not in self._positions:
+                try:
+                    self._positions[tp] = self.group.committed(tp)
+                except ClusterError:
+                    # committed offset / log start unreadable mid-election
+                    # (leaderless partition, no controller quorum): skip
+                    # this partition for the round and retry next poll,
+                    # exactly like the read path below — one unavailable
+                    # partition must not kill the member's poll loop
+                    continue
         return assignment
 
     def poll(self, max_records: int = 1024) -> list[RecordBatch]:
-        self.group.heartbeat(self.member_id)
+        self.group.heartbeat(self.member_id)  # raises RebalanceError if evicted
         batches: list[RecordBatch] = []
         for tp in self._sync_assignment():
-            pos = self._positions[tp]
+            pos = self._positions.get(tp)
+            if pos is None:
+                continue  # position still unresolved (mid-election skip)
             try:
                 batch = self.group.log.read(tp.topic, tp.partition, pos, max_records)
             except OffsetOutOfRange:
@@ -201,6 +324,11 @@ class GroupConsumer:
                     batch = self.group.log.read(
                         tp.topic, tp.partition, pos, max_records
                     )
+                    # persist the recovered position even when the read
+                    # comes back empty, or every later poll re-raises and
+                    # re-recovers (and commit republishes the evicted
+                    # offset) until new records arrive
+                    self._positions[tp] = pos
                 except ClusterError:
                     continue  # leader lost mid-recovery: retry next poll
             except ClusterError:
@@ -212,9 +340,30 @@ class GroupConsumer:
                 batches.append(batch)
         return batches
 
-    def commit(self) -> None:
-        for tp, pos in self._positions.items():
-            self.group.commit(tp, pos)
+    def commit(self) -> bool:
+        """Publish polled positions, fenced on the generation they were
+        polled under. Returns False — committing nothing — when a
+        rebalance has moved on (stale generation or eviction): the new
+        owner's committed offsets must not be rewound by a zombie."""
+        return self.group.commit_member(
+            self.member_id, self._generation_seen, dict(self._positions)
+        )
+
+    def rejoin(self) -> None:
+        """Recover from :class:`RebalanceError`: re-enter the group and
+        restart from committed offsets at the next poll (at-least-once —
+        records polled but not committed before eviction re-deliver)."""
+        if self._on_revoked is not None and self._assigned:
+            # eviction lost every owned partition (Kafka's
+            # onPartitionsLost): report them so per-partition listener
+            # cleanup runs before the fresh assignment arrives
+            self._on_revoked(sorted(
+                self._assigned, key=lambda tp: (tp.topic, tp.partition)
+            ))
+        self.group.rejoin(self.member_id)
+        self._positions = {}
+        self._assigned = []
+        self._generation_seen = -1
 
     def close(self) -> None:
         self.commit()

@@ -145,9 +145,21 @@ class ControlMessage:
         )
 
 
-def send_control(log: StreamBackend, msg: ControlMessage) -> None:
+def send_control(log: StreamBackend, msg: ControlMessage, producer=None) -> None:
+    """Publish ``msg`` to the control topic.
+
+    ``producer`` (an idempotent
+    :class:`~repro.core.cluster.ClusterProducer`) makes the send
+    exactly-once: a duplicated control message is not just log noise — a
+    retry after a lost ack would re-announce the stream and re-trigger
+    training on every job watching the deployment."""
     log.ensure_topic(CONTROL_TOPIC)
-    log.produce(CONTROL_TOPIC, msg.to_bytes(), key=msg.deployment_id.encode())
+    if producer is not None:
+        producer.send(
+            CONTROL_TOPIC, msg.to_bytes(), key=msg.deployment_id.encode()
+        )
+    else:
+        log.produce(CONTROL_TOPIC, msg.to_bytes(), key=msg.deployment_id.encode())
 
 
 def poll_control(

@@ -8,7 +8,8 @@ design the paper's availability claims actually need:
 
 * **Replicated metadata log.** Controller state changes are *commands*
   (:class:`MetadataCommand`: ``RegisterBroker``, ``ElectLeader``,
-  ``ShrinkIsr``, ``ExpandIsr``, ``CreateTopic``, ``DeleteTopic``)
+  ``ShrinkIsr``, ``ExpandIsr``, ``CreateTopic``, ``DeleteTopic``,
+  ``AllocatePid``)
   appended to a log replicated across N controller nodes. Each node's
   log **is** a :class:`~repro.core.log.StreamLog` topic
   (``__cluster_metadata``) — the same segment substrate the data plane
@@ -92,7 +93,7 @@ class MetadataCommand:
     """
 
     kind: str  # register_broker | elect_leader | shrink_isr | expand_isr
-    #          | create_topic | delete_topic | noop
+    #          | create_topic | delete_topic | allocate_pid | noop
     topic: str | None = None
     partition: int | None = None
     broker_id: int | None = None
@@ -104,6 +105,13 @@ class MetadataCommand:
     cfg: dict | None = None  # create_topic: LogConfig fields
     gen: int | None = None  # topic generation (fences delete-vs-recreate)
     note: str | None = None  # free-form tag (tests mark entries with it)
+    # allocate_pid: producer-id grants are metadata commands, so ids stay
+    # unique across controller failovers (the grant is in the replicated
+    # log a successor inherits) and a named re-initialization's epoch bump
+    # (zombie fencing) is durable
+    pid: int | None = None
+    producer_epoch: int | None = None
+    name: str | None = None
 
     def to_bytes(self, term: int) -> bytes:
         body = {k: v for k, v in asdict(self).items() if v is not None}
@@ -387,10 +395,12 @@ class QuorumController:
         if f.end() > common:
             f.truncate(common)
         if common < ldr.end():
-            values, keys, timestamps = ldr.log.replica_fetch(
+            values, keys, timestamps, prods = ldr.log.replica_fetch(
                 METADATA_TOPIC, 0, common, ldr.end() - common
             )
-            f.log.replica_append(METADATA_TOPIC, 0, values, keys, timestamps)
+            f.log.replica_append(
+                METADATA_TOPIC, 0, values, keys, timestamps, prods=prods
+            )
             f._terms.extend(ldr._terms[common:])
         f.commit_count = min(ldr.commit_count, f.end())
         return True

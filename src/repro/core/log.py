@@ -15,7 +15,14 @@ Implements the semantics Kafka-ML relies on (paper §II, §V):
 * message-set (batched) appends amortize per-record overhead — the paper's
   "message set abstraction";
 * zero-copy reads: records are returned as memoryviews into segment
-  buffers ("zero-copy optimizations" in paper §II).
+  buffers ("zero-copy optimizations" in paper §II);
+* **idempotent producers** (exactly-once across client retries): each
+  partition keeps a producer-state table (pid → epoch, last sequence,
+  recent batch runs) derived from (pid, epoch, seq) stamps embedded in
+  the records themselves, so ``producer_append`` resolves a retried
+  batch to its *original* offsets instead of re-appending, the table
+  replicates with the records, and it is rebuilt from the retained log
+  after truncation (see DESIGN.md §7).
 
 The log is an in-process, host-memory structure (segments are bytearrays)
 with optional disk spill. On a TPU pod the broker is colocated with the
@@ -40,6 +47,8 @@ __all__ = [
     "METADATA_TOPIC",
     "LogConfig",
     "OffsetOutOfRange",
+    "OutOfOrderSequence",
+    "ProducerFenced",
     "Record",
     "RecordBatch",
     "StreamBackend",
@@ -56,6 +65,75 @@ METADATA_TOPIC = "__cluster_metadata"
 
 class OffsetOutOfRange(LookupError):
     """Requested offset is below the log start (evicted) or past the end."""
+
+
+class ProducerFenced(RuntimeError):
+    """An idempotent append carried a producer epoch older than the one the
+    partition (or cluster) has seen — a *zombie*: a prior incarnation of a
+    producer whose id was re-initialized with a bumped epoch. Fatal to the
+    producer instance (Kafka's PRODUCER_FENCED); deliberately NOT a
+    ``ClusterError`` subclass, so client retry loops never re-send a fenced
+    batch."""
+
+
+class OutOfOrderSequence(RuntimeError):
+    """An idempotent append's sequence number is neither the next expected
+    one, a retry resolvable inside the dedup window, nor a fresh epoch —
+    either a gap (records lost between producer and broker) or a duplicate
+    too old for the bounded window (Kafka's OUT_OF_ORDER_SEQUENCE_NUMBER /
+    DUPLICATE_SEQUENCE_NUMBER). Fatal: acking it could hide loss or
+    re-append data."""
+
+
+# Per-producer dedup window: how many distinct (non-mergeable) batch runs
+# each partition remembers per producer id. A synchronous producer has one
+# batch in flight, so its retry always hits the newest run; 8 leaves slack
+# for pipelined producers (Kafka keeps 5 batch metadata entries).
+_MAX_PRODUCER_RUNS = 8
+
+
+class _ProducerState:
+    """Dedup state for one producer id on one partition.
+
+    ``runs`` is a bounded list of ``[first_seq, last_seq, first_offset]``
+    spans that are contiguous in *both* sequence and offset, so a retried
+    batch fully inside a run maps back to its original offsets by
+    arithmetic (``first_offset + (seq - first_seq)``). Because runs are
+    derived purely from the records in the log (in log order), a leader
+    and its followers — and a truncated log after a rebuild — always agree
+    on the same table without shipping snapshots.
+    """
+
+    __slots__ = ("epoch", "last_seq", "runs")
+
+    def __init__(self, epoch: int):
+        self.epoch = epoch
+        self.last_seq = -1
+        self.runs: list[list[int]] = []
+
+    def note(self, first_seq: int, last_seq: int, first_offset: int) -> None:
+        """Record an appended span (contiguous in seq and offset)."""
+        if self.runs:
+            r = self.runs[-1]
+            if (
+                first_seq == r[1] + 1
+                and first_offset == r[2] + (r[1] - r[0]) + 1
+            ):
+                r[1] = last_seq  # extends the newest run
+                self.last_seq = max(self.last_seq, last_seq)
+                return
+        self.runs.append([first_seq, last_seq, first_offset])
+        del self.runs[:-_MAX_PRODUCER_RUNS]
+        self.last_seq = max(self.last_seq, last_seq)
+
+    def find(self, seq: int, n: int) -> tuple[int, int] | None:
+        """Original (first, last) offsets of a retried batch ``[seq,
+        seq+n)``, or None if it is not fully inside a cached run."""
+        for r in reversed(self.runs):
+            if r[0] <= seq and seq + n - 1 <= r[1]:
+                first = r[2] + (seq - r[0])
+                return first, first + n - 1
+        return None
 
 
 def default_partition(
@@ -143,6 +221,9 @@ class _Segment:
         "key_starts",
         "key_lengths",
         "timestamps",
+        "pids",
+        "peps",
+        "pseqs",
         "count",
         "created_ms",
         "_spill_file",
@@ -167,6 +248,16 @@ class _Segment:
         self.key_starts: list[int] = []
         self.key_lengths: list[int] = []
         self.timestamps: list[int] = []
+        # per-record producer metadata (pid < 0 ⇒ non-idempotent record):
+        # batches carry their (pid, epoch, seq) into the log itself, so a
+        # replica — or a rebuild after truncation — derives exactly the
+        # same producer-state table the leader built incrementally.
+        # Lazily allocated (None until the segment's first stamped
+        # record, backfilled with sentinels then), so purely
+        # non-idempotent partitions pay nothing per record.
+        self.pids: list[int] | None = None
+        self.peps: list[int] | None = None
+        self.pseqs: list[int] | None = None
         self.count = 0
         self.created_ms = created_ms
         self._spill_file = None
@@ -189,10 +280,14 @@ class _Segment:
         values: Sequence[bytes | bytearray | memoryview],
         keys: Sequence[bytes | None] | None,
         timestamp_ms: int | Sequence[int],
+        prods: tuple[Sequence[int], Sequence[int], Sequence[int]] | None = None,
     ) -> None:
         """Append one message set in bulk: one ``join`` into the shared
         buffer plus list extends, instead of a per-record Python loop —
-        the hot path of every produce and every replica push."""
+        the hot path of every produce and every replica push.
+
+        ``prods`` is per-record producer metadata ``(pids, epochs, seqs)``
+        (parallel sequences); None extends the non-idempotent sentinel."""
         n = len(values)
         if n == 0:
             return
@@ -232,6 +327,19 @@ class _Segment:
             self.timestamps.extend([timestamp_ms] * n)
         else:
             self.timestamps.extend(timestamp_ms)
+        if prods is not None:
+            if self.pids is None:
+                # first stamped record: backfill the unstamped prefix
+                self.pids = [-1] * self.count
+                self.peps = [-1] * self.count
+                self.pseqs = [-1] * self.count
+            self.pids.extend(prods[0])
+            self.peps.extend(prods[1])
+            self.pseqs.extend(prods[2])
+        elif self.pids is not None:
+            self.pids.extend(itertools.repeat(-1, n))
+            self.peps.extend(itertools.repeat(-1, n))
+            self.pseqs.extend(itertools.repeat(-1, n))
         self.count += n
 
     def record(self, topic: str, partition: int, rel: int) -> Record:
@@ -324,6 +432,14 @@ class _Partition:
         self.clock = clock
         self.segments: list[_Segment] = [_Segment(0, clock())]
         self.log_start_offset = 0  # first retained offset
+        # pid -> dedup state; derived purely from the records in the log
+        # (their embedded (pid, epoch, seq) metadata), kept incrementally
+        # on every append and rebuilt from the retained log after
+        # truncation — so leader, followers and a reconciled rejoiner all
+        # hold the same table. The window is additionally bounded by
+        # retention: a pid whose records were all evicted starts fresh
+        # (Kafka's producer-id expiry).
+        self.producers: dict[int, _ProducerState] = {}
         self.lock = threading.RLock()
 
     # ------------------------------------------------------------------ write
@@ -332,15 +448,36 @@ class _Partition:
         values: Sequence[bytes],
         keys: Sequence[bytes | None] | None,
         timestamps: Sequence[int] | None = None,
+        prods: tuple[Sequence[int], Sequence[int], Sequence[int]] | None = None,
+        producer: tuple[int, int, int] | None = None,
     ) -> tuple[int, int]:
         """Append a message set; returns (first_offset, last_offset).
 
         ``timestamps`` is passed by replication only: a follower re-appends
         leader records with their original timestamps so replicas agree on
         time-based retention and on what consumers observe after failover.
+
+        Producer metadata rides the same way: ``producer=(pid, epoch,
+        base_seq)`` stamps one batch (leader append / direct ISR push —
+        sequences run ``base_seq..base_seq+n-1``), while ``prods`` carries
+        per-record metadata fetched from another replica's log. Either
+        path updates this partition's dedup table as a side effect; the
+        *checks* (fencing, dedup, gap detection) live in
+        :meth:`idempotent_append` — replication never re-validates, leader
+        order is law.
         """
         with self.lock:
             now = self.clock()
+            n = len(values)
+            if producer is not None:
+                pid, pep, seq = producer
+                # lazy C-level iterables: the segment extends consume them
+                # without materializing intermediate lists (hot path)
+                prods = (
+                    itertools.repeat(pid, n),
+                    itertools.repeat(pep, n),
+                    range(seq, seq + n),
+                )
             seg = self.segments[-1]
             if seg.size_bytes >= self.cfg.segment_bytes and seg.count > 0:
                 if self.cfg.spill_dir is not None:  # seal -> mmap-backed file
@@ -352,9 +489,118 @@ class _Partition:
                 seg = _Segment(seg.base_offset + seg.count, now)
                 self.segments.append(seg)
             first = seg.base_offset + seg.count
-            seg.append_batch(values, keys, now if timestamps is None else timestamps)
+            seg.append_batch(
+                values, keys, now if timestamps is None else timestamps, prods
+            )
+            if producer is not None:
+                # one contiguous batch: a single run merge, off the
+                # per-record path (the acks=all hot path pushes batches)
+                self._note_producer_run(pid, pep, seq, seq + n - 1, first)
+            elif prods is not None:
+                self._note_producer_records(prods, first)
             self._enforce_retention(now)
             return first, seg.last_offset
+
+    # ------------------------------------------------------ producer state
+    def _producer_state(self, pid: int, epoch: int) -> _ProducerState | None:
+        """State for ``pid`` at ``epoch``; a newer epoch resets the dedup
+        window (an epoch bump restarts sequence numbering), an older one
+        returns None (the record predates the current incarnation)."""
+        st = self.producers.get(pid)
+        if st is None or epoch > st.epoch:
+            st = _ProducerState(epoch)
+            self.producers[pid] = st
+        elif epoch < st.epoch:
+            return None
+        return st
+
+    def _note_producer_run(
+        self, pid: int, epoch: int, first_seq: int, last_seq: int, first_off: int
+    ) -> None:
+        st = self._producer_state(pid, epoch)
+        if st is not None:
+            st.note(first_seq, last_seq, first_off)
+
+    def _note_producer_records(
+        self,
+        prods: tuple[Sequence[int], Sequence[int], Sequence[int]],
+        first_off: int,
+    ) -> None:
+        """Replication path: fold per-record metadata into the table.
+        Consecutive records merge into the same runs the source built, so
+        replica tables converge on the leader's."""
+        pids, peps, pseqs = prods
+        for i, pid in enumerate(pids):
+            if pid >= 0:
+                self._note_producer_run(
+                    pid, peps[i], pseqs[i], pseqs[i], first_off + i
+                )
+
+    def _rebuild_producer_state(self) -> None:
+        """Re-derive the dedup table from the retained log (after
+        ``truncate_to``): state for truncated records must disappear —
+        their batches are gone, so a retry must re-append, not dedup
+        against offsets that no longer hold them."""
+        self.producers = {}
+        for seg in self.segments:
+            pids = seg.pids
+            if pids is None:
+                continue  # segment never saw a stamped record
+            base = seg.base_offset
+            for r in range(seg.count):
+                if pids[r] >= 0:
+                    self._note_producer_run(
+                        pids[r], seg.peps[r], seg.pseqs[r], seg.pseqs[r],
+                        base + r,
+                    )
+
+    def idempotent_append(
+        self,
+        values: Sequence[bytes],
+        keys: Sequence[bytes | None] | None,
+        timestamps: Sequence[int] | int | None,
+        pid: int,
+        epoch: int,
+        seq: int,
+    ) -> tuple[int, int, bool]:
+        """Leader-side idempotent append: dedup + fencing + gap detection.
+
+        Returns ``(first, last, duplicate)``. A retried batch whose
+        sequences are already in the log returns the **original** offsets
+        with ``duplicate=True`` instead of re-appending — the exactly-once
+        contract across client retries. Raises :class:`ProducerFenced` for
+        a stale epoch and :class:`OutOfOrderSequence` for a gap or a
+        duplicate older than the dedup window.
+        """
+        with self.lock:
+            n = len(values)
+            st = self.producers.get(pid)
+            if st is not None:
+                if epoch < st.epoch:
+                    raise ProducerFenced(
+                        f"{self.topic}:{self.index} producer {pid} epoch "
+                        f"{epoch} fenced by newer epoch {st.epoch}"
+                    )
+                if epoch == st.epoch and st.last_seq >= 0:
+                    hit = st.find(seq, n)
+                    if hit is not None:
+                        return hit[0], hit[1], True
+                    if seq <= st.last_seq:
+                        raise OutOfOrderSequence(
+                            f"{self.topic}:{self.index} producer {pid} "
+                            f"sequence {seq} already appended but outside "
+                            f"the dedup window (last_seq {st.last_seq})"
+                        )
+                    if seq != st.last_seq + 1:
+                        raise OutOfOrderSequence(
+                            f"{self.topic}:{self.index} producer {pid} "
+                            f"sequence gap: expected {st.last_seq + 1}, "
+                            f"got {seq}"
+                        )
+            first, last = self.append_batch(
+                values, keys, timestamps, producer=(pid, epoch, seq)
+            )
+            return first, last, False
 
     # ------------------------------------------------------------------- read
     @property
@@ -424,15 +670,29 @@ class _Partition:
 
     def fetch_raw(
         self, offset: int, max_records: int
-    ) -> tuple[list[bytes], list[bytes | None], list[int]]:
-        """Replication fetch: materialized (values, keys, timestamps) so a
-        follower can re-append them verbatim to its copy of the partition."""
+    ) -> tuple[
+        list[bytes],
+        list[bytes | None],
+        list[int],
+        tuple[list[int], list[int], list[int]] | None,
+    ]:
+        """Replication fetch: materialized (values, keys, timestamps,
+        producer metadata) so a follower can re-append them verbatim to
+        its copy of the partition — including the (pid, epoch, seq) stamps
+        its dedup table is derived from."""
         with self.lock:
             n = self._bounded_count(offset, max_records)
             values: list[bytes] = []
             keys: list[bytes | None] = []
             timestamps: list[int] = []
-            for seg, lo, hi in self._iter_spans(offset, n):
+            pids: list[int] = []
+            peps: list[int] = []
+            pseqs: list[int] = []
+            spans = list(self._iter_spans(offset, n))
+            # None unless some record in range is stamped, so followers of
+            # purely non-idempotent partitions append lazily too
+            stamped = any(seg.pids is not None for seg, _, _ in spans)
+            for seg, lo, hi in spans:
                 for r in range(lo, hi):
                     start = seg.starts[r]
                     values.append(bytes(seg.buf[start : start + seg.lengths[r]]))
@@ -442,7 +702,20 @@ class _Partition:
                         None if klen < 0 else bytes(seg.key_buf[ks : ks + klen])
                     )
                     timestamps.append(seg.timestamps[r])
-            return values, keys, timestamps
+                if not stamped:
+                    continue
+                if seg.pids is None:
+                    pids.extend(itertools.repeat(-1, hi - lo))
+                    peps.extend(itertools.repeat(-1, hi - lo))
+                    pseqs.extend(itertools.repeat(-1, hi - lo))
+                else:
+                    pids.extend(seg.pids[lo:hi])
+                    peps.extend(seg.peps[lo:hi])
+                    pseqs.extend(seg.pseqs[lo:hi])
+            return (
+                values, keys, timestamps,
+                (pids, peps, pseqs) if stamped else None,
+            )
 
     def reset_to(self, offset: int) -> int:
         """Discard the entire partition contents and restart the log at
@@ -453,6 +726,9 @@ class _Partition:
                 s.drop_spill()
             self.segments = [_Segment(offset, self.clock())]
             self.log_start_offset = offset
+            # the log is empty: dedup state rebuilds as records re-fetch
+            # (replica_append carries their producer metadata)
+            self.producers = {}
             return offset
 
     def truncate_to(self, offset: int) -> int:
@@ -470,6 +746,7 @@ class _Partition:
                 self.segments.pop().drop_spill()
             if not self.segments:
                 self.segments = [_Segment(offset, self.clock())]
+                self._rebuild_producer_state()
                 return offset
             seg = self.segments[-1]
             rel = offset - seg.base_offset
@@ -494,16 +771,26 @@ class _Partition:
                 del seg.key_starts[rel:]
                 del seg.key_lengths[rel:]
                 del seg.timestamps[rel:]
+                if seg.pids is not None:
+                    del seg.pids[rel:]
+                    del seg.peps[rel:]
+                    del seg.pseqs[rel:]
                 seg.count = rel
             if seg._spill_file is not None:
                 # sealed/spilled segments are read-only maps — appendable
                 # writes need a fresh heap-backed active segment
                 self.segments.append(_Segment(offset, self.clock()))
+            # dedup state for the truncated suffix must not survive it: a
+            # deposed leader that rejoins (leader-epoch reconciliation)
+            # re-derives the table from what the log still holds, so its
+            # table converges with the new leader's as it re-fetches
+            self._rebuild_producer_state()
             return offset
 
     # -------------------------------------------------------------- retention
     def _enforce_retention(self, now_ms: int) -> None:
         cfg = self.cfg
+        evicted = False
         # never evict the active (last) segment
         while len(self.segments) > 1:
             head = self.segments[0]
@@ -526,6 +813,34 @@ class _Partition:
                 break
             self.segments.pop(0).drop_spill()
             self.log_start_offset = self.segments[0].base_offset
+            evicted = True
+        if evicted:
+            self._expire_producers()
+
+    def _expire_producers(self) -> None:
+        """Age producer state out with retention: drop runs whose records
+        were evicted (trimming a run that straddles the log start), and
+        forget pids with nothing retained (Kafka's producer-id expiry).
+        Keeps the incrementally-built table identical to what a rebuild
+        from the retained log would produce, so leader and followers
+        stay in agreement even when one of them reconciled via
+        ``truncate_to``/``reset_to`` and the other never did."""
+        lso = self.log_start_offset
+        for pid in list(self.producers):
+            st = self.producers[pid]
+            kept: list[list[int]] = []
+            for r in st.runs:
+                end_off = r[2] + (r[1] - r[0])
+                if end_off < lso:
+                    continue  # fully evicted
+                if r[2] < lso:  # straddles the log start: trim the head
+                    r[0] += lso - r[2]
+                    r[2] = lso
+                kept.append(r)
+            if kept:
+                st.runs = kept
+            else:
+                del self.producers[pid]
 
     def size_bytes(self) -> int:
         with self.lock:
@@ -694,7 +1009,12 @@ class StreamLog:
     # them locally; a deposed leader truncates to the new leader's end.
     def replica_fetch(
         self, topic: str, partition: int, offset: int, max_records: int = 4096
-    ) -> tuple[list[bytes], list[bytes | None], list[int]]:
+    ) -> tuple[
+        list[bytes],
+        list[bytes | None],
+        list[int],
+        tuple[list[int], list[int], list[int]] | None,
+    ]:
         return self._partition(topic, partition).fetch_raw(offset, max_records)
 
     def replica_append(
@@ -704,6 +1024,8 @@ class StreamLog:
         values: Sequence[bytes],
         keys: Sequence[bytes | None] | None,
         timestamps: Sequence[int] | int,
+        prods: tuple[Sequence[int], Sequence[int], Sequence[int]] | None = None,
+        producer: tuple[int, int, int] | None = None,
     ) -> tuple[int, int]:
         """Append records with explicit timestamps (scalar or per-record).
 
@@ -712,10 +1034,48 @@ class StreamLog:
         and after failover, and ``retention_ms`` (keyed to record
         timestamps in ``_enforce_retention``) expires the same records on
         every replica — and by the cluster's leader-side append, which
-        stamps the batch once and pushes the same timestamps to the ISR."""
+        stamps the batch once and pushes the same timestamps to the ISR.
+
+        Producer metadata travels the same two ways: ``prods`` per-record
+        (fetched via :meth:`replica_fetch`) or ``producer`` batch-level
+        (the acks=all direct ISR push, one run-merge instead of a
+        per-record loop). Either keeps the follower's dedup table in step
+        with the leader's, so exactly-once survives failover."""
         return self._partition(topic, partition).append_batch(
-            values, keys, timestamps
+            values, keys, timestamps, prods=prods, producer=producer
         )
+
+    def producer_append(
+        self,
+        topic: str,
+        partition: int,
+        values: Sequence[bytes],
+        keys: Sequence[bytes | None] | None,
+        timestamps: Sequence[int] | int,
+        pid: int,
+        epoch: int,
+        seq: int,
+    ) -> tuple[int, int, bool]:
+        """Leader-side idempotent append: returns ``(first, last,
+        duplicate)``; a retried batch resolves to its original offsets
+        with ``duplicate=True`` instead of re-appending. See
+        :meth:`_Partition.idempotent_append` for the fencing/ordering
+        rules."""
+        return self._partition(topic, partition).idempotent_append(
+            values, keys, timestamps, pid, epoch, seq
+        )
+
+    def producer_state(
+        self, topic: str, partition: int
+    ) -> dict[int, tuple[int, int]]:
+        """Snapshot of the partition's dedup table: pid -> (epoch,
+        last_seq). Observability/test hook."""
+        part = self._partition(topic, partition)
+        with part.lock:
+            return {
+                pid: (st.epoch, st.last_seq)
+                for pid, st in part.producers.items()
+            }
 
     def truncate_to(self, topic: str, partition: int, offset: int) -> int:
         return self._partition(topic, partition).truncate_to(offset)

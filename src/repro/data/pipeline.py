@@ -29,7 +29,10 @@ message is on the full ISR before the producer moves on — so the stream a
 control message announces survives the loss of any single broker.
 ``ingest(num_threads=k)`` streams dataset shards from ``k`` producer
 threads to distinct partitions in parallel — the cluster's per-partition
-locking means the appends don't contend.
+locking means the appends don't contend. ``ingest(idempotent=True)``
+rides per-thread idempotent producers (and an exactly-once control-message
+send), so a retry after a lost ack can never duplicate a training record
+(DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -44,6 +47,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.cluster import ClusterProducer
 from repro.core.control import ControlMessage, StreamRange, send_control
 from repro.core.log import StreamBackend
 from repro.data.formats import AvroCodec, RawCodec, codec_from_control
@@ -177,6 +181,7 @@ def ingest(
     partition: int | None = None,
     message_set_size: int = 1024,
     num_threads: int = 1,
+    idempotent: bool = False,
     send_control_message: bool = True,
 ) -> ControlMessage:
     """Producer library: encode + stream a dataset, then announce it.
@@ -196,20 +201,36 @@ def ingest(
     threads sharing one partition would serialize on its lock anyway
     while interleaving their chunks, fragmenting the range list the
     control message carries.
+
+    ``idempotent=True`` (clusters only; a bare in-process ``StreamLog``
+    has no retry loop to dedup) streams through per-thread idempotent
+    :class:`~repro.core.cluster.ClusterProducer` instances and sends the
+    control message through one of them, so a retried append — a leader
+    died after committing but before acking — cannot re-enter the
+    training stream as a duplicate record, and the emitted ranges always
+    name each record's single, original offset (paper §V: every retry
+    duplicate is a *training-data* duplicate).
     """
     log.ensure_topic(topic)
     encoded = codec.encode_batch(arrays)
     total = len(encoded)
+    use_idem = idempotent and hasattr(log, "init_producer")
 
     def produce_span(
         span: Sequence[bytes], part: int | None
-    ) -> list[StreamRange]:
+    ) -> tuple[list[StreamRange], "ClusterProducer | None"]:
+        producer = ClusterProducer(log, idempotent=True) if use_idem else None
+        append = producer.send_batch if producer is not None else (
+            lambda t, chunk, partition: log.produce_batch(
+                t, chunk, partition=partition
+            )
+        )
         out: list[StreamRange] = []
         cur: tuple[int, int, int] | None = None  # (partition, first, last)
         i = 0
         while i < len(span):
             chunk = span[i : i + message_set_size]
-            p, first, last = log.produce_batch(topic, chunk, partition=part)
+            p, first, last = append(topic, chunk, partition=part)
             if cur is not None and cur[0] == p and first == cur[2] + 1:
                 cur = (p, cur[1], last)
             else:
@@ -224,7 +245,7 @@ def ingest(
             i += message_set_size
         if cur is not None:
             out.append(StreamRange(topic, cur[0], cur[1], cur[2] - cur[1] + 1))
-        return out
+        return out, producer
 
     num_threads = max(1, min(num_threads, total or 1))
     if partition is not None:
@@ -232,7 +253,7 @@ def ingest(
     else:
         num_threads = min(num_threads, log.num_partitions(topic))
     if num_threads == 1:
-        ranges = produce_span(encoded, partition)
+        ranges, control_producer = produce_span(encoded, partition)
     else:
         per = -(-total // num_threads)  # ceil: contiguous, balanced shards
         spans = [encoded[i : i + per] for i in range(0, total, per)]
@@ -243,9 +264,10 @@ def ingest(
                 pool.submit(produce_span, span, i)
                 for i, span in enumerate(spans)
             ]
-            shard_ranges = [f.result() for f in futs]
+            results = [f.result() for f in futs]
         # shard order == original record order (shards are contiguous)
-        ranges = [r for rs in shard_ranges for r in rs]
+        ranges = [r for rs, _ in results for r in rs]
+        control_producer = results[0][1]
 
     msg = ControlMessage(
         deployment_id=deployment_id,
@@ -257,7 +279,9 @@ def ingest(
         ranges=ranges,
     )
     if send_control_message:
-        send_control(log, msg)
+        # the announce rides the same exactly-once path as the data: a
+        # duplicated control message would re-trigger training
+        send_control(log, msg, producer=control_producer)
     return msg
 
 

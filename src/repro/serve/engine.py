@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.consumer import ConsumerGroup
+from repro.core.consumer import ConsumerGroup, RebalanceError
 from repro.core.log import StreamBackend
 from repro.core.registry import Registry, TrainedResult
 from repro.data.formats import codec_from_control
@@ -112,10 +112,25 @@ class InferenceReplica:
         dead. Splitting the tick lets a deployment run every replica's
         compute concurrently while still publishing (and committing) in
         replica order, so the output stream stays deterministic."""
-        if not self.alive or self.replica_id not in self.consumer.group.members:
+        if not self.alive:
+            return None
+        if self.replica_id not in self.consumer.group.members:
+            # evicted while alive (heartbeats lapsed under load, not a
+            # crash): re-enter the group and resume from committed
+            # offsets next tick — without this a momentarily-stalled
+            # replica would stay silent forever
+            self.consumer.rejoin()
             return None
         outs: list[list[bytes]] = []
-        for batch in self.consumer.poll(max_records):
+        try:
+            polled = self.consumer.poll(max_records)
+        except RebalanceError:
+            # expired between the membership check above and the poll
+            # (failure detection ran concurrently): rejoin and skip the
+            # tick instead of killing the deployment's poll thread
+            self.consumer.rejoin()
+            return None
+        for batch in polled:
             mat = batch.to_matrix()
             # inference streams carry only the data fields; tolerate
             # full-record streams by slicing the data prefix

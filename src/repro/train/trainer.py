@@ -19,7 +19,12 @@ Jobs accept any :class:`~repro.core.log.StreamBackend`: against a
 replicated :class:`~repro.core.cluster.BrokerCluster` the control topic and
 the stream ranges a job reads both survive broker loss, so a stream
 ingested at ``acks='all'`` remains trainable — and replayable to new
-deployments (§V) — after any single broker dies.
+deployments (§V) — after any single broker dies. With
+``ingest(idempotent=True)`` the stream a job trains on is additionally
+**exactly-once**: client retries during ingest can neither duplicate a
+training record nor re-announce the stream (a duplicated control message
+would re-trigger training), and ``wait_for_control`` rides out
+mid-election windows instead of dying on them — see DESIGN.md §7.
 """
 
 from __future__ import annotations
@@ -35,6 +40,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.control import ControlMessage, poll_control
+from repro.core.controller import ClusterError
 from repro.core.log import StreamBackend
 from repro.core.registry import Registry
 from repro.data.pipeline import BatchIterator, ShardedFeeder, StreamDataset
@@ -232,10 +238,21 @@ class TrainingJob:
 
     # ---------------------------------------------------------------- control
     def wait_for_control(self, poll_interval: float = 0.0, max_polls: int = 1000):
-        """Algorithm 1's readControlStreams loop."""
+        """Algorithm 1's readControlStreams loop.
+
+        On a cluster, the control topic can be momentarily unreadable
+        mid-election (leaderless partition, no controller quorum); that
+        counts as an empty poll and the loop retries — the same
+        skip-and-retry contract the consumer-group read path uses — so a
+        waiting training job survives a broker or controller failover
+        instead of dying before its stream is even announced.
+        """
         offset = 0
         for _ in range(max_polls):
-            msg, offset = poll_control(self.log, self.deployment_id, offset)
+            try:
+                msg, offset = poll_control(self.log, self.deployment_id, offset)
+            except ClusterError:
+                msg = None  # control topic unavailable mid-election
             if msg is not None:
                 return msg
             if poll_interval:

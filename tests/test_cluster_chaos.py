@@ -10,6 +10,7 @@ leader election; and a control-message replay of a pre-failure stream
 trains successfully end-to-end.
 """
 
+import itertools
 import threading
 import time
 
@@ -24,6 +25,7 @@ from repro.core.cluster import (
     ClusterError,
     ClusterProducer,
     ControllerUnavailable,
+    NotLeaderError,
 )
 from repro.core.controller import MetadataCommand
 from repro.core.consumer import ConsumerGroup
@@ -215,6 +217,148 @@ def test_daemon_zero_acked_loss_leader_killed_under_producer_threads():
         assert [bytes(v) for v in got.values] == vals, (
             f"partition {p}: acked records lost/duplicated after leader kill"
         )
+
+
+def test_idempotent_producers_exactly_once_through_leader_kill_and_ack_loss(
+    monkeypatch,
+):
+    """The PR-4 acceptance scenario: background daemon running, two
+    idempotent producer threads streaming at acks=all with *aggressive*
+    retries — every ~6th committed append loses its response in transit
+    (the canonical duplicate window), and a partition leader is killed
+    genuinely mid-stream on top. Exact audit: each partition's log equals
+    the acked payload sequence record for record (zero loss AND zero
+    duplicates), and every ack's returned offsets name that batch's one
+    true copy — dedup state having survived the failover via the direct
+    ISR push and log-rebuilt reconciliation."""
+    c = make_cluster(parts=2)
+    c.start_replication(interval_s=0.002, workers=2)
+    orig = c.broker_append
+    drops = itertools.count()
+
+    def flaky_append(broker_id, topic, partition, values, **kw):
+        first, last = orig(broker_id, topic, partition, values, **kw)
+        if next(drops) % 6 == 4:  # committed; the response is lost
+            raise NotLeaderError(
+                topic, partition, c.leader_for(topic, partition)
+            )
+        return first, last
+
+    monkeypatch.setattr(c, "broker_append", flaky_append)
+    n_each, kill_at = 200, 40
+    acked: dict[int, list[tuple[int, list[bytes]]]] = {0: [], 1: []}
+    errors: list[BaseException] = []
+    reached_kill_point = threading.Barrier(3)  # 2 producers + killer
+
+    def produce(tid):
+        prod = ClusterProducer(c, acks="all", retries=20, idempotent=True)
+        sent = 0
+        deadline = time.monotonic() + 60
+        try:
+            while sent < n_each:
+                vals = [f"p{tid}-{sent + j}".encode() for j in range(4)]
+                while True:
+                    try:
+                        _, first, last = prod.send_batch(
+                            "copd", vals, partition=tid
+                        )
+                        break
+                    except ClusterError:
+                        # un-acked after exhausted retries: back off and
+                        # re-send — idempotence makes the re-send safe
+                        if time.monotonic() > deadline:
+                            raise
+                        time.sleep(0.002)
+                assert last - first + 1 == len(vals)
+                acked[tid].append((first, vals))  # the ack happened
+                sent += 4
+                if sent == kill_at:
+                    reached_kill_point.wait(timeout=60)
+        except BaseException as e:
+            errors.append(e)
+            reached_kill_point.abort()  # wake the other waiters to fail fast
+            raise
+
+    threads = [threading.Thread(target=produce, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        reached_kill_point.wait(timeout=60)
+        c.kill_broker(c.leader_for("copd", 0))
+    except threading.BrokenBarrierError:
+        pass  # a producer failed early; the errors assert below reports it
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "producer hung"
+    assert errors == [], f"producers failed through failover: {errors}"
+    c.stop_replication()
+    monkeypatch.setattr(c, "broker_append", orig)
+    for p, batches in acked.items():
+        assert len(batches) == n_each // 4  # every batch was acked
+        flat = [v for _, vs in batches for v in vs]
+        got = c.read_range("copd", p, 0, len(flat))
+        assert [bytes(v) for v in got.values] == flat, (
+            f"partition {p}: acked records lost/duplicated/reordered"
+        )
+        # the log ends exactly where the acked stream does: no duplicate
+        # copies hiding beyond the audited prefix
+        assert c.log_end_offset("copd", p) == len(flat)
+        # offset-exactness: every ack named its batch's single, original
+        # location (ingest builds control-message ranges from these)
+        for first, vs in batches:
+            span = c.read_range("copd", p, first, len(vs))
+            assert [bytes(v) for v in span.values] == vs
+
+
+def test_idempotent_ingest_trains_exactly_once_after_leader_kill(monkeypatch):
+    """§V end to end under chaos: idempotent threaded ingest through ack
+    loss *plus* a mid-stream leader kill, then a TrainingJob consumes the
+    stream — the training data equals the source dataset record for
+    record (duplicates would skew §V training), and training completes."""
+    c = make_cluster()
+    reg = core.Registry()
+    spec = reg.register_model("copd-mlp")
+    cfg = reg.create_configuration([spec.model_id])
+    dep = reg.deploy(cfg.config_id, "train")
+    arrays = copd_mlp.synth_dataset(n=220)
+
+    orig = c.broker_append
+    calls = itertools.count()
+    killed: list[int] = []
+
+    def chaotic_append(broker_id, topic, partition, values, **kw):
+        first, last = orig(broker_id, topic, partition, values, **kw)
+        n = next(calls)
+        if n == 5 and not killed:
+            # the leader dies right after committing this batch; its ack
+            # never reaches the client, which must retry on the successor
+            killed.append(broker_id)
+            c.kill_broker(broker_id)
+            raise NotLeaderError(topic, partition, None)
+        if n % 7 == 3:  # and ~1/7 of acks are simply lost in transit
+            raise NotLeaderError(
+                topic, partition, c.leader_for(topic, partition)
+            )
+        return first, last
+
+    monkeypatch.setattr(c, "broker_append", chaotic_append)
+    msg = data.ingest(
+        c, "copd", _codec(), arrays, dep.deployment_id,
+        validation_rate=0.2, message_set_size=32,
+        num_threads=2, idempotent=True,
+    )
+    monkeypatch.setattr(c, "broker_append", orig)
+    assert killed, "chaos hook never fired"
+    assert sum(r.length for r in msg.ranges) == 220
+    got = data.StreamDataset(c, msg).read()
+    np.testing.assert_array_equal(got["label"], arrays["label"])
+    np.testing.assert_allclose(got["data"], arrays["data"])
+    job = TrainingJob(c, reg, dep.deployment_id, spec.model_id,
+                      loss_fn=copd_mlp.loss_fn, init_fn=copd_mlp.init,
+                      opt=adamw(1e-2))
+    res = job.run(batch_size=10, epochs=8)
+    assert res.metrics["loss"] < 2.0
+    assert len(reg.results_for(dep.deployment_id)) == 1
 
 
 def test_follower_reads_keep_inference_serving_through_election():

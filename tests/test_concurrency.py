@@ -247,11 +247,12 @@ class TestMidAppendLeaderDeath:
         orig = c._commit_batch
         died = []
 
-        def dying_commit(ctl, values, keys, now_ms, first, last):
+        def dying_commit(ctl, values, keys, now_ms, first, last,
+                         producer=None):
             if not died:
                 died.append(0)
                 c.brokers[0].alive = False  # dies append -> commit
-            orig(ctl, values, keys, now_ms, first, last)
+            orig(ctl, values, keys, now_ms, first, last, producer)
 
         c._commit_batch = dying_commit
         prod = ClusterProducer(c, acks="all")
@@ -281,11 +282,12 @@ class TestMidAppendLeaderDeath:
         orig = c._commit_batch
         died = []
 
-        def dying_commit(ctl, values, keys, now_ms, first, last):
+        def dying_commit(ctl, values, keys, now_ms, first, last,
+                         producer=None):
             if not died:
                 died.append(0)
                 c.brokers[0].alive = False
-            orig(ctl, values, keys, now_ms, first, last)
+            orig(ctl, values, keys, now_ms, first, last, producer)
 
         c._commit_batch = dying_commit
         prod = ClusterProducer(c, acks="all")

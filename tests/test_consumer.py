@@ -3,7 +3,8 @@
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.consumer import ConsumerGroup, range_assign
+from repro.core.cluster import PartitionOffline
+from repro.core.consumer import ConsumerGroup, RebalanceError, range_assign
 from repro.core.log import LogConfig, StreamLog, TopicPartition
 
 
@@ -87,3 +88,178 @@ class TestGroup:
         total = sum(len(b) for b in c.poll()) + sum(len(b) for b in g.join("b2").poll())
         # after rebalance everyone restarts from committed offset 3
         assert total >= 1
+
+
+class TestRebalanceFencing:
+    """The three PR-4 bugfixes: generation-fenced commits, typed eviction
+    with rejoin, and skip-and-retry committed-offset resolution."""
+
+    def test_zombie_commit_cannot_rewind_new_owner(self):
+        log = _mklog(1)
+        g = ConsumerGroup(log, "g", ["t"])
+        tp = TopicPartition("t", 0)
+        log.produce_batch("t", [b"1", b"2", b"3", b"4"])
+        zombie = g.join("z")
+        zombie.poll(max_records=2)  # reads to offset 2 under this generation
+        # rebalance: the partition moves to the new member "a"
+        owner = g.join("a")
+        assert g.assignment("a") == [tp] and g.assignment("z") == []
+        owner.poll()
+        assert owner.commit()
+        assert log.committed_offset("g", tp) == 4
+        # the zombie's positions were polled under the old generation for a
+        # partition it no longer owns: the commit is fenced, not applied
+        assert not zombie.commit()
+        assert log.committed_offset("g", tp) == 4  # not rewound to 2
+
+    def test_stale_generation_commit_is_fenced_even_for_retained_partitions(self):
+        log = _mklog(2)
+        g = ConsumerGroup(log, "g", ["t"])
+        a = g.join("a")
+        log.produce_batch("t", [b"1", b"2"], partition=0)
+        log.produce_batch("t", [b"3"], partition=1)
+        a.poll()
+        g.join("b")  # generation moves on before "a" commits
+        assert not a.commit()  # whole commit fenced (Kafka CommitFailed)
+        assert log.committed_offset("g", TopicPartition("t", 0)) is None
+        # after re-syncing under the new generation, commits work again
+        a.poll()
+        assert a.commit()
+
+    def test_evicted_member_raises_typed_error_and_rejoins(self):
+        t = [0.0]
+        log = _mklog(2)
+        g = ConsumerGroup(log, "g", ["t"], session_timeout_s=5.0,
+                          clock=lambda: t[0])
+        lost: list[list[TopicPartition]] = []
+        a = g.join("a", on_revoked=lost.append)
+        b = g.join("b")
+        log.produce_batch("t", [b"1", b"2"], partition=0)
+        a.poll()
+        a.commit()
+        t[0] = 7.0
+        g.heartbeat("b")
+        assert g.expire_dead_members() == ["a"]
+        # a raw KeyError here used to kill the replica's poll thread
+        with pytest.raises(RebalanceError):
+            a.poll()
+        assert not a.commit()  # eviction also fences any buffered commit
+        a.rejoin()
+        assert "a" in g.members
+        # eviction lost every owned partition: the listener was told
+        # (Kafka's onPartitionsLost) before the fresh assignment
+        assert lost and lost[-1] == [TopicPartition("t", 0)]
+        # at-least-once: the rejoined member resumes from committed offsets
+        log.produce_batch("t", [b"3"], partition=0)
+        got = [bytes(v) for batch in a.poll() for v in batch.values]
+        assert got == [b"3"]
+
+    def test_unreadable_committed_offset_skips_and_retries(self):
+        class FlakyLog(StreamLog):
+            """committed_offset fails twice (mid-election window)."""
+
+            def __init__(self):
+                super().__init__()
+                self.failures = 2
+
+            def committed_offset(self, group, tp):
+                if self.failures > 0:
+                    self.failures -= 1
+                    raise PartitionOffline(f"{tp} has no leader")
+                return super().committed_offset(group, tp)
+
+        log = FlakyLog()
+        log.create_topic("t", LogConfig(num_partitions=2))
+        log.produce_batch("t", [b"1"], partition=0)
+        log.produce_batch("t", [b"2"], partition=1)
+        g = ConsumerGroup(log, "g", ["t"])
+        a = g.join("a")
+        # both partitions unresolvable this round: no records, no crash
+        assert a.poll() == []
+        # next poll resolves the skipped partitions and reads them
+        got = sorted(bytes(v) for batch in a.poll() for v in batch.values)
+        assert got == [b"1", b"2"]
+
+    def test_rebalance_listener_hooks_fire(self):
+        log = _mklog(4)
+        events: list[tuple[str, list[TopicPartition]]] = []
+        g = ConsumerGroup(log, "g", ["t"])
+        a = g.join(
+            "a",
+            on_revoked=lambda tps: events.append(("revoked", tps)),
+            on_assigned=lambda tps: events.append(("assigned", tps)),
+        )
+        a.poll()
+        assert events == [("assigned", [TopicPartition("t", p) for p in range(4)])]
+        g.join("b")  # rebalance: "a" keeps partitions 0-1, loses 2-3
+        events.clear()
+        a.poll()
+        assert events == [
+            ("revoked", [TopicPartition("t", 2), TopicPartition("t", 3)]),
+            ("assigned", [TopicPartition("t", 0), TopicPartition("t", 1)]),
+        ]
+
+    def test_revoked_includes_partitions_with_unresolved_positions(self):
+        class FlakyLog(StreamLog):
+            """committed_offset for t:3 never resolves (permanent
+            mid-election window for that one partition)."""
+
+            def committed_offset(self, group, tp):
+                if tp.partition == 3:
+                    raise PartitionOffline(f"{tp} has no leader")
+                return super().committed_offset(group, tp)
+
+        log = FlakyLog()
+        log.create_topic("t", LogConfig(num_partitions=4))
+        revoked: list[list[TopicPartition]] = []
+        g = ConsumerGroup(log, "g", ["t"])
+        a = g.join("a", on_revoked=revoked.append)
+        a.poll()  # owns 0-3; t:3's position never resolved
+        g.join("b")  # a keeps 0-1, loses 2-3
+        a.poll()
+        # t:3 was owned even though its position never resolved — it must
+        # still be reported revoked (listeners clean up per partition)
+        assert revoked == [[TopicPartition("t", 2), TopicPartition("t", 3)]]
+
+    def test_expired_inference_replica_rejoins_and_serves(self):
+        """An alive replica whose heartbeats lapsed (eviction, not crash)
+        re-enters the group and keeps serving — it must not go silent
+        forever."""
+        from repro.core.registry import Registry
+        from repro.data.formats import RawCodec
+        from repro.serve import InferenceDeployment
+
+        t = [0.0]
+        log = _mklog(2)
+        reg = Registry()
+        spec = reg.register_model("m")
+        cfg = reg.create_configuration([spec.model_id])
+        dep = reg.deploy(cfg.config_id, "inference")
+        codec = RawCodec("float32", (2,), "int32", ())
+        reg.upload_result(
+            dep.deployment_id, spec.model_id, {}, {},
+            input_format=codec.FORMAT, input_config=codec.input_config(),
+        )
+        result_id = reg.results_for(dep.deployment_id)[-1].result_id
+        infer = InferenceDeployment(
+            log, reg, result_id, predict_fn=lambda d: d["data"][:, :1],
+            input_topic="t", output_topic="preds", replicas=2,
+            session_timeout_s=5.0, parallel_poll=False, clock=lambda: t[0],
+        )
+        import numpy as np
+        reqs = np.arange(8, dtype=np.float32).reshape(4, 2)
+        log.produce_batch("t", [r.tobytes() for r in reqs[:2]], partition=0)
+        log.produce_batch("t", [r.tobytes() for r in reqs[2:]], partition=1)
+        assert infer.poll_all() == 4
+        # every replica's heartbeat lapses while alive (a long stall, not
+        # a crash) and failure detection evicts them all
+        t[0] = 20.0
+        assert sorted(infer.group.expire_dead_members()) == [
+            "replica-0", "replica-1",
+        ]
+        assert infer.group.members == []
+        log.produce_batch("t", [r.tobytes() for r in reqs[:2]], partition=0)
+        served = infer.poll_all()  # eviction observed: replicas rejoin
+        served += infer.poll_all()  # and serve again
+        assert served == 2
+        assert sorted(infer.group.members) == ["replica-0", "replica-1"]

@@ -1,0 +1,465 @@
+"""Exactly-once streaming: idempotent producers + replicated dedup state.
+
+Covers the full layer stack:
+
+* log-level producer-state semantics (dedup to original offsets, sequence
+  gaps, the bounded dedup window, epoch bumps, state rebuild after
+  truncation);
+* the **pinned duplicate-on-retry reproduction**: at acks=all a committed
+  append whose *response* is lost makes the client retry — without
+  idempotence the retry re-appends (the bug this PR fixes, pinned so it
+  stays reproducible), with it the retry resolves to the original offsets;
+* dedup state surviving leader failover (carried by the direct ISR push)
+  and truncation + re-leadership (rebuilt from the reconciled log);
+* PID allocation as a committed metadata command (unique across controller
+  failover, refused without quorum) and named-producer epoch-bump zombie
+  fencing;
+* ``ingest(idempotent=True)``: an exactly-once training stream through
+  ack loss, exact record-for-record equality.
+"""
+
+import itertools
+import threading
+
+import numpy as np
+import pytest
+
+import repro.data as data
+from repro.configs import copd_mlp
+from repro.core.cluster import (
+    BrokerCluster,
+    ClusterError,
+    ClusterProducer,
+    ControllerUnavailable,
+    NotLeaderError,
+)
+from repro.core.control import CONTROL_TOPIC
+from repro.core.log import (
+    LogConfig,
+    OutOfOrderSequence,
+    ProducerFenced,
+    StreamLog,
+)
+from repro.data.formats import AvroCodec, FieldSpec
+
+
+def _codec():
+    return AvroCodec(
+        [FieldSpec("data", "float32", (copd_mlp.N_FEATURES,))],
+        [FieldSpec("label", "int32", ())],
+    )
+
+
+# ----------------------------------------------------------- log-level state
+class TestLogProducerState:
+    def _log(self):
+        log = StreamLog()
+        log.create_topic("t", LogConfig(num_partitions=1))
+        return log
+
+    def test_retry_dedups_to_original_offsets(self):
+        log = self._log()
+        first, last, dup = log.producer_append(
+            "t", 0, [b"a", b"b", b"c"], None, 0, pid=7, epoch=0, seq=0
+        )
+        assert (first, last, dup) == (0, 2, False)
+        # exact retry: original offsets, nothing re-appended
+        assert log.producer_append(
+            "t", 0, [b"a", b"b", b"c"], None, 0, pid=7, epoch=0, seq=0
+        ) == (0, 2, True)
+        assert log.end_offset("t", 0) == 3
+        # next batch appends; retrying either batch still resolves
+        assert log.producer_append(
+            "t", 0, [b"d"], None, 0, pid=7, epoch=0, seq=3
+        ) == (3, 3, False)
+        assert log.producer_append(
+            "t", 0, [b"a", b"b", b"c"], None, 0, pid=7, epoch=0, seq=0
+        ) == (0, 2, True)
+        assert log.producer_append(
+            "t", 0, [b"d"], None, 0, pid=7, epoch=0, seq=3
+        ) == (3, 3, True)
+        assert log.end_offset("t", 0) == 4
+        assert log.producer_state("t", 0)[7] == (0, 3)
+
+    def test_interleaved_producers_dedup_independently(self):
+        log = self._log()
+        log.producer_append("t", 0, [b"x0", b"x1"], None, 0, 1, 0, 0)
+        log.producer_append("t", 0, [b"y0"], None, 0, 2, 0, 0)
+        log.producer_append("t", 0, [b"x2"], None, 0, 1, 0, 2)
+        # pid 1's runs are offset-discontiguous (pid 2 interleaved), yet
+        # each retry maps back to its own original offsets
+        assert log.producer_append("t", 0, [b"x0", b"x1"], None, 0, 1, 0, 0) \
+            == (0, 1, True)
+        assert log.producer_append("t", 0, [b"x2"], None, 0, 1, 0, 2) \
+            == (3, 3, True)
+        assert log.producer_append("t", 0, [b"y0"], None, 0, 2, 0, 0) \
+            == (2, 2, True)
+        assert log.end_offset("t", 0) == 4
+
+    def test_sequence_gap_raises(self):
+        log = self._log()
+        log.producer_append("t", 0, [b"a"], None, 0, 1, 0, 0)
+        with pytest.raises(OutOfOrderSequence, match="gap"):
+            log.producer_append("t", 0, [b"c"], None, 0, 1, 0, 5)
+        assert log.end_offset("t", 0) == 1  # nothing appended
+
+    def test_duplicate_older_than_window_raises(self):
+        log = self._log()
+        # alternate two pids so every record starts a fresh run, pushing
+        # pid 1's oldest runs out of the bounded window
+        for i in range(12):
+            log.producer_append("t", 0, [b"a%d" % i], None, 0, 1, 0, i)
+            log.producer_append("t", 0, [b"b%d" % i], None, 0, 2, 0, i)
+        with pytest.raises(OutOfOrderSequence, match="window"):
+            log.producer_append("t", 0, [b"a0"], None, 0, 1, 0, 0)
+        # the newest batch still dedups
+        first, last, dup = log.producer_append(
+            "t", 0, [b"a11"], None, 0, 1, 0, 11
+        )
+        assert dup and log.read_one("t", 0, first).value_bytes() == b"a11"
+
+    def test_epoch_bump_resets_and_fences(self):
+        log = self._log()
+        log.producer_append("t", 0, [b"a"], None, 0, 1, epoch=0, seq=0)
+        # a bumped epoch restarts sequence numbering (no dedup carryover)
+        first, last, dup = log.producer_append(
+            "t", 0, [b"a2"], None, 0, 1, epoch=1, seq=0
+        )
+        assert (first, last, dup) == (1, 1, False)
+        # the old incarnation is now a zombie
+        with pytest.raises(ProducerFenced):
+            log.producer_append("t", 0, [b"z"], None, 0, 1, epoch=0, seq=1)
+        assert log.end_offset("t", 0) == 2
+
+    def test_retention_expires_producer_state_with_the_records(self):
+        log = StreamLog()
+        log.create_topic(
+            "t",
+            LogConfig(num_partitions=1, segment_bytes=64, retention_bytes=192),
+        )
+        # each 64-byte batch fills a segment; retention keeps ~3 segments
+        for i in range(8):
+            log.producer_append(
+                "t", 0, [bytes(64)], None, 0, pid=3, epoch=0, seq=i
+            )
+        start = log.start_offset("t", 0)
+        assert start > 0  # retention really evicted a prefix
+        st = log.producer_state("t", 0)
+        assert st[3] == (0, 7)  # the retained tail still dedups
+        first, last, dup = log.producer_append(
+            "t", 0, [bytes(64)], None, 0, pid=3, epoch=0, seq=7
+        )
+        assert dup and first == 7
+        # a retry of an evicted batch is below the window, not a silent
+        # wrong-offset hit
+        with pytest.raises(OutOfOrderSequence):
+            log.producer_append(
+                "t", 0, [bytes(64)], None, 0, pid=3, epoch=0, seq=0
+            )
+        # a pid whose records were all evicted is forgotten entirely
+        for i in range(8):
+            log.producer_append(
+                "t", 0, [bytes(64)], None, 0, pid=4, epoch=0, seq=i
+            )
+        assert 3 not in log.producer_state("t", 0)
+
+    def test_truncation_rebuilds_state_from_retained_log(self):
+        log = self._log()
+        log.producer_append("t", 0, [b"a0", b"a1", b"a2"], None, 0, 9, 0, 0)
+        log.producer_append("t", 0, [b"b0", b"b1", b"b2"], None, 0, 9, 0, 3)
+        log.truncate_to("t", 0, 3)  # drop the second batch (unacked suffix)
+        assert log.producer_state("t", 0)[9] == (0, 2)
+        # the truncated batch's retry re-appends (it is genuinely gone)...
+        assert log.producer_append(
+            "t", 0, [b"b0", b"b1", b"b2"], None, 0, 9, 0, 3
+        ) == (3, 5, False)
+        # ...while the retained batch still dedups to its original offsets
+        assert log.producer_append(
+            "t", 0, [b"a0", b"a1", b"a2"], None, 0, 9, 0, 0
+        ) == (0, 2, True)
+        assert log.end_offset("t", 0) == 6
+
+
+# ------------------------------------------------- pinned duplicate-on-retry
+def _drop_ack_once(cluster, monkeypatch, *, kill_leader=False):
+    """Chaos hook: the next successful broker_append commits, but its
+    response is 'lost in transit' (NotLeaderError surfaced to the client)
+    — the canonical duplicate window. Optionally the leader also dies."""
+    orig = cluster.broker_append
+    state = {"fired": False}
+
+    def flaky(broker_id, topic, partition, values, **kw):
+        first, last = orig(broker_id, topic, partition, values, **kw)
+        if not state["fired"]:
+            state["fired"] = True
+            if kill_leader:
+                cluster.kill_broker(broker_id)
+            raise NotLeaderError(topic, partition, None)
+        return first, last
+
+    monkeypatch.setattr(cluster, "broker_append", flaky)
+    return state
+
+
+def _mkcluster(parts=1):
+    c = BrokerCluster(3, default_acks="all")
+    c.create_topic(
+        "t", LogConfig(num_partitions=parts, replication_factor=3)
+    )
+    return c
+
+
+def test_pinned_duplicate_on_retry_without_idempotence(monkeypatch):
+    """The bug, pinned: acks=all committed the batch but the ack was lost;
+    the plain client retry re-appends, duplicating every record."""
+    c = _mkcluster()
+    _drop_ack_once(c, monkeypatch)
+    prod = ClusterProducer(c, acks="all", retries=5)
+    vals = [b"r0", b"r1", b"r2"]
+    prod.send_batch("t", vals, partition=0)
+    got = c.read_range("t", 0, 0, c.end_offset("t", 0))
+    # the duplicate is really there — this assertion documents the failure
+    # mode idempotence exists to close
+    assert [bytes(v) for v in got.values] == vals + vals
+
+
+def test_idempotent_retry_is_exactly_once(monkeypatch):
+    """Same withheld-ack chaos, idempotent producer: the retry resolves to
+    the original offsets and nothing is re-appended."""
+    c = _mkcluster()
+    prod = ClusterProducer(c, acks="all", retries=5, idempotent=True)
+    _drop_ack_once(c, monkeypatch)
+    vals = [b"r0", b"r1", b"r2"]
+    p, first, last = prod.send_batch("t", vals, partition=0)
+    assert (first, last) == (0, 2)
+    got = c.read_range("t", 0, 0, c.end_offset("t", 0))
+    assert [bytes(v) for v in got.values] == vals
+    # the producer's sequence advanced exactly once: the next batch lands
+    # contiguously
+    _, first2, _ = prod.send_batch("t", [b"r3"], partition=0)
+    assert first2 == 3
+
+
+def test_dedup_survives_leader_failover(monkeypatch):
+    """The committed-but-unacked batch rode the direct ISR push, so the
+    new leader's dedup table already knows it: the retry after the old
+    leader's death returns the original offsets, not a duplicate."""
+    c = _mkcluster()
+    prod = ClusterProducer(c, acks="all", retries=10, idempotent=True)
+    warm = [b"w%d" % i for i in range(4)]
+    prod.send_batch("t", warm, partition=0)
+    _drop_ack_once(c, monkeypatch, kill_leader=True)
+    vals = [b"x%d" % i for i in range(4)]
+    p, first, last = prod.send_batch("t", vals, partition=0)
+    assert (first, last) == (4, 7)
+    got = c.read_range("t", 0, 0, c.end_offset("t", 0))
+    assert [bytes(v) for v in got.values] == warm + vals  # exactly once
+
+
+def test_dedup_survives_truncation_and_releadership():
+    """A deposed leader truncates its divergent suffix on rejoin and
+    rebuilds its dedup table from the reconciled log — so even after it
+    regains leadership, old batches dedup and replayed-after-truncation
+    batches resolve to their post-failover offsets."""
+    c = _mkcluster()
+    prod = ClusterProducer(c, acks="all", idempotent=True)
+    batches = []
+    for i in range(3):
+        vals = [f"b{i}-{j}".encode() for j in range(4)]
+        _, first, _ = prod.send_batch("t", vals, partition=0)
+        batches.append((first, vals))
+    pid, ep = prod.producer_id, prod.producer_epoch
+    leader0 = c.leader_for("t", 0)
+    # a batch reaches only the leader's local log (died before the push):
+    # committed nowhere, acked never
+    c.brokers[leader0].log.producer_append(
+        "t", 0, [b"z0", b"z1"], None, 0, pid, ep, 12
+    )
+    c.kill_broker(leader0)
+    # the retry lands on the new leader as a *fresh* append (the suffix
+    # never replicated, so this is not a duplicate)
+    leader1 = c.leader_for("t", 0)
+    assert c.broker_append(
+        leader1, "t", 0, [b"z0", b"z1"], producer=(pid, ep, 12)
+    ) == (12, 13)
+    # deposed leader rejoins: truncates its divergent copy, re-fetches,
+    # and its rebuilt dedup table matches the new leader's
+    c.restart_broker(leader0)
+    c.replicate_all()
+    assert c.brokers[leader0].log.end_offset("t", 0) == 14
+    assert c.brokers[leader0].log.producer_state("t", 0)[pid] == (ep, 13)
+    # make the rejoiner leader again; very old and post-truncation batches
+    # both dedup to their one true offsets
+    c.kill_broker(leader1)
+    assert c.leader_for("t", 0) == leader0
+    first0, vals0 = batches[0]
+    assert c.broker_append(
+        leader0, "t", 0, vals0, producer=(pid, ep, 0)
+    ) == (first0, first0 + len(vals0) - 1)
+    assert c.broker_append(
+        leader0, "t", 0, [b"z0", b"z1"], producer=(pid, ep, 12)
+    ) == (12, 13)
+    assert c.brokers[leader0].log.end_offset("t", 0) == 14  # no re-appends
+
+
+# --------------------------------------------------- PID allocation, fencing
+def test_pid_allocation_is_committed_metadata_and_survives_failover():
+    c = _mkcluster()
+    pid1, ep1 = c.init_producer()
+    assert (pid1, ep1) == (0, 0)
+    dead = c.kill_controller()
+    c.controller_tick()  # surviving quorum elects a successor
+    assert c.controller.leader() not in (None, dead)
+    pid2, _ = c.init_producer()
+    assert pid2 > pid1  # the successor inherited the committed grant
+    granted = [
+        cmd.pid for cmd in c.controller.committed_commands()
+        if cmd.kind == "allocate_pid"
+    ]
+    assert granted == [pid1, pid2]
+
+
+def test_pid_allocation_requires_controller_quorum():
+    c = _mkcluster()
+    lid = c.kill_controller()
+    survivors = [n for n in c.controller.nodes if n != lid]
+    c.controller.kill_node(survivors[0])  # 1 of 3 left: no quorum
+    with pytest.raises(ControllerUnavailable):
+        c.init_producer()
+
+
+def test_unresolved_idempotent_send_pins_sequence_to_same_batch(monkeypatch):
+    """A send that exhausts its retries is *unresolved*: the batch may or
+    may not sit committed under its sequence. Re-using that sequence for
+    DIFFERENT data could silently dedup the new batch against the old
+    offsets (data loss), so the partition pins to a same-batch
+    continuation: an identical re-send resumes exactly-once, anything
+    else raises ProducerFenced."""
+    c = _mkcluster()
+    prod = ClusterProducer(c, acks="all", retries=1, idempotent=True)
+    orig = c.broker_append
+
+    def always_drop_ack(broker_id, topic, partition, values, **kw):
+        orig(broker_id, topic, partition, values, **kw)  # commits...
+        raise NotLeaderError(topic, partition, None)  # ...ack never lands
+
+    monkeypatch.setattr(c, "broker_append", always_drop_ack)
+    with pytest.raises(ClusterError):
+        prod.send_batch("t", [b"a0", b"a1"], partition=0)
+    monkeypatch.setattr(c, "broker_append", orig)
+    # a DIFFERENT batch on the pinned sequence is refused — it must never
+    # be acked at batch A's offsets
+    with pytest.raises(ProducerFenced, match="unresolved"):
+        prod.send_batch("t", [b"B0", b"B1"], partition=0)
+    # the identical re-send continues the retry: A was committed, so it
+    # dedups to its one true copy and the stream stays exactly-once.
+    # keys=[None, None] spells the same batch as keys omitted — the
+    # continuation check must accept either spelling
+    _, first_a, _ = prod.send_batch(
+        "t", [b"a0", b"a1"], keys=[None, None], partition=0
+    )
+    assert first_a == 0 and c.end_offset("t", 0) == 2
+    # resolved: the producer moves on normally, B lands after A
+    _, first_b, _ = prod.send_batch("t", [b"B0", b"B1"], partition=0)
+    got = c.read_range("t", 0, 0, 4)
+    assert [bytes(v) for v in got.values] == [b"a0", b"a1", b"B0", b"B1"]
+
+
+def test_unretried_error_mid_loop_still_pins_unresolved_send(monkeypatch):
+    """An error outside the retried set (NotEnoughReplicasError during a
+    quorum/ISR window) can escape the retry loop AFTER an earlier attempt
+    already appended the batch. That exit must pin the sequence too — or
+    a later different batch would silently dedup against the committed
+    first attempt and vanish."""
+    from repro.core.cluster import NotEnoughReplicasError
+
+    c = _mkcluster()
+    prod = ClusterProducer(c, acks="all", retries=3, idempotent=True)
+    orig = c.broker_append
+    calls = {"n": 0}
+
+    def chaotic(broker_id, topic, partition, values, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:  # appends + commits, ack lost in transit
+            orig(broker_id, topic, partition, values, **kw)
+            raise NotLeaderError(topic, partition, broker_id)
+        raise NotEnoughReplicasError("ISR shrank below min.insync")
+
+    monkeypatch.setattr(c, "broker_append", chaotic)
+    with pytest.raises(NotEnoughReplicasError):
+        prod.send_batch("t", [b"a0", b"a1"], partition=0)
+    monkeypatch.setattr(c, "broker_append", orig)
+    # a different batch must not ride the unresolved sequence
+    with pytest.raises(ProducerFenced, match="unresolved"):
+        prod.send_batch("t", [b"B0", b"B1"], partition=0)
+    # the identical continuation resolves to the committed first attempt
+    _, first, _ = prod.send_batch("t", [b"a0", b"a1"], partition=0)
+    assert first == 0 and c.end_offset("t", 0) == 2
+    _, first_b, _ = prod.send_batch("t", [b"B0", b"B1"], partition=0)
+    got = c.read_range("t", 0, 0, 4)
+    assert [bytes(v) for v in got.values] == [b"a0", b"a1", b"B0", b"B1"]
+
+
+def test_idempotence_requires_acks_all():
+    """acks<all permits suffix loss; idempotent sequencing would turn
+    that into a fatal OutOfOrderSequence on the producer. Kafka rejects
+    the combination; so do we, up front."""
+    c = _mkcluster()
+    with pytest.raises(ValueError, match="acks"):
+        ClusterProducer(c, acks=1, idempotent=True)
+    with pytest.raises(ValueError, match="acks"):
+        ClusterProducer(c, acks=0, producer_name="ingest-A")
+    ClusterProducer(c, acks=-1, idempotent=True)  # -1 is an alias for all
+
+
+def test_named_producer_epoch_bump_fences_zombie():
+    c = _mkcluster()
+    zombie = ClusterProducer(c, idempotent=True, producer_name="ingest-A")
+    zombie.send_batch("t", [b"a"], partition=0)
+    successor = ClusterProducer(c, idempotent=True, producer_name="ingest-A")
+    assert successor.producer_id == zombie.producer_id
+    assert successor.producer_epoch == zombie.producer_epoch + 1
+    # the successor's first append may target any partition — the fence is
+    # cluster-wide (the epoch bump is a committed metadata command), not
+    # per-partition state the zombie might race ahead of
+    with pytest.raises(ProducerFenced):
+        zombie.send_batch("t", [b"b"], partition=0)
+    _, first, _ = successor.send_batch("t", [b"c"], partition=0)
+    assert first == 1  # the zombie's fenced batch never appended
+
+
+# --------------------------------------------------------- exactly-once ingest
+def test_ingest_idempotent_exactly_once_through_ack_loss(monkeypatch):
+    """§V end to end: every ~4th committed append loses its ack, two
+    producer threads retry through it — the training stream (and its
+    control message) lands exactly once, record for record, in order."""
+    c = BrokerCluster(3, default_acks="all")
+    c.create_topic(
+        "copd", LogConfig(num_partitions=2, replication_factor=3)
+    )
+    arrays = copd_mlp.synth_dataset(n=120)
+    orig = c.broker_append
+    calls = itertools.count()
+
+    def flaky(broker_id, topic, partition, values, **kw):
+        r = orig(broker_id, topic, partition, values, **kw)
+        if next(calls) % 4 == 2:  # committed, response lost
+            raise NotLeaderError(topic, partition, c.leader_for(topic, partition))
+        return r
+
+    monkeypatch.setattr(c, "broker_append", flaky)
+    msg = data.ingest(
+        c, "copd", _codec(), arrays, "dep-X",
+        validation_rate=0.2, message_set_size=16,
+        num_threads=2, idempotent=True,
+    )
+    monkeypatch.setattr(c, "broker_append", orig)
+    assert sum(r.length for r in msg.ranges) == 120
+    got = data.StreamDataset(c, msg).read()
+    # exact equality (not sorted): zero duplicates, original order
+    np.testing.assert_array_equal(got["label"], arrays["label"])
+    np.testing.assert_allclose(got["data"], arrays["data"])
+    # the logs hold exactly the stream — no out-of-range duplicate copies
+    assert sum(c.end_offset("copd", p) for p in range(2)) == 120
+    # and exactly one control message (a duplicate would re-trigger training)
+    assert c.end_offset(CONTROL_TOPIC, 0) == 1
