@@ -19,7 +19,12 @@ Two checks, wired into the nightly CI job right after the benchmark run
   non-idempotent rf=3/acks=all baseline. The statistic is the **median
   within-pair ratio** over the recorded back-to-back run pairs —
   recomputed from the pair throughputs, never trusted from a stored
-  ratio, and immune to the shared host's absolute-speed drift.
+  ratio, and immune to the shared host's absolute-speed drift;
+* **transactional overhead** — the atomic read-process-write path (PR-5:
+  coordinator commands, txn flags, COMMIT markers + their replication)
+  must cost at most ``TXN_MAX_OVERHEAD`` (25%) versus the same run's
+  *idempotent* acks=all baseline, with the same median-of-paired-runs
+  statistic.
 
 Exit code 0 on pass, 1 on any failure (the CI job fails on non-zero).
 
@@ -44,11 +49,14 @@ MIN_SPEEDUP_4T = 1.5
 # exactly-once tax budget: idempotent rf3/acksall may cost at most this
 # fraction vs the same run's non-idempotent baseline
 IDEM_MAX_OVERHEAD = 0.15
+# transactional tax budget: committed-txn throughput may cost at most
+# this fraction vs the same run's idempotent acks=all baseline
+TXN_MAX_OVERHEAD = 0.25
 
 ACCEPTANCE_KEY = "contended_t4_rf3_acksall"
 
 REQUIRED_SECTIONS = ("config", "single", "contended", "speedup_4threads",
-                     "idempotent", "controller")
+                     "idempotent", "transactions", "controller")
 REQUIRED_CONTENDED = (
     "contended_t1_rf3_acksall",
     "contended_t4_rf3_acksall",
@@ -56,26 +64,35 @@ REQUIRED_CONTENDED = (
 )
 
 
-def _idempotent_overhead(idem: dict) -> tuple[float, int] | None:
+def _pair_overhead(section: dict, over_key: str) -> tuple[float, int] | None:
     """``(median overhead ratio, valid pair count)`` recomputed from the
     recorded throughput pairs — never trusted from a stored
     ``overhead_frac`` a hand-edit could detach from its inputs. Each pair
     ran back to back, so its ratio is immune to the shared host's
     absolute-speed drift. None when no valid pair exists (schema
-    failure)."""
-    pairs = idem.get("pairs")
+    failure). ``over_key`` names the measured side of each pair
+    (``idempotent_msgs_per_s`` / ``txn_msgs_per_s``)."""
+    pairs = section.get("pairs")
     if not isinstance(pairs, list):
         return None
     ratios = sorted(
-        p["baseline_msgs_per_s"] / p["idempotent_msgs_per_s"] - 1.0
+        p["baseline_msgs_per_s"] / p[over_key] - 1.0
         for p in pairs
         if isinstance(p, dict)
         and p.get("baseline_msgs_per_s", 0) > 0
-        and p.get("idempotent_msgs_per_s", 0) > 0
+        and p.get(over_key, 0) > 0
     )
     if not ratios:
         return None
     return ratios[len(ratios) // 2], len(ratios)
+
+
+def _idempotent_overhead(idem: dict) -> tuple[float, int] | None:
+    return _pair_overhead(idem, "idempotent_msgs_per_s")
+
+
+def _txn_overhead(txn: dict) -> tuple[float, int] | None:
+    return _pair_overhead(txn, "txn_msgs_per_s")
 
 
 def check(results: dict, baseline: float, tolerance: float) -> list[str]:
@@ -137,6 +154,30 @@ def check(results: dict, baseline: float, tolerance: float) -> list[str]:
                 "non-idempotent baseline"
             )
 
+    txn = results.get("transactions", {})
+    txn = txn if isinstance(txn, dict) else {}
+    for key in ("baseline_idem_rf3_acksall", "txn_rf3_acksall"):
+        row = txn.get(key)
+        if not (isinstance(row, dict) and row.get("msgs_per_s", 0) > 0):
+            failures.append(
+                f"schema: transactions[{key!r}] missing or non-positive"
+            )
+    measured = _txn_overhead(txn)
+    if measured is None:
+        failures.append(
+            "schema: transactions['pairs'] missing or holds no valid "
+            "(baseline, txn) throughput pair"
+        )
+    else:
+        overhead, n_pairs = measured
+        if overhead > TXN_MAX_OVERHEAD:
+            failures.append(
+                f"regression: transactional overhead {overhead:.1%} "
+                f"(median across {n_pairs} valid paired runs) exceeds "
+                f"the {TXN_MAX_OVERHEAD:.0%} budget vs the acks=all "
+                "idempotent baseline"
+            )
+
     row = contended.get(ACCEPTANCE_KEY)
     if isinstance(row, dict) and row.get("msgs_per_s", 0) > 0:
         got = row["msgs_per_s"]
@@ -177,12 +218,15 @@ def main(argv: list[str] | None = None) -> int:
     got = results["contended"][ACCEPTANCE_KEY]["msgs_per_s"]
     fo = results["controller"]["failover"]["best_s"]
     overhead, _ = _idempotent_overhead(results["idempotent"])
+    txn_overhead, _ = _txn_overhead(results["transactions"])
     print(
         f"check_bench: OK — {ACCEPTANCE_KEY} {got:,.0f} msgs/s "
         f"(baseline {args.baseline:,.0f}, tolerance {args.tolerance:.0%}); "
         f"speedup_4threads {results['speedup_4threads']:.2f}x; "
         f"idempotent overhead {overhead:+.1%} (budget "
         f"{IDEM_MAX_OVERHEAD:.0%}); "
+        f"transactional overhead {txn_overhead:+.1%} (budget "
+        f"{TXN_MAX_OVERHEAD:.0%}); "
         f"controller failover {fo * 1e3:.1f} ms"
     )
     return 0

@@ -20,8 +20,22 @@ echo "== syntax gate (compileall) =="
 python -m compileall -q src tests benchmarks examples
 
 # -p no:cacheprovider: no .pytest_cache/ bytecode-adjacent artifacts in the tree
-echo "== fast tier (pytest -m 'not slow') =="
-python -m pytest -x -q -m "not slow" -p no:cacheprovider
+# --durations=15: name the slowest tests, so fast-tier creep is visible in
+# every CI log before it trips the budget below
+# FAST_BUDGET_S: the fast tier must stay fast as the suite grows — if the
+# not-slow pytest run exceeds this wall-clock budget (default 5 min), the
+# tier fails even though every test passed; move the offenders to @slow.
+FAST_BUDGET_S="${FAST_BUDGET_S:-300}"
+echo "== fast tier (pytest -m 'not slow', budget ${FAST_BUDGET_S}s) =="
+fast_t0=$(date +%s)
+python -m pytest -x -q -m "not slow" --durations=15 -p no:cacheprovider
+fast_elapsed=$(( $(date +%s) - fast_t0 ))
+if [ "$fast_elapsed" -gt "$FAST_BUDGET_S" ]; then
+    echo "FAIL: fast tier took ${fast_elapsed}s, over the ${FAST_BUDGET_S}s budget" \
+         "- move the slowest tests (see --durations above) to @pytest.mark.slow"
+    exit 1
+fi
+echo "== fast tier wall clock: ${fast_elapsed}s (budget ${FAST_BUDGET_S}s) =="
 
 echo "== quickstart smoke (examples/quickstart.py, watchdog-guarded) =="
 QUICKSTART_TIMEOUT_S="${QUICKSTART_TIMEOUT_S:-120}" python examples/quickstart.py

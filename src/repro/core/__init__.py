@@ -6,6 +6,7 @@ from repro.core.cluster import (
     ClusterConsumer,
     ClusterError,
     ClusterProducer,
+    InvalidTxnState,
     NotEnoughReplicasError,
     NotLeaderError,
     PartitionMeta,

@@ -68,6 +68,21 @@ The consumer-offset store (Kafka's ``__consumer_offsets``) is held by the
 cluster controller and mirrored onto every live broker, i.e. replicated at
 the full cluster width, so committed offsets survive any broker loss.
 
+Transactions (DESIGN.md §8). The cluster doubles as the **transaction
+coordinator**: ``begin_txn``/``txn_add_partitions``/``txn_add_offsets``/
+``commit_txn``/``abort_txn`` drive a two-phase commit whose every state
+transition is a committed ``MetadataCommand`` in the replicated metadata
+log — so a transaction whose driver (or controller leader) dies after
+the ``PrepareCommit`` decision is finished by any later
+``controller_tick``: COMMIT/ABORT control markers land on every
+registered partition, attached consumer offsets apply exactly with the
+commit, and every touched partition converges to the same outcome.
+:class:`ClusterProducer(transactional_id=...)` is the client half
+(``begin_txn``/``send_offsets_to_txn``/``commit_txn``/``abort_txn``
+layered on the idempotent machinery), and
+``ClusterConsumer(isolation_level="read_committed")`` the consumer half
+(LSO-capped fetches, aborted ranges filtered).
+
 Control plane (DESIGN.md §5). Topology is no longer mutated in place:
 every topology change — broker liveness, partition leadership, ISR
 membership, topic create/delete — is a :class:`MetadataCommand` committed
@@ -114,6 +129,7 @@ __all__ = [
     "ClusterError",
     "ClusterProducer",
     "ControllerUnavailable",
+    "InvalidTxnState",
     "NotEnoughReplicasError",
     "NotLeaderError",
     "PartitionMeta",
@@ -157,6 +173,46 @@ class PartitionOffline(ClusterError):
 
 class NotEnoughReplicasError(ClusterError):
     """acks=all rejected: live ISR smaller than ``min_insync_replicas``."""
+
+
+class InvalidTxnState(RuntimeError):
+    """A transactional operation was attempted in a state that forbids it
+    (begin while a transaction is already in progress, commit with no
+    transaction, abort of a transaction whose commit is already durably
+    decided, ...). Deliberately NOT a ``ClusterError``: retry loops must
+    not re-drive a structurally invalid request — the caller's state
+    machine is wrong, not the cluster's availability."""
+
+
+class _TxnState:
+    """Coordinator-side state of one producer's transaction, reconstructed
+    purely by applying committed txn ``MetadataCommand``s in log order —
+    so a controller successor holds exactly the same view.
+
+    ``state``: ``ongoing`` → ``prepare_commit``/``prepare_abort`` (the
+    durable decision) → ``complete_commit``/``complete_abort`` (markers
+    written everywhere, offsets applied). ``seq`` is the per-pid command
+    sequence (the transactional pversion) guarding idempotent replay.
+    """
+
+    __slots__ = (
+        "pid", "epoch", "state", "seq", "partitions", "offsets", "touched",
+    )
+
+    def __init__(self, pid: int, epoch: int, seq: int):
+        self.pid = pid
+        self.epoch = epoch
+        self.state = "ongoing"
+        self.seq = seq
+        self.partitions: set[tuple[str, int]] = set()
+        # group -> {"topic:partition" -> offset} committed atomically
+        # with the transaction's produced records
+        self.offsets: dict[str, dict[str, int]] = {}
+        # local wall-clock of the last applied command for this txn — the
+        # transaction-timeout reference (coordinator-local bookkeeping,
+        # not replicated state: the timeout *abort* goes through the
+        # quorum like any other decision)
+        self.touched = 0.0
 
 
 # ------------------------------------------------------------------- broker
@@ -399,6 +455,7 @@ class BrokerCluster:
         legacy_global_lock: bool = False,
         controller_nodes: int = 3,
         controller_lease_s: float = 1.0,
+        txn_timeout_s: float = 60.0,
         clock: Callable[[], float] | None = None,
     ):
         if num_brokers < 1:
@@ -428,6 +485,31 @@ class BrokerCluster:
         self._next_pid = 0
         self._producer_names: dict[str, tuple[int, int]] = {}
         self._producer_epochs: dict[int, int] = {}
+        # transaction coordinator state: pid -> _TxnState, mutated only by
+        # applying committed txn MetadataCommands (see _apply_txn). A
+        # transaction in a prepare_* state whose driver died is finished
+        # by controller_tick (_resume_pending_txns) — the decision is in
+        # the replicated log, so the outcome survives any failover.
+        self._txns: dict[int, _TxnState] = {}
+        # per-pid phase-two serialization: _finish_txn's marker writes
+        # run outside the metadata lock, so a client driver and the
+        # controller tick can race into phase two for the same pid; the
+        # per-pid lock makes the loser re-read coordinator state AFTER
+        # the winner completed (it then sees complete/ongoing and backs
+        # off) instead of resolving a successor transaction of the same
+        # (pid, epoch) with the predecessor's snapshot. Acquired BEFORE
+        # the metadata lock, never while holding it.
+        self._txn_locks: dict[int, threading.Lock] = {}
+        # a transaction left ongoing longer than this (its producer died
+        # without ever re-initializing) is fenced and aborted by the
+        # controller tick — Kafka's transaction.timeout.ms; without it an
+        # abandoned txn would pin the partition LSO forever and stall
+        # every read_committed consumer behind it
+        self.txn_timeout_s = txn_timeout_s
+        # chaos hook: the next _end_txn dies right after its prepare
+        # decision commits, before any marker is written (models a
+        # coordinator crash mid two-phase commit)
+        self.crash_after_prepare = False
         # topology lock: topic create/delete, broker up/down, offset store.
         # Data-plane work runs under per-partition ctl locks instead; in
         # legacy mode every ctl shares _data_lock, restoring one-big-lock.
@@ -592,6 +674,358 @@ class BrokerCluster:
                     self._producer_names[cmd.name] = (
                         cmd.pid, cmd.producer_epoch
                     )
+
+    # ------------------------------------------------ transaction coordinator
+    def _fence_pid(self, pid: int, epoch: int) -> None:
+        known = self._producer_epochs.get(pid)
+        if known is not None and epoch < known:
+            raise ProducerFenced(
+                f"producer {pid} epoch {epoch} fenced by granted epoch {known}"
+            )
+
+    def _submit_txn(self, cmd: MetadataCommand) -> None:
+        """Commit one txn command to the metadata log and apply it.
+        Caller holds the metadata lock."""
+        self.controller.submit(cmd)
+        self._apply_metadata(cmd)
+
+    def begin_txn(self, pid: int, epoch: int) -> None:
+        """Open a transaction for ``(pid, epoch)`` — a committed
+        ``BeginTxn`` command. A stale incarnation's unfinished transaction
+        is resolved first: a prepared one is driven to completion (its
+        outcome is already durably decided), an ongoing one is aborted
+        (its producer is fenced — it can never commit)."""
+        with self._meta_lock:
+            self._fence_pid(pid, epoch)
+            st = self._txns.get(pid)
+            stale = st.state if st is not None else None
+            stale_epoch = st.epoch if st is not None else -1
+        if stale is not None and stale.startswith("prepare"):
+            self._finish_txn(pid)
+        elif stale == "ongoing":
+            if stale_epoch >= epoch:
+                raise InvalidTxnState(
+                    f"producer {pid} already has a transaction in "
+                    f"progress (epoch {stale_epoch})"
+                )
+            self._end_txn(pid, stale_epoch, commit=False, internal=True)
+        with self._meta_lock:
+            st = self._txns.get(pid)
+            if st is not None and st.state == "ongoing" and st.epoch >= epoch:
+                raise InvalidTxnState(
+                    f"producer {pid} already has a transaction in "
+                    f"progress (epoch {st.epoch})"
+                )
+            seq = st.seq + 1 if st is not None else 0
+            self._submit_txn(MetadataCommand(
+                kind="begin_txn", pid=pid, producer_epoch=epoch, txn_seq=seq
+            ))
+
+    def _require_ongoing(self, pid: int, epoch: int) -> _TxnState:
+        st = self._txns.get(pid)
+        if st is None or st.state != "ongoing" or st.epoch != epoch:
+            raise InvalidTxnState(
+                f"producer {pid} (epoch {epoch}) has no ongoing transaction"
+                f" (state: {st.state if st is not None else 'none'})"
+            )
+        return st
+
+    def txn_add_partitions(
+        self, pid: int, epoch: int, parts: Sequence[tuple[str, int]]
+    ) -> None:
+        """Register partitions the transaction will write to (Kafka's
+        AddPartitionsToTxn) — the set the coordinator must put markers on
+        at resolution, durably in the metadata log *before* the first
+        transactional append lands on them."""
+        with self._meta_lock:
+            self._fence_pid(pid, epoch)
+            st = self._require_ongoing(pid, epoch)
+            new = [tuple(p) for p in parts if tuple(p) not in st.partitions]
+            if not new:
+                return
+            self._submit_txn(MetadataCommand(
+                kind="add_partitions_to_txn", pid=pid, producer_epoch=epoch,
+                partitions=tuple(new), txn_seq=st.seq + 1,
+            ))
+
+    def txn_add_offsets(
+        self,
+        pid: int,
+        epoch: int,
+        group: str,
+        offsets: dict[TopicPartition, int],
+    ) -> None:
+        """Attach consumer offsets to the transaction (Kafka's
+        AddOffsetsToTxn + TxnOffsetCommit): they are applied to the
+        replicated offset store if — and only if — the transaction
+        commits, which is what makes read-process-write atomic."""
+        with self._meta_lock:
+            self._fence_pid(pid, epoch)
+            st = self._require_ongoing(pid, epoch)
+            enc = {f"{tp.topic}:{tp.partition}": off for tp, off in offsets.items()}
+            self._submit_txn(MetadataCommand(
+                kind="add_offsets_to_txn", pid=pid, producer_epoch=epoch,
+                group=group, offsets=enc, txn_seq=st.seq + 1,
+            ))
+
+    def commit_txn(self, pid: int, epoch: int) -> None:
+        """Two-phase commit: (1) commit a ``PrepareCommit`` decision to
+        the controller quorum — from here the transaction WILL commit,
+        whatever fails next; (2) write COMMIT markers on every registered
+        partition, apply the attached consumer offsets, and commit
+        ``CompleteTxn``. A crash between the phases leaves a prepared
+        transaction that ``controller_tick`` finishes (idempotently) on
+        any later heartbeat, so every touched partition converges to the
+        same outcome across controller and broker failovers."""
+        self._end_txn(pid, epoch, commit=True)
+
+    def abort_txn(self, pid: int, epoch: int) -> None:
+        """Two-phase abort: durable ``PrepareAbort`` decision, then ABORT
+        markers — read_committed consumers never see the records."""
+        self._end_txn(pid, epoch, commit=False)
+
+    def resolve_txn(self, pid: int) -> None:
+        """Finish a *prepared* transaction at its own recorded epoch —
+        the recovery entry point for a restarted driver whose producer
+        epoch has moved past the transaction it inherited (its
+        ``commit_txn(pid, new_epoch)`` would be rejected as an epoch
+        mismatch). No-op unless a prepare decision is pending; raises
+        ``ClusterError`` when the cluster cannot complete it right now."""
+        self._finish_txn(pid)
+
+    def _end_txn(
+        self, pid: int, epoch: int, *, commit: bool, internal: bool = False
+    ) -> None:
+        with self._meta_lock:
+            if not internal:
+                self._fence_pid(pid, epoch)
+            st = self._txns.get(pid)
+            prepared = "prepare_commit" if commit else "prepare_abort"
+            if st is None or st.epoch != epoch:
+                raise InvalidTxnState(
+                    f"producer {pid} (epoch {epoch}) has no transaction"
+                )
+            if st.state == ("complete_commit" if commit else "complete_abort"):
+                return  # a retried end of an already-finished transaction
+            if st.state == "ongoing":
+                self._submit_txn(MetadataCommand(
+                    kind=prepared, pid=pid, producer_epoch=epoch,
+                    txn_seq=st.seq + 1,
+                ))
+            elif st.state != prepared:
+                # the opposite decision (or completion) is already durable
+                raise InvalidTxnState(
+                    f"transaction of producer {pid} is {st.state}; "
+                    f"cannot {'commit' if commit else 'abort'}"
+                )
+            if self.crash_after_prepare:
+                self.crash_after_prepare = False
+                raise ControllerUnavailable(
+                    "injected: transaction coordinator crashed after the "
+                    "prepare decision committed, before marker writes"
+                )
+        self._finish_txn(pid)
+
+    def _finish_txn(self, pid: int) -> None:
+        """Phase two: write markers on every registered partition, apply
+        offsets (commit only), record ``CompleteTxn``. Idempotent — every
+        step no-ops where a previous attempt already succeeded (a racing
+        second driver's duplicate ``CompleteTxn`` is dropped by the
+        ``txn_seq`` guard) — and restartable: any ClusterError propagates
+        with the transaction still in its prepare state for the next
+        ``controller_tick`` (or a client retry) to re-drive. The marker
+        writes deliberately run OUTSIDE the metadata lock (partition +
+        controller locks only): a slow failover inside one transaction's
+        phase two must not stall every other producer, consumer-offset
+        commit and admin call on the cluster-wide lock. Concurrent
+        finishers of the same pid serialize on its phase-two lock: the
+        state snapshot happens inside it, so a finisher that lost the
+        race observes the completed (or successor) state and backs off."""
+        with self._meta_lock:
+            lock = self._txn_locks.setdefault(pid, threading.Lock())
+        with lock:
+            with self._meta_lock:
+                st = self._txns.get(pid)
+                if st is None or not st.state.startswith("prepare"):
+                    return  # already complete (or never prepared)
+                commit = st.state == "prepare_commit"
+                epoch = st.epoch
+                parts = sorted(st.partitions)
+                offsets = {g: dict(o) for g, o in st.offsets.items()}
+            for topic, p in parts:
+                self._write_marker(topic, p, pid, epoch, commit=commit)
+            with self._meta_lock:
+                st = self._txns.get(pid)
+                if st is None or not st.state.startswith("prepare"):
+                    return  # a concurrent driver completed it meanwhile
+                if commit:
+                    for group, offs in offsets.items():
+                        for tps, off in offs.items():
+                            t, _, pstr = tps.rpartition(":")
+                            self.commit_offset(
+                                group, TopicPartition(t, int(pstr)), off
+                            )
+                self._submit_txn(MetadataCommand(
+                    kind="complete_txn", pid=pid, producer_epoch=epoch,
+                    committed=commit, txn_seq=st.seq + 1,
+                ))
+
+    def _write_marker(
+        self, topic: str, partition: int, pid: int, epoch: int, *, commit: bool
+    ) -> None:
+        """Write one COMMIT/ABORT control marker on a partition's leader
+        and replicate it into the ISR (the marker is only 'written' once
+        it is below the HW — an unreplicated marker on a dying leader is
+        truncated and must be re-driven). No-ops when the partition has
+        no open transaction for the pid: the marker already landed (this
+        is a recovery re-drive), the partition never saw an append, or
+        the topic is gone."""
+        try:
+            ctl = self._ctl(topic, partition)
+        except (KeyError, IndexError):
+            return  # topic deleted since the partition was registered
+        last_err: ClusterError | None = None
+        for _ in range(_ROUTED_RETRIES):
+            with ctl.lock:
+                try:
+                    leader = self._leader_broker(ctl)
+                    off = leader.log.append_control(
+                        topic, partition, pid, epoch, abort=not commit
+                    )
+                    if off is None:
+                        # no open transaction on the leader: either this
+                        # partition never saw an append, or the marker
+                        # already landed — possibly on a PREVIOUS attempt
+                        # that never replicated it. Only a HW at or past
+                        # the leader's end proves the close is durable
+                        # (an unreplicated marker on a dying leader would
+                        # be truncated, silently re-opening the txn on
+                        # the survivors); force a pass otherwise.
+                        if ctl.hw >= leader.log.end_offset(topic, partition):
+                            return
+                        self._replicate_partition(ctl)
+                        if ctl.hw >= leader.log.end_offset(topic, partition):
+                            return
+                        last_err = NotLeaderError(topic, partition, ctl.leader)
+                        continue
+                    # push the marker straight to caught-up ISR followers
+                    # (the acks=all hot-path shape): the one-record fetch
+                    # carries its ctrl metadata verbatim, so follower txn
+                    # state and timestamps track the leader's exactly;
+                    # any lagging follower falls back to a full pass
+                    vals, keys, ts, prods = leader.log.replica_fetch(
+                        topic, partition, off, 1
+                    )
+                    need_full = self._legacy
+                    for bid in sorted(ctl.isr):
+                        if bid == ctl.leader or need_full:
+                            continue
+                        fbr = self.brokers[bid]
+                        if (
+                            not fbr.up
+                            or ctl.synced_epoch.get(bid) != ctl.epoch
+                            or fbr.log.end_offset(topic, partition) != off
+                        ):
+                            need_full = True
+                            continue
+                        fbr.log.replica_append(
+                            topic, partition, vals, keys, ts, prods=prods
+                        )
+                    if need_full:
+                        self._replicate_partition(ctl)
+                    else:
+                        ctl.hw = max(ctl.hw, off + 1)
+                    if ctl.hw > off:
+                        return
+                    last_err = NotLeaderError(topic, partition, ctl.leader)
+                except ClusterError as e:
+                    # leadership in flux / no quorum for the ISR change:
+                    # retry — the next pass elects through dead leaders
+                    last_err = e
+        raise last_err
+
+    def _resume_pending_txns(self) -> None:
+        """Finish transactions whose prepare decision is durable but
+        whose driver died before markers landed everywhere — the
+        controller-failover half of the two-phase commit — and fence +
+        abort transactions left *ongoing* past ``txn_timeout_s`` (the
+        producer died without re-initializing; its open txn would pin
+        the LSO forever). Driven by ``controller_tick``."""
+        now = self._clock()
+        with self._meta_lock:
+            pending = [
+                pid for pid, st in self._txns.items()
+                if st.state.startswith("prepare")
+            ]
+            expired = [
+                (pid, st.epoch) for pid, st in self._txns.items()
+                if st.state == "ongoing"
+                and now - st.touched > self.txn_timeout_s
+            ]
+        for pid in pending:
+            try:
+                self._finish_txn(pid)
+            except (ClusterError, ControllerUnavailable):
+                continue  # partition/quorum unavailable: next tick retries
+        for pid, ep in expired:
+            try:
+                with self._meta_lock:
+                    st = self._txns.get(pid)
+                    if st is None or st.state != "ongoing" or st.epoch != ep:
+                        continue  # resolved since the snapshot
+                    if self._producer_epochs.get(pid, -1) <= ep:
+                        # fence the timed-out incarnation BEFORE aborting
+                        # (Kafka bumps the producer epoch on transaction
+                        # timeout): its late appends must not re-open the
+                        # transaction after the abort markers land
+                        cmd = MetadataCommand(
+                            kind="allocate_pid", pid=pid,
+                            producer_epoch=ep + 1,
+                        )
+                        self.controller.submit(cmd)
+                        self._apply_metadata(cmd)
+                # abort outside the metadata lock (phase two takes
+                # partition locks; see _finish_txn)
+                self._end_txn(pid, ep, commit=False, internal=True)
+            except (ClusterError, ControllerUnavailable, InvalidTxnState):
+                continue  # next tick retries (fence bump is idempotent)
+
+    def _apply_txn(self, cmd: MetadataCommand) -> None:
+        """Apply one committed txn command — the coordinator state
+        machine. Replay-idempotent via the per-pid ``txn_seq`` guard."""
+        with self._meta_lock:
+            st = self._txns.get(cmd.pid)
+            if cmd.kind == "begin_txn":
+                if st is not None and (
+                    cmd.txn_seq <= st.seq or cmd.producer_epoch < st.epoch
+                ):
+                    return
+                st = _TxnState(cmd.pid, cmd.producer_epoch, cmd.txn_seq)
+                st.touched = self._clock()
+                self._txns[cmd.pid] = st
+                return
+            if st is None or cmd.txn_seq is None or cmd.txn_seq <= st.seq:
+                return
+            st.seq = cmd.txn_seq
+            st.touched = self._clock()
+            if cmd.kind == "add_partitions_to_txn":
+                st.partitions |= {tuple(p) for p in cmd.partitions}
+            elif cmd.kind == "add_offsets_to_txn":
+                st.offsets.setdefault(cmd.group, {}).update(cmd.offsets)
+            elif cmd.kind == "prepare_commit":
+                st.state = "prepare_commit"
+            elif cmd.kind == "prepare_abort":
+                st.state = "prepare_abort"
+            elif cmd.kind == "complete_txn":
+                st.state = (
+                    "complete_commit" if cmd.committed else "complete_abort"
+                )
+
+    def txn_state(self, pid: int) -> str | None:
+        """Coordinator state for a producer id (test/observability hook)."""
+        with self._meta_lock:
+            st = self._txns.get(pid)
+            return st.state if st is not None else None
 
     def topics(self) -> list[str]:
         with self._meta_lock:
@@ -782,6 +1216,7 @@ class BrokerCluster:
         first: int,
         last: int,
         producer: tuple[int, int, int] | None = None,
+        txn: bool = False,
     ) -> None:
         """Synchronous ISR replication for one acked batch (caller holds
         the partition lock and just appended ``[first, last]`` on the
@@ -826,7 +1261,7 @@ class BrokerCluster:
             # re-appending (exactly-once through failover)
             fbr.log.replica_append(
                 ctl.topic, ctl.partition, values, keys, now_ms,
-                producer=producer,
+                producer=producer, txn=txn,
             )
         if need_full:
             self._replicate_partition(ctl)
@@ -1049,6 +1484,12 @@ class BrokerCluster:
         if kind == "allocate_pid":
             self._apply_allocate_pid(cmd)
             return
+        if kind in (
+            "begin_txn", "add_partitions_to_txn", "add_offsets_to_txn",
+            "prepare_commit", "prepare_abort", "complete_txn",
+        ):
+            self._apply_txn(cmd)
+            return
         # partition-scoped commands
         key = (cmd.topic, cmd.partition)
         ctl = self._meta.get(key)
@@ -1099,6 +1540,11 @@ class BrokerCluster:
             self._apply_metadata(entry.command)
         if changed:
             self._complete_pending_elections()
+        # two-phase-commit recovery: transactions whose prepare decision
+        # is durable but whose driver died finish here, on any tick — not
+        # just leadership changes (the driver may have died without its
+        # controller)
+        self._resume_pending_txns()
         return changed
 
     def _complete_pending_elections(self) -> None:
@@ -1161,8 +1607,15 @@ class BrokerCluster:
         acks: int | str | None = None,
         epoch: int | None = None,
         producer: tuple[int, int, int] | None = None,
+        transactional: bool = False,
     ) -> tuple[int, int]:
         """Leader-side ProduceRequest. Returns ``(first, last)`` offsets.
+
+        ``transactional=True`` (requires ``producer``) marks the batch as
+        part of the producer's open transaction: it replicates and acks
+        like any idempotent batch, but stays above the LSO — invisible to
+        ``read_committed`` consumers — until the transaction coordinator
+        writes its COMMIT/ABORT marker.
 
         ``acks='all'`` replicates to every live ISR follower and advances
         the high watermark before returning — the acknowledged records are
@@ -1230,7 +1683,8 @@ class BrokerCluster:
                         f"epoch {known}"
                     )
                 first, last, dup = br.log.producer_append(
-                    topic, partition, values, keys, now_ms, pid, pep, pseq
+                    topic, partition, values, keys, now_ms, pid, pep, pseq,
+                    txn=transactional,
                 )
                 if dup:
                     # the batch is already in the log from a previous
@@ -1248,7 +1702,8 @@ class BrokerCluster:
                 )
             if acks in ("all", -1):
                 self._commit_batch(
-                    ctl, values, keys, now_ms, first, last, producer
+                    ctl, values, keys, now_ms, first, last, producer,
+                    txn=transactional,
                 )
                 if ctl.hw <= last:
                     # leadership moved under us mid-append and the batch
@@ -1266,6 +1721,7 @@ class BrokerCluster:
         max_records: int = 1024,
         *,
         allow_follower: bool = False,
+        isolation: str | None = None,
     ) -> RecordBatch:
         """Leader-side FetchRequest, capped at the high watermark.
 
@@ -1275,6 +1731,12 @@ class BrokerCluster:
         the HW are on every ISR member and immutable, so the response is
         stale-bounded but never divergent. Out-of-sync replicas never
         serve: their log may hold a deposed leader's suffix below the HW.
+
+        ``isolation="read_committed"`` additionally caps the read at the
+        serving replica's last stable offset (LSO) and filters out control
+        markers and aborted transactions' records. Below the HW every ISR
+        member derives the identical transaction state from its identical
+        log, so follower reads stay exact at read_committed too.
         """
         ctl = self._ctl(topic, partition)
         with ctl.lock:
@@ -1284,10 +1746,10 @@ class BrokerCluster:
             if ctl.leader == broker_id:
                 if not self._daemon_active or ctl.hw <= offset:
                     self._replicate_partition(ctl)  # opportunistic HW advance
-                return self._read_visible(br, ctl, offset, max_records)
+                return self._read_visible(br, ctl, offset, max_records, isolation)
             if not allow_follower or broker_id not in ctl.isr:
                 raise NotLeaderError(topic, partition, ctl.leader)
-            return self._read_visible(br, ctl, offset, max_records)
+            return self._read_visible(br, ctl, offset, max_records, isolation)
 
     def _serving_follower(self, ctl: _PartitionCtl) -> Broker | None:
         """Lowest-id live in-sync non-leader replica, or None — the single
@@ -1299,18 +1761,27 @@ class BrokerCluster:
         return None
 
     def _read_visible(
-        self, br: Broker, ctl: _PartitionCtl, offset: int, max_records: int
+        self,
+        br: Broker,
+        ctl: _PartitionCtl,
+        offset: int,
+        max_records: int,
+        isolation: str | None = None,
     ) -> RecordBatch:
         """Serve a read from ``br``'s local log, capped at the high
         watermark. ``br`` is the leader or an in-sync follower — an ISR
         member's log always extends to the HW, so bounding by its own end
-        offset is equivalent for both."""
+        offset is equivalent for both. read_committed caps additionally
+        at the serving replica's LSO."""
         end = br.log.end_offset(ctl.topic, ctl.partition)
         if offset > end:
             raise OffsetOutOfRange(
                 f"{ctl.topic}:{ctl.partition} offset {offset} > end {end}"
             )
-        n = min(max_records, max(min(ctl.hw, end) - offset, 0))
+        cap = min(ctl.hw, end)
+        if isolation == "read_committed":
+            cap = min(cap, br.log.last_stable_offset(ctl.topic, ctl.partition))
+        n = min(max_records, max(cap - offset, 0))
         if n <= 0:
             return RecordBatch(
                 topic=ctl.topic,
@@ -1319,7 +1790,7 @@ class BrokerCluster:
                 values=[],
                 timestamps=[],
             )
-        return br.log.read(ctl.topic, ctl.partition, offset, n)
+        return br.log.read(ctl.topic, ctl.partition, offset, n, isolation)
 
     # ------------------------------------- StreamBackend facade (StreamLog)
     # Everything below makes the cluster a drop-in for StreamLog: internal
@@ -1382,7 +1853,12 @@ class BrokerCluster:
         return self._routed_append(topic, values, keys, partition, acks)
 
     def read(
-        self, topic: str, partition: int, offset: int, max_records: int = 1024
+        self,
+        topic: str,
+        partition: int,
+        offset: int,
+        max_records: int = 1024,
+        isolation: str | None = None,
     ) -> RecordBatch:
         ctl = self._ctl(topic, partition)
         with ctl.lock:
@@ -1394,23 +1870,32 @@ class BrokerCluster:
                 if not self._daemon_active or ctl.hw <= offset:
                     self._replicate_partition(ctl)
                 return self._read_visible(
-                    self.brokers[ctl.leader], ctl, offset, max_records
+                    self.brokers[ctl.leader], ctl, offset, max_records, isolation
                 )
             if self.follower_reads:
                 # leader down/None: keep serving committed records from an
                 # in-sync follower while the election is pending
                 follower = self._serving_follower(ctl)
                 if follower is not None:
-                    return self._read_visible(follower, ctl, offset, max_records)
+                    return self._read_visible(
+                        follower, ctl, offset, max_records, isolation
+                    )
             leader = self._leader_broker(ctl)  # lazy election / offline
             self._replicate_partition(ctl)
-            return self._read_visible(leader, ctl, offset, max_records)
+            return self._read_visible(leader, ctl, offset, max_records, isolation)
 
     def read_range(
         self, topic: str, partition: int, offset: int, length: int
     ) -> RecordBatch:
+        # the window is counted in raw offsets: a filtered batch's
+        # `scanned` — not its delivered record count — says how much of
+        # it was actually readable (control markers occupy offsets but
+        # are never delivered; see StreamLog.read_range)
+        def covered(b: RecordBatch) -> int:
+            return b.scanned if b.scanned is not None else len(b)
+
         batch = self.read(topic, partition, offset, length)
-        if len(batch) < length:
+        if covered(batch) < length:
             # the shortfall may just be a daemon-stale HW (read() skips the
             # inline pass when some records are visible): force one pass
             # and retry before declaring the range unreadable
@@ -1421,7 +1906,7 @@ class BrokerCluster:
             except PartitionOffline:
                 pass  # follower reads may still serve below the HW
             batch = self.read(topic, partition, offset, length)
-        if len(batch) < length:
+        if covered(batch) < length:
             ctl = self._ctl(topic, partition)
             with ctl.lock:
                 hw = ctl.hw
@@ -1481,6 +1966,13 @@ class BrokerCluster:
         with ctl.lock:
             leader = self._leader_broker(ctl)
             return leader.log.end_offset(topic, partition)
+
+    def last_stable_offset(self, topic: str, partition: int) -> int:
+        """Consumer-visible read_committed bound: min(HW, leader LSO)."""
+        ctl = self._ctl(topic, partition)
+        with ctl.lock:
+            leader = self._leader_broker(ctl)
+            return min(ctl.hw, leader.log.last_stable_offset(topic, partition))
 
     def size_bytes(self, topic: str, partition: int | None = None) -> int:
         if partition is not None:
@@ -1578,10 +2070,18 @@ class ClusterProducer:
         retries: int = 5,
         idempotent: bool = False,
         producer_name: str | None = None,
+        transactional_id: str | None = None,
     ):
         self.cluster = cluster
         self.acks = acks
         self.retries = retries
+        # a transactional producer IS an idempotent producer whose stable
+        # name is the transactional id (Kafka's transactional.id): the
+        # committed epoch bump on re-initialization is what fences a
+        # zombie's in-flight transaction
+        self.transactional_id = transactional_id
+        if transactional_id is not None:
+            producer_name = transactional_id
         self.idempotent = idempotent or producer_name is not None
         if self.idempotent and acks not in ("all", -1):
             # as in Kafka: idempotence requires acks=all. At acks=0/1 an
@@ -1610,6 +2110,71 @@ class ClusterProducer:
         self._unresolved: dict[tuple[str, int], tuple[int, bytes]] = {}
         self._meta = _MetadataCache(cluster)
         self._sticky: dict[str, int] = {}
+        self._in_txn = False
+        self._txn_parts: set[tuple[str, int]] = set()
+
+    # ------------------------------------------------------------ transactions
+    def begin_txn(self) -> None:
+        """Open a transaction: every ``send``/``send_batch`` until
+        ``commit_txn``/``abort_txn`` becomes atomic with the others (and
+        with any offsets attached via :meth:`send_offsets_to_txn`)."""
+        if self.transactional_id is None:
+            raise InvalidTxnState(
+                "transactions require ClusterProducer(transactional_id=...)"
+            )
+        if self._in_txn:
+            raise InvalidTxnState("transaction already in progress")
+        self.cluster.begin_txn(self.producer_id, self.producer_epoch)
+        self._in_txn = True
+        self._txn_parts = set()
+
+    def send_offsets_to_txn(
+        self, group_id: str, offsets: dict[TopicPartition, int]
+    ) -> None:
+        """Attach consumer offsets to the open transaction — they commit
+        to the replicated offset store atomically with the produced
+        records (the read-process-write exactly-once primitive)."""
+        if not self._in_txn:
+            raise InvalidTxnState("no transaction in progress")
+        self.cluster.txn_add_offsets(
+            self.producer_id, self.producer_epoch, group_id, offsets
+        )
+
+    @property
+    def in_txn(self) -> bool:
+        return self._in_txn
+
+    def commit_txn(self) -> None:
+        """Commit the open transaction. Raises ``ClusterError`` when the
+        cluster cannot complete the two-phase commit right now — the
+        transaction is then either still ongoing (prepare never committed;
+        retry or abort) or durably prepared (the cluster finishes it on a
+        controller tick; a retry here also re-drives it, idempotently)."""
+        if not self._in_txn:
+            raise InvalidTxnState("no transaction in progress")
+        try:
+            self.cluster.commit_txn(self.producer_id, self.producer_epoch)
+        except (InvalidTxnState, ProducerFenced):
+            # the transaction is beyond this operation (opposite outcome
+            # decided, or a newer incarnation fenced us): locally over
+            self._in_txn = False
+            raise
+        self._in_txn = False
+
+    def abort_txn(self) -> None:
+        """Abort the open transaction: its records become permanently
+        invisible to read_committed consumers, its offsets never apply.
+        Raises :class:`InvalidTxnState` when a COMMIT is already durably
+        decided — the transaction will complete as committed regardless;
+        the local transaction is considered over either way."""
+        if not self._in_txn:
+            raise InvalidTxnState("no transaction in progress")
+        try:
+            self.cluster.abort_txn(self.producer_id, self.producer_epoch)
+        except (InvalidTxnState, ProducerFenced):
+            self._in_txn = False
+            raise
+        self._in_txn = False
 
     @property
     def metadata_refreshes(self) -> int:
@@ -1665,6 +2230,15 @@ class ClusterProducer:
             # the broker and returns the original offsets; the sequence
             # only advances once the batch is acknowledged
             producer = (self.producer_id, self.producer_epoch, seq)
+        if self._in_txn and (topic, partition) not in self._txn_parts:
+            # the partition joins the transaction's registered set (a
+            # committed AddPartitionsToTxn) BEFORE its first append, so
+            # the coordinator knows where markers must go even if this
+            # producer dies one line down
+            self.cluster.txn_add_partitions(
+                self.producer_id, self.producer_epoch, [(topic, partition)]
+            )
+            self._txn_parts.add((topic, partition))
         last_err: ClusterError | None = None
         try:
             for _ in range(self.retries + 1):
@@ -1673,6 +2247,7 @@ class ClusterProducer:
                     first, last = self.cluster.broker_append(
                         leader, topic, partition, values, keys=keys,
                         acks=self.acks, producer=producer,
+                        transactional=self._in_txn,
                     )
                     if producer is not None:
                         self._unresolved.pop((topic, partition), None)
@@ -1736,14 +2311,21 @@ class ClusterConsumer:
     when the leader is unreachable (or the partition is leaderless
     mid-election), the fetch falls back to an in-sync follower, capped at
     the high watermark — bounded staleness, never divergence.
+
+    ``isolation_level="read_committed"`` caps every fetch at the last
+    stable offset and filters out control markers and aborted
+    transactions' records: the consumer observes a transaction's records
+    only after its COMMIT marker, and never observes an aborted one.
     """
 
     def __init__(self, cluster: BrokerCluster, *, group_id: str | None = None,
-                 retries: int = 5, follower_reads: bool = False):
+                 retries: int = 5, follower_reads: bool = False,
+                 isolation_level: str | None = None):
         self.cluster = cluster
         self.group_id = group_id
         self.retries = retries
         self.follower_reads = follower_reads
+        self.isolation_level = isolation_level
         self.follower_fetches = 0
         self._meta = _MetadataCache(cluster)
 
@@ -1759,7 +2341,8 @@ class ClusterConsumer:
             try:
                 leader = self._meta.leader(topic, partition)
                 return self.cluster.broker_fetch(
-                    leader, topic, partition, offset, max_records
+                    leader, topic, partition, offset, max_records,
+                    isolation=self.isolation_level,
                 )
             except NotLeaderError as e:
                 self._meta.note_leader_hint(topic, partition, e.leader_hint)
@@ -1790,7 +2373,7 @@ class ClusterConsumer:
             try:
                 batch = self.cluster.broker_fetch(
                     b, topic, partition, offset, max_records,
-                    allow_follower=True,
+                    allow_follower=True, isolation=self.isolation_level,
                 )
             except ClusterError:
                 continue

@@ -126,6 +126,7 @@ class ConsumerGroup:
         *,
         on_revoked: Callable[[list[TopicPartition]], None] | None = None,
         on_assigned: Callable[[list[TopicPartition]], None] | None = None,
+        isolation_level: str | None = None,
     ) -> "GroupConsumer":
         """Add a member; returns its :class:`GroupConsumer` view.
 
@@ -134,6 +135,11 @@ class ConsumerGroup:
         generation change at its next poll, ``on_revoked`` fires with the
         partitions it lost *before* positions reset, ``on_assigned`` with
         the new assignment after.
+
+        ``isolation_level="read_committed"`` makes the member's polls
+        stop at each partition's last stable offset and skip control
+        markers and aborted transactions' records — it never observes a
+        transaction that has not committed.
         """
         with self._lock:
             self._members[member_id] = _Member(member_id, self._clock())
@@ -141,6 +147,7 @@ class ConsumerGroup:
             return GroupConsumer(
                 self, member_id,
                 on_revoked=on_revoked, on_assigned=on_assigned,
+                isolation_level=isolation_level,
             )
 
     def rejoin(self, member_id: str) -> None:
@@ -262,9 +269,11 @@ class GroupConsumer:
         *,
         on_revoked: Callable[[list[TopicPartition]], None] | None = None,
         on_assigned: Callable[[list[TopicPartition]], None] | None = None,
+        isolation_level: str | None = None,
     ):
         self.group = group
         self.member_id = member_id
+        self.isolation_level = isolation_level
         self._positions: dict[TopicPartition, int] = {}
         self._assigned: list[TopicPartition] = []  # last observed assignment
         self._generation_seen = -1
@@ -316,13 +325,17 @@ class GroupConsumer:
             if pos is None:
                 continue  # position still unresolved (mid-election skip)
             try:
-                batch = self.group.log.read(tp.topic, tp.partition, pos, max_records)
+                batch = self.group.log.read(
+                    tp.topic, tp.partition, pos, max_records,
+                    isolation=self.isolation_level,
+                )
             except OffsetOutOfRange:
                 try:
                     # evicted under us — jump to log start (auto.offset.reset)
                     pos = self.group.log.start_offset(tp.topic, tp.partition)
                     batch = self.group.log.read(
-                        tp.topic, tp.partition, pos, max_records
+                        tp.topic, tp.partition, pos, max_records,
+                        isolation=self.isolation_level,
                     )
                     # persist the recovered position even when the read
                     # comes back empty, or every later poll re-raises and
@@ -338,6 +351,11 @@ class GroupConsumer:
             if len(batch):
                 self._positions[tp] = batch.next_offset
                 batches.append(batch)
+            elif (batch.scanned or 0) > 0:
+                # a read_committed poll that scanned only control markers
+                # (or aborted records) delivers nothing but must still
+                # advance, or every later poll re-reads the same span
+                self._positions[tp] = batch.next_offset
         return batches
 
     def commit(self) -> bool:
@@ -348,6 +366,26 @@ class GroupConsumer:
         return self.group.commit_member(
             self.member_id, self._generation_seen, dict(self._positions)
         )
+
+    def positions(self) -> dict[TopicPartition, int]:
+        """Snapshot of the member's polled positions — what a
+        transactional publisher hands to ``send_offsets_to_txn`` so the
+        offsets commit atomically with its produced records."""
+        return dict(self._positions)
+
+    @property
+    def generation(self) -> int:
+        """The group generation the current positions were polled under —
+        what a transactional publisher checks against the group before
+        committing offsets through a transaction (best-effort zombie
+        fencing; the generation-atomic path is :meth:`commit`)."""
+        return self._generation_seen
+
+    def reset_positions(self) -> None:
+        """Forget local positions; the next poll re-resolves them from
+        the group's committed offsets (the recovery path after an aborted
+        transaction: re-deliver everything the abort un-published)."""
+        self._positions = {}
 
     def rejoin(self) -> None:
         """Recover from :class:`RebalanceError`: re-enter the group and

@@ -163,23 +163,39 @@ def send_control(log: StreamBackend, msg: ControlMessage, producer=None) -> None
 
 
 def poll_control(
-    log: StreamBackend, deployment_id: str, from_offset: int = 0
+    log: StreamBackend,
+    deployment_id: str,
+    from_offset: int = 0,
+    isolation: str | None = None,
 ) -> tuple[ControlMessage | None, int]:
     """Scan the control topic for the first message targeting ``deployment_id``.
 
     Returns ``(msg_or_None, next_offset)`` — the training Job's
     ``readControlStreams`` loop from the paper's Algorithm 1.
+
+    ``isolation="read_committed"`` hides control messages of uncommitted
+    (or aborted) transactions — with a transactional ``ingest`` the
+    stream announce becomes visible only once every record it names is
+    durably committed, so a job can never train on a half-published
+    stream.
     """
     log.ensure_topic(CONTROL_TOPIC)
     end = log.end_offset(CONTROL_TOPIC, 0)
     off = from_offset
     while off < end:
-        batch = log.read(CONTROL_TOPIC, 0, off, 256)
+        batch = log.read(CONTROL_TOPIC, 0, off, 256, isolation=isolation)
         if not len(batch):
-            break  # visible end moved below `end` (cluster HW regression)
+            if (batch.scanned or 0) == 0:
+                # nothing visible: HW regression, or read_committed
+                # blocked at the LSO by an open transaction
+                break
+            off = batch.next_offset  # marker-only span: skip past it
+            continue
         for i, v in enumerate(batch.values):
             msg = ControlMessage.from_bytes(v)
             if msg.deployment_id == deployment_id:
+                if batch.offsets is not None:
+                    return msg, batch.offsets[i] + 1
                 return msg, batch.first_offset + i + 1
         off = batch.next_offset
     return None, off
@@ -194,8 +210,9 @@ class ControlLogger:
     stream their model was trained on.
     """
 
-    def __init__(self, log: StreamBackend):
+    def __init__(self, log: StreamBackend, isolation: str | None = None):
         self._log = log
+        self._isolation = isolation
         self._next_offset = 0
         self._history: list[ControlMessage] = []
 
@@ -204,9 +221,15 @@ class ControlLogger:
         end = self._log.end_offset(CONTROL_TOPIC, 0)
         fresh: list[ControlMessage] = []
         while self._next_offset < end:
-            batch = self._log.read(CONTROL_TOPIC, 0, self._next_offset, 256)
+            batch = self._log.read(
+                CONTROL_TOPIC, 0, self._next_offset, 256,
+                isolation=self._isolation,
+            )
             if not len(batch):
-                break  # visible end moved below `end` (cluster HW regression)
+                if (batch.scanned or 0) == 0:
+                    break  # HW regression or LSO-blocked open transaction
+                self._next_offset = batch.next_offset
+                continue
             fresh.extend(ControlMessage.from_bytes(v) for v in batch.values)
             self._next_offset = batch.next_offset
         self._history.extend(fresh)

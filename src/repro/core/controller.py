@@ -9,7 +9,9 @@ design the paper's availability claims actually need:
 * **Replicated metadata log.** Controller state changes are *commands*
   (:class:`MetadataCommand`: ``RegisterBroker``, ``ElectLeader``,
   ``ShrinkIsr``, ``ExpandIsr``, ``CreateTopic``, ``DeleteTopic``,
-  ``AllocatePid``)
+  ``AllocatePid``, and the transaction-coordinator commands
+  ``BeginTxn``/``AddPartitionsToTxn``/``AddOffsetsToTxn``/
+  ``PrepareCommit``/``PrepareAbort``/``CompleteTxn``)
   appended to a log replicated across N controller nodes. Each node's
   log **is** a :class:`~repro.core.log.StreamLog` topic
   (``__cluster_metadata``) — the same segment substrate the data plane
@@ -94,6 +96,8 @@ class MetadataCommand:
 
     kind: str  # register_broker | elect_leader | shrink_isr | expand_isr
     #          | create_topic | delete_topic | allocate_pid | noop
+    #          | begin_txn | add_partitions_to_txn | add_offsets_to_txn
+    #          | prepare_commit | prepare_abort | complete_txn
     topic: str | None = None
     partition: int | None = None
     broker_id: int | None = None
@@ -112,11 +116,26 @@ class MetadataCommand:
     pid: int | None = None
     producer_epoch: int | None = None
     name: str | None = None
+    # transaction-coordinator commands (DESIGN.md §8): the coordinator's
+    # whole state machine — ongoing partition set, consumer offsets to
+    # commit with the transaction, and the prepare/complete decisions —
+    # lives in these replicated commands, so a controller successor
+    # reconstructs every in-flight transaction from the metadata log
+    partitions: tuple[tuple[str, int], ...] | None = None
+    group: str | None = None  # add_offsets_to_txn: consumer group id
+    offsets: dict | None = None  # "topic:partition" -> offset
+    committed: bool | None = None  # complete_txn outcome
+    # per-pid txn command sequence: application is guarded by
+    # ``txn_seq > state.seq`` (the transactional pversion), making
+    # failover replay idempotent
+    txn_seq: int | None = None
 
     def to_bytes(self, term: int) -> bytes:
         body = {k: v for k, v in asdict(self).items() if v is not None}
         if self.isr is not None:
             body["isr"] = list(self.isr)
+        if self.partitions is not None:
+            body["partitions"] = [list(p) for p in self.partitions]
         return json.dumps({"term": term, "cmd": body}, sort_keys=True).encode()
 
     @staticmethod
@@ -125,6 +144,10 @@ class MetadataCommand:
         body = obj["cmd"]
         if "isr" in body:
             body["isr"] = tuple(body["isr"])
+        if "partitions" in body:
+            body["partitions"] = tuple(
+                (t, int(p)) for t, p in body["partitions"]
+            )
         return obj["term"], MetadataCommand(**body)
 
 

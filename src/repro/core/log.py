@@ -22,7 +22,17 @@ Implements the semantics Kafka-ML relies on (paper §II, §V):
   the records themselves, so ``producer_append`` resolves a retried
   batch to its *original* offsets instead of re-appending, the table
   replicates with the records, and it is rebuilt from the retained log
-  after truncation (see DESIGN.md §7).
+  after truncation (see DESIGN.md §7);
+* **transactions** (DESIGN.md §8): transactional records carry a txn
+  flag next to their producer stamp, and COMMIT/ABORT **control
+  records** (markers) written by the transaction coordinator resolve
+  them. Each partition tracks its open transactions (pid → first
+  offset) and its aborted ranges — both, like producer state, derived
+  purely from the records in the log, so replicas and post-truncation
+  rebuilds agree. ``last_stable_offset`` (LSO) is the first offset of
+  the earliest still-open transaction; ``read(...,
+  isolation="read_committed")`` caps at the LSO and filters out
+  markers and aborted records.
 
 The log is an in-process, host-memory structure (segments are bytearrays)
 with optional disk spill. On a TPU pod the broker is colocated with the
@@ -91,6 +101,19 @@ class OutOfOrderSequence(RuntimeError):
 # for pipelined producers (Kafka keeps 5 batch metadata entries).
 _MAX_PRODUCER_RUNS = 8
 
+# Per-record control/transaction flag values (the ``ctrls`` arrays):
+# 0 = plain record, 1 = transactional data record, 2 = COMMIT marker,
+# 3 = ABORT marker. Markers are control records: they occupy offsets and
+# replicate like data, but consumers never see them.
+CTRL_NONE = 0
+CTRL_TXN_DATA = 1
+CTRL_COMMIT = 2
+CTRL_ABORT = 3
+
+# marker payloads (self-describing; never delivered to consumers)
+_COMMIT_MARKER = b"\x00txn:commit"
+_ABORT_MARKER = b"\x00txn:abort"
+
 
 class _ProducerState:
     """Dedup state for one producer id on one partition.
@@ -104,15 +127,23 @@ class _ProducerState:
     on the same table without shipping snapshots.
     """
 
-    __slots__ = ("epoch", "last_seq", "runs")
+    __slots__ = ("epoch", "last_seq", "runs", "last_ts")
 
     def __init__(self, epoch: int):
         self.epoch = epoch
         self.last_seq = -1
         self.runs: list[list[int]] = []
+        # newest record timestamp this pid appended — the retention-clock
+        # expiry key (record timestamps replicate verbatim, so every
+        # replica ages the same pid out at the same stream time)
+        self.last_ts = 0
 
-    def note(self, first_seq: int, last_seq: int, first_offset: int) -> None:
+    def note(
+        self, first_seq: int, last_seq: int, first_offset: int, ts: int = 0
+    ) -> None:
         """Record an appended span (contiguous in seq and offset)."""
+        if ts > self.last_ts:
+            self.last_ts = ts
         if self.runs:
             r = self.runs[-1]
             if (
@@ -224,6 +255,8 @@ class _Segment:
         "pids",
         "peps",
         "pseqs",
+        "ctrls",
+        "markers",
         "count",
         "created_ms",
         "_spill_file",
@@ -258,6 +291,14 @@ class _Segment:
         self.pids: list[int] | None = None
         self.peps: list[int] | None = None
         self.pseqs: list[int] | None = None
+        # per-record control/transaction flags (CTRL_*), lazily allocated
+        # like the producer metadata: None until the segment holds its
+        # first transactional or marker record. ``markers`` counts the
+        # control markers among them, so reads of marker-free spans keep
+        # the contiguous fast path even on fully-transactional topics
+        # (whose every record carries a ctrl flag).
+        self.ctrls: list[int] | None = None
+        self.markers = 0
         self.count = 0
         self.created_ms = created_ms
         self._spill_file = None
@@ -327,6 +368,7 @@ class _Segment:
             self.timestamps.extend([timestamp_ms] * n)
         else:
             self.timestamps.extend(timestamp_ms)
+        ctrls = prods[3] if prods is not None and len(prods) > 3 else None
         if prods is not None:
             if self.pids is None:
                 # first stamped record: backfill the unstamped prefix
@@ -340,6 +382,13 @@ class _Segment:
             self.pids.extend(itertools.repeat(-1, n))
             self.peps.extend(itertools.repeat(-1, n))
             self.pseqs.extend(itertools.repeat(-1, n))
+        if ctrls is not None and (self.ctrls is not None or any(ctrls)):
+            if self.ctrls is None:
+                self.ctrls = [CTRL_NONE] * self.count
+            self.ctrls.extend(ctrls)
+            self.markers += sum(1 for x in ctrls if x >= CTRL_COMMIT)
+        elif self.ctrls is not None:
+            self.ctrls.extend(itertools.repeat(CTRL_NONE, n))
         self.count += n
 
     def record(self, topic: str, partition: int, rel: int) -> Record:
@@ -404,12 +453,22 @@ class RecordBatch:
     first_offset: int
     values: list[memoryview]
     timestamps: list[int]
+    # read_committed reads skip control markers and aborted records, so
+    # the delivered records may be non-contiguous: ``offsets`` then holds
+    # each record's true offset and ``scanned`` how many raw offsets the
+    # read consumed (next_offset = first_offset + scanned, so a poll
+    # advances past a marker-only span instead of re-reading it forever).
+    # Both stay None on the contiguous (raw) read path.
+    offsets: list[int] | None = None
+    scanned: int | None = None
 
     def __len__(self) -> int:
         return len(self.values)
 
     @property
     def next_offset(self) -> int:
+        if self.scanned is not None:
+            return self.first_offset + self.scanned
         return self.first_offset + len(self.values)
 
     def to_matrix(self) -> np.ndarray:
@@ -440,6 +499,18 @@ class _Partition:
         # retention: a pid whose records were all evicted starts fresh
         # (Kafka's producer-id expiry).
         self.producers: dict[int, _ProducerState] = {}
+        # transaction state, derived purely from the records (txn flags +
+        # control markers), exactly like the producer table above:
+        #   txn_open: pid -> (first offset of its open txn, producer epoch)
+        #   aborted:  [(pid, first_offset, marker_offset), ...] — records
+        #             of `pid` in [first, marker) belong to an aborted
+        #             transaction and are invisible at read_committed
+        self.txn_open: dict[int, tuple[int, int]] = {}
+        self.aborted: list[tuple[int, int, int]] = []
+        # earliest time the retention-clock pid expiry could next fire
+        # (min last_ts + retention_ms, recomputed by each sweep): keeps
+        # the expiry scan off the per-append hot path
+        self._pid_deadline = 0
         self.lock = threading.RLock()
 
     # ------------------------------------------------------------------ write
@@ -448,8 +519,9 @@ class _Partition:
         values: Sequence[bytes],
         keys: Sequence[bytes | None] | None,
         timestamps: Sequence[int] | None = None,
-        prods: tuple[Sequence[int], Sequence[int], Sequence[int]] | None = None,
+        prods: tuple | None = None,
         producer: tuple[int, int, int] | None = None,
+        txn: bool = False,
     ) -> tuple[int, int]:
         """Append a message set; returns (first_offset, last_offset).
 
@@ -472,11 +544,14 @@ class _Partition:
             if producer is not None:
                 pid, pep, seq = producer
                 # lazy C-level iterables: the segment extends consume them
-                # without materializing intermediate lists (hot path)
+                # without materializing intermediate lists (hot path);
+                # the ctrl column is only materialized for transactional
+                # batches, so plain idempotent produce stays flag-free
                 prods = (
                     itertools.repeat(pid, n),
                     itertools.repeat(pep, n),
                     range(seq, seq + n),
+                    [CTRL_TXN_DATA] * n if txn else None,
                 )
             seg = self.segments[-1]
             if seg.size_bytes >= self.cfg.segment_bytes and seg.count > 0:
@@ -495,9 +570,19 @@ class _Partition:
             if producer is not None:
                 # one contiguous batch: a single run merge, off the
                 # per-record path (the acks=all hot path pushes batches)
-                self._note_producer_run(pid, pep, seq, seq + n - 1, first)
+                ts = timestamps if timestamps is None or isinstance(
+                    timestamps, int
+                ) else (timestamps[-1] if len(timestamps) else None)
+                self._note_producer_run(
+                    pid, pep, seq, seq + n - 1, first,
+                    now if ts is None else ts,
+                )
+                if txn:
+                    self._open_txn(pid, pep, first)
             elif prods is not None:
-                self._note_producer_records(prods, first)
+                self._note_producer_records(
+                    prods, first, now if timestamps is None else timestamps
+                )
             self._enforce_retention(now)
             return first, seg.last_offset
 
@@ -515,44 +600,135 @@ class _Partition:
         return st
 
     def _note_producer_run(
-        self, pid: int, epoch: int, first_seq: int, last_seq: int, first_off: int
+        self,
+        pid: int,
+        epoch: int,
+        first_seq: int,
+        last_seq: int,
+        first_off: int,
+        ts: int = 0,
     ) -> None:
         st = self._producer_state(pid, epoch)
         if st is not None:
-            st.note(first_seq, last_seq, first_off)
+            st.note(first_seq, last_seq, first_off, ts)
 
     def _note_producer_records(
         self,
-        prods: tuple[Sequence[int], Sequence[int], Sequence[int]],
+        prods: tuple,
         first_off: int,
+        timestamps: Sequence[int] | int = 0,
     ) -> None:
         """Replication path: fold per-record metadata into the table.
         Consecutive records merge into the same runs the source built, so
-        replica tables converge on the leader's."""
-        pids, peps, pseqs = prods
+        replica tables converge on the leader's. Control flags replay the
+        transaction state machine the same way: a txn-flagged record
+        opens its pid's transaction, a marker closes (or aborts) it."""
+        pids, peps, pseqs = prods[0], prods[1], prods[2]
+        ctrls = prods[3] if len(prods) > 3 else None
+        scalar_ts = timestamps if isinstance(timestamps, int) else None
         for i, pid in enumerate(pids):
-            if pid >= 0:
-                self._note_producer_run(
-                    pid, peps[i], pseqs[i], pseqs[i], first_off + i
+            if pid < 0:
+                continue
+            ctrl = ctrls[i] if ctrls is not None else CTRL_NONE
+            if ctrl >= CTRL_COMMIT:
+                self._close_txn(
+                    pid, peps[i], first_off + i, abort=ctrl == CTRL_ABORT
                 )
+                continue
+            ts = scalar_ts if scalar_ts is not None else timestamps[i]
+            self._note_producer_run(
+                pid, peps[i], pseqs[i], pseqs[i], first_off + i, ts
+            )
+            if ctrl == CTRL_TXN_DATA:
+                self._open_txn(pid, peps[i], first_off + i)
 
     def _rebuild_producer_state(self) -> None:
-        """Re-derive the dedup table from the retained log (after
-        ``truncate_to``): state for truncated records must disappear —
-        their batches are gone, so a retry must re-append, not dedup
-        against offsets that no longer hold them."""
+        """Re-derive the dedup table — and the transaction state — from
+        the retained log (after ``truncate_to``): state for truncated
+        records must disappear — their batches are gone, so a retry must
+        re-append, not dedup against offsets that no longer hold them,
+        and a truncated marker must re-open the transaction it closed."""
         self.producers = {}
+        self.txn_open = {}
+        self.aborted = []
+        self._pid_deadline = 0  # rebuilt state may hold older timestamps
         for seg in self.segments:
             pids = seg.pids
             if pids is None:
                 continue  # segment never saw a stamped record
             base = seg.base_offset
+            ctrls = seg.ctrls
             for r in range(seg.count):
-                if pids[r] >= 0:
-                    self._note_producer_run(
-                        pids[r], seg.peps[r], seg.pseqs[r], seg.pseqs[r],
-                        base + r,
+                if pids[r] < 0:
+                    continue
+                ctrl = ctrls[r] if ctrls is not None else CTRL_NONE
+                if ctrl >= CTRL_COMMIT:
+                    self._close_txn(
+                        pids[r], seg.peps[r], base + r,
+                        abort=ctrl == CTRL_ABORT,
                     )
+                    continue
+                self._note_producer_run(
+                    pids[r], seg.peps[r], seg.pseqs[r], seg.pseqs[r],
+                    base + r, seg.timestamps[r],
+                )
+                if ctrl == CTRL_TXN_DATA:
+                    self._open_txn(pids[r], seg.peps[r], base + r)
+
+    # ------------------------------------------------------ transactions
+    def _open_txn(self, pid: int, epoch: int, offset: int) -> None:
+        """First transactional record of a (pid, epoch) transaction pins
+        the partition's LSO at its offset until a marker resolves it."""
+        cur = self.txn_open.get(pid)
+        if cur is None:
+            self.txn_open[pid] = (offset, epoch)
+        elif epoch > cur[1]:
+            # a newer incarnation appended before the old txn's marker
+            # arrived (abnormal interleaving): keep the earliest offset —
+            # the LSO must not advance past unresolved records
+            self.txn_open[pid] = (cur[0], epoch)
+
+    def _close_txn(
+        self, pid: int, epoch: int, marker_off: int, *, abort: bool
+    ) -> None:
+        cur = self.txn_open.get(pid)
+        if cur is None or epoch < cur[1]:
+            return  # stale marker: never resolves a newer incarnation
+        del self.txn_open[pid]
+        # the pid is no longer pinned: re-arm the retention-clock expiry
+        # sweep so a long-pinned idle pid is reconsidered promptly
+        self._pid_deadline = 0
+        if abort:
+            self.aborted.append((pid, cur[0], marker_off))
+
+    def append_control(
+        self, pid: int, epoch: int, *, abort: bool
+    ) -> int | None:
+        """Write a COMMIT/ABORT marker resolving ``pid``'s open
+        transaction; returns the marker's offset, or None when the pid
+        has no open transaction at ``epoch`` or newer here — which makes
+        coordinator-recovery re-drives idempotent (the second marker
+        write for an already-resolved partition is a no-op, not a
+        duplicate marker)."""
+        with self.lock:
+            cur = self.txn_open.get(pid)
+            if cur is None or cur[1] > epoch:
+                return None
+            value = _ABORT_MARKER if abort else _COMMIT_MARKER
+            ctrl = CTRL_ABORT if abort else CTRL_COMMIT
+            first, _last = self.append_batch(
+                [value], None, prods=([pid], [epoch], [-1], [ctrl])
+            )
+            return first
+
+    def last_stable_offset(self) -> int:
+        """First offset of the earliest open transaction (Kafka's LSO):
+        records at or above it are not yet stable — their transaction may
+        still abort — so read_committed consumers stop here."""
+        with self.lock:
+            if not self.txn_open:
+                return self.end_offset
+            return min(first for first, _ in self.txn_open.values())
 
     def idempotent_append(
         self,
@@ -562,6 +738,7 @@ class _Partition:
         pid: int,
         epoch: int,
         seq: int,
+        txn: bool = False,
     ) -> tuple[int, int, bool]:
         """Leader-side idempotent append: dedup + fencing + gap detection.
 
@@ -598,7 +775,7 @@ class _Partition:
                             f"got {seq}"
                         )
             first, last = self.append_batch(
-                values, keys, timestamps, producer=(pid, epoch, seq)
+                values, keys, timestamps, producer=(pid, epoch, seq), txn=txn
             )
             return first, last, False
 
@@ -644,12 +821,28 @@ class _Partition:
             off += take
             si += 1
 
-    def read(self, offset: int, max_records: int) -> RecordBatch:
+    def read(
+        self, offset: int, max_records: int, isolation: str | None = None
+    ) -> RecordBatch:
+        if isolation == "read_committed":
+            return self._read_committed(offset, max_records)
         with self.lock:
             n = self._bounded_count(offset, max_records)
+            spans = list(self._iter_spans(offset, n))
+            if any(seg.markers for seg, _, _ in spans):
+                # a control marker may sit in range — consumers never see
+                # control records at ANY isolation level (a raw reader
+                # handed marker bytes as a data record would crash on
+                # them); read_uncommitted still delivers not-yet-resolved
+                # and aborted transactional data. Marker-free spans (the
+                # overwhelming majority even on transactional topics)
+                # stay on the contiguous fast path below.
+                return self._read_filtered(
+                    offset, n, spans, skip_aborted=False
+                )
             values: list[memoryview] = []
             timestamps: list[int] = []
-            for seg, lo, hi in self._iter_spans(offset, n):
+            for seg, lo, hi in spans:
                 mv = memoryview(seg.buf)
                 for r in range(lo, hi):
                     start = seg.starts[r]
@@ -663,6 +856,65 @@ class _Partition:
                 timestamps=timestamps,
             )
 
+    def _read_committed(self, offset: int, max_records: int) -> RecordBatch:
+        """Read capped at the LSO, with control markers and aborted
+        records filtered out."""
+        with self.lock:
+            n = self._bounded_count(offset, max_records)
+            n = min(n, max(self.last_stable_offset() - offset, 0))
+            return self._read_filtered(
+                offset, n, list(self._iter_spans(offset, n)),
+                skip_aborted=True,
+            )
+
+    def _read_filtered(
+        self, offset: int, n: int, spans: list, skip_aborted: bool
+    ) -> RecordBatch:
+        """Read with control markers filtered out — plus, at
+        read_committed (``skip_aborted``), aborted transactions' records.
+        The returned batch carries explicit per-record ``offsets`` and
+        the raw ``scanned`` count, so the consumer's next position
+        advances past filtered spans. Caller holds the partition lock."""
+        values: list[memoryview] = []
+        timestamps: list[int] = []
+        offsets: list[int] = []
+        abort_ranges: dict[int, list[tuple[int, int]]] = {}
+        if skip_aborted:
+            hi = offset + n
+            for pid, first, marker in self.aborted:
+                # only ranges overlapping the read window matter; the
+                # prefilter keeps the per-record check short on long
+                # partitions with many historical aborts. (A per-segment
+                # aborted-txn index — Kafka's .txnindex — is the
+                # follow-up for truly huge retained partitions.)
+                if first < hi and marker > offset:
+                    abort_ranges.setdefault(pid, []).append((first, marker))
+        for seg, lo, hi in spans:
+            mv = memoryview(seg.buf)
+            ctrls = seg.ctrls
+            for r in range(lo, hi):
+                ctrl = ctrls[r] if ctrls is not None else CTRL_NONE
+                if ctrl >= CTRL_COMMIT:
+                    continue  # control marker: never delivered
+                if skip_aborted and ctrl == CTRL_TXN_DATA:
+                    off = seg.base_offset + r
+                    ab = abort_ranges.get(seg.pids[r])
+                    if ab is not None and any(a <= off < b for a, b in ab):
+                        continue  # aborted transaction's record
+                start = seg.starts[r]
+                values.append(mv[start : start + seg.lengths[r]])
+                timestamps.append(seg.timestamps[r])
+                offsets.append(seg.base_offset + r)
+        return RecordBatch(
+            topic=self.topic,
+            partition=self.index,
+            first_offset=offset,
+            values=values,
+            timestamps=timestamps,
+            offsets=offsets,
+            scanned=n,
+        )
+
     def _segment_for(self, offset: int) -> int:
         bases = [s.base_offset for s in self.segments]
         i = bisect.bisect_right(bases, offset) - 1
@@ -674,12 +926,13 @@ class _Partition:
         list[bytes],
         list[bytes | None],
         list[int],
-        tuple[list[int], list[int], list[int]] | None,
+        tuple[list[int], list[int], list[int], list[int]] | None,
     ]:
         """Replication fetch: materialized (values, keys, timestamps,
         producer metadata) so a follower can re-append them verbatim to
-        its copy of the partition — including the (pid, epoch, seq) stamps
-        its dedup table is derived from."""
+        its copy of the partition — including the (pid, epoch, seq)
+        stamps its dedup table is derived from, and the control flags its
+        transaction state is derived from."""
         with self.lock:
             n = self._bounded_count(offset, max_records)
             values: list[bytes] = []
@@ -688,6 +941,7 @@ class _Partition:
             pids: list[int] = []
             peps: list[int] = []
             pseqs: list[int] = []
+            ctrls: list[int] = []
             spans = list(self._iter_spans(offset, n))
             # None unless some record in range is stamped, so followers of
             # purely non-idempotent partitions append lazily too
@@ -712,9 +966,13 @@ class _Partition:
                     pids.extend(seg.pids[lo:hi])
                     peps.extend(seg.peps[lo:hi])
                     pseqs.extend(seg.pseqs[lo:hi])
+                if seg.ctrls is None:
+                    ctrls.extend(itertools.repeat(CTRL_NONE, hi - lo))
+                else:
+                    ctrls.extend(seg.ctrls[lo:hi])
             return (
                 values, keys, timestamps,
-                (pids, peps, pseqs) if stamped else None,
+                (pids, peps, pseqs, ctrls) if stamped else None,
             )
 
     def reset_to(self, offset: int) -> int:
@@ -726,9 +984,12 @@ class _Partition:
                 s.drop_spill()
             self.segments = [_Segment(offset, self.clock())]
             self.log_start_offset = offset
-            # the log is empty: dedup state rebuilds as records re-fetch
-            # (replica_append carries their producer metadata)
+            # the log is empty: dedup and transaction state rebuild as
+            # records re-fetch (replica_append carries their metadata)
             self.producers = {}
+            self.txn_open = {}
+            self.aborted = []
+            self._pid_deadline = 0
             return offset
 
     def truncate_to(self, offset: int) -> int:
@@ -775,6 +1036,11 @@ class _Partition:
                     del seg.pids[rel:]
                     del seg.peps[rel:]
                     del seg.pseqs[rel:]
+                if seg.ctrls is not None:
+                    seg.markers -= sum(
+                        1 for x in seg.ctrls[rel:] if x >= CTRL_COMMIT
+                    )
+                    del seg.ctrls[rel:]
                 seg.count = rel
             if seg._spill_file is not None:
                 # sealed/spilled segments are read-only maps — appendable
@@ -816,6 +1082,41 @@ class _Partition:
             evicted = True
         if evicted:
             self._expire_producers()
+        if (
+            cfg.retention_ms is not None
+            and self.producers
+            and now_ms > self._pid_deadline
+        ):
+            # retention-clock pid expiry: a long-idle producer id is
+            # forgotten once its newest record timestamp ages past
+            # retention_ms — even while its records still sit in the
+            # never-evicted active segment. Keyed to record timestamps
+            # (which replicate verbatim), not to table size or local
+            # fetch time, so every replica expires the same pids at the
+            # same stream time (Kafka's producer-id expiration). The
+            # sweep runs only when the cached deadline (earliest possible
+            # expiry) passes — never on every append. New pids appended
+            # after a sweep carry newer timestamps than its minimum on
+            # the leader; a follower replaying older stamps may retain a
+            # pid up to one retention period longer (extra dedup state:
+            # the safe direction).
+            min_ts = None
+            for pid in list(self.producers):
+                st = self.producers[pid]
+                if pid in self.txn_open:
+                    # an open txn pins its pid; excluded from the
+                    # deadline too (its stale last_ts would otherwise
+                    # drag the deadline into the past and re-run this
+                    # sweep on every append) — _close_txn re-arms the
+                    # sweep when the pin comes off
+                    continue
+                if now_ms - st.last_ts > cfg.retention_ms:
+                    del self.producers[pid]
+                elif min_ts is None or st.last_ts < min_ts:
+                    min_ts = st.last_ts
+            self._pid_deadline = (
+                min_ts if min_ts is not None else now_ms
+            ) + cfg.retention_ms
 
     def _expire_producers(self) -> None:
         """Age producer state out with retention: drop runs whose records
@@ -841,6 +1142,13 @@ class _Partition:
                 st.runs = kept
             else:
                 del self.producers[pid]
+        # aborted ranges whose marker fell below the log start describe
+        # only evicted records; open transactions clamp their start to
+        # the log start (the records below it are gone either way)
+        self.aborted = [a for a in self.aborted if a[2] >= lso]
+        for pid, (first, epoch) in list(self.txn_open.items()):
+            if first < lso:
+                self.txn_open[pid] = (lso, epoch)
 
     def size_bytes(self) -> int:
         with self.lock:
@@ -950,9 +1258,16 @@ class StreamLog:
 
     # ---------------------------------------------------------------- consume
     def read(
-        self, topic: str, partition: int, offset: int, max_records: int = 1024
+        self,
+        topic: str,
+        partition: int,
+        offset: int,
+        max_records: int = 1024,
+        isolation: str | None = None,
     ) -> RecordBatch:
-        return self._partition(topic, partition).read(offset, max_records)
+        return self._partition(topic, partition).read(
+            offset, max_records, isolation
+        )
 
     def read_one(self, topic: str, partition: int, offset: int) -> Record:
         """Point read of a single record, key included (the metadata-log
@@ -969,14 +1284,19 @@ class StreamLog:
     def read_range(
         self, topic: str, partition: int, offset: int, length: int
     ) -> RecordBatch:
-        """Read exactly ``length`` records starting at ``offset``.
+        """Read the raw offset window ``[offset, offset + length)``.
 
         This is the paper's §V access pattern: a control message names
-        ``[topic:partition:offset:length]`` and the training job reads that
-        exact slice of the distributed log.
+        ``[topic:partition:offset:length]`` and the training job reads
+        that exact slice of the distributed log. The window is counted in
+        raw offsets — a control marker inside it occupies its offset but
+        is (like for every consumer) not delivered, so the batch may hold
+        fewer than ``length`` records; stream ranges emitted by ``ingest``
+        name data records only and always deliver exactly ``length``.
         """
         batch = self.read(topic, partition, offset, length)
-        if len(batch) < length:
+        covered = batch.scanned if batch.scanned is not None else len(batch)
+        if covered < length:
             raise OffsetOutOfRange(
                 f"{topic}:{partition} range [{offset}, {offset+length}) extends past "
                 f"end {self.end_offset(topic, partition)}"
@@ -1013,7 +1333,7 @@ class StreamLog:
         list[bytes],
         list[bytes | None],
         list[int],
-        tuple[list[int], list[int], list[int]] | None,
+        tuple[list[int], list[int], list[int], list[int]] | None,
     ]:
         return self._partition(topic, partition).fetch_raw(offset, max_records)
 
@@ -1024,8 +1344,9 @@ class StreamLog:
         values: Sequence[bytes],
         keys: Sequence[bytes | None] | None,
         timestamps: Sequence[int] | int,
-        prods: tuple[Sequence[int], Sequence[int], Sequence[int]] | None = None,
+        prods: tuple | None = None,
         producer: tuple[int, int, int] | None = None,
+        txn: bool = False,
     ) -> tuple[int, int]:
         """Append records with explicit timestamps (scalar or per-record).
 
@@ -1042,7 +1363,7 @@ class StreamLog:
         per-record loop). Either keeps the follower's dedup table in step
         with the leader's, so exactly-once survives failover."""
         return self._partition(topic, partition).append_batch(
-            values, keys, timestamps, prods=prods, producer=producer
+            values, keys, timestamps, prods=prods, producer=producer, txn=txn
         )
 
     def producer_append(
@@ -1055,15 +1376,45 @@ class StreamLog:
         pid: int,
         epoch: int,
         seq: int,
+        txn: bool = False,
     ) -> tuple[int, int, bool]:
         """Leader-side idempotent append: returns ``(first, last,
         duplicate)``; a retried batch resolves to its original offsets
         with ``duplicate=True`` instead of re-appending. See
         :meth:`_Partition.idempotent_append` for the fencing/ordering
-        rules."""
+        rules. ``txn=True`` additionally marks the records transactional:
+        they stay above the LSO — invisible to read_committed consumers —
+        until a control marker resolves their transaction."""
         return self._partition(topic, partition).idempotent_append(
-            values, keys, timestamps, pid, epoch, seq
+            values, keys, timestamps, pid, epoch, seq, txn=txn
         )
+
+    def append_control(
+        self, topic: str, partition: int, pid: int, epoch: int, *, abort: bool
+    ) -> int | None:
+        """Write a COMMIT/ABORT control marker resolving ``pid``'s open
+        transaction on the partition; None when nothing is open (the
+        idempotent re-drive path of coordinator recovery)."""
+        return self._partition(topic, partition).append_control(
+            pid, epoch, abort=abort
+        )
+
+    def last_stable_offset(self, topic: str, partition: int) -> int:
+        """The partition's LSO — the read_committed visibility bound."""
+        return self._partition(topic, partition).last_stable_offset()
+
+    def open_txns(self, topic: str, partition: int) -> dict[int, int]:
+        """pid -> first offset of its open transaction (test/observability
+        hook)."""
+        part = self._partition(topic, partition)
+        with part.lock:
+            return {pid: first for pid, (first, _) in part.txn_open.items()}
+
+    def aborted_ranges(self, topic: str, partition: int) -> list[tuple[int, int, int]]:
+        """(pid, first, marker_offset) aborted spans (test hook)."""
+        part = self._partition(topic, partition)
+        with part.lock:
+            return list(part.aborted)
 
     def producer_state(
         self, topic: str, partition: int
@@ -1136,7 +1487,12 @@ class StreamBackend(Protocol):
     ) -> tuple[int, int, int]: ...
 
     def read(
-        self, topic: str, partition: int, offset: int, max_records: int = 1024
+        self,
+        topic: str,
+        partition: int,
+        offset: int,
+        max_records: int = 1024,
+        isolation: str | None = None,
     ) -> RecordBatch: ...
 
     def read_range(

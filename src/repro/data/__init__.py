@@ -1,2 +1,8 @@
 from repro.data.formats import AvroCodec, FieldSpec, RawCodec, codec_from_control
-from repro.data.pipeline import BatchIterator, ShardedFeeder, StreamDataset, ingest
+from repro.data.pipeline import (
+    BatchIterator,
+    ShardedFeeder,
+    StreamDataset,
+    TransactionalProcessor,
+    ingest,
+)

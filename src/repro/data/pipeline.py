@@ -32,7 +32,12 @@ threads to distinct partitions in parallel — the cluster's per-partition
 locking means the appends don't contend. ``ingest(idempotent=True)``
 rides per-thread idempotent producers (and an exactly-once control-message
 send), so a retry after a lost ack can never duplicate a training record
-(DESIGN.md §7).
+(DESIGN.md §7). ``ingest(transactional=True)`` publishes the stream and
+its control-message announce as ONE transaction — a read_committed
+training job sees the whole stream or nothing — and
+:class:`TransactionalProcessor` is the exactly-once read-process-write
+stage (consume → transform → produce with input offsets committed
+atomically with the output records, DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -47,9 +52,15 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.cluster import ClusterProducer
+from repro.core.cluster import (
+    BrokerCluster,
+    ClusterConsumer,
+    ClusterError,
+    ClusterProducer,
+    InvalidTxnState,
+)
 from repro.core.control import ControlMessage, StreamRange, send_control
-from repro.core.log import StreamBackend
+from repro.core.log import LogConfig, StreamBackend, TopicPartition
 from repro.data.formats import AvroCodec, RawCodec, codec_from_control
 
 __all__ = [
@@ -57,6 +68,7 @@ __all__ = [
     "PrefetchIterator",
     "ShardedFeeder",
     "StreamDataset",
+    "TransactionalProcessor",
     "ingest",
     "prefetch_iter",
 ]
@@ -182,6 +194,7 @@ def ingest(
     message_set_size: int = 1024,
     num_threads: int = 1,
     idempotent: bool = False,
+    transactional: bool = False,
     send_control_message: bool = True,
 ) -> ControlMessage:
     """Producer library: encode + stream a dataset, then announce it.
@@ -210,16 +223,37 @@ def ingest(
     training stream as a duplicate record, and the emitted ranges always
     name each record's single, original offset (paper §V: every retry
     duplicate is a *training-data* duplicate).
+
+    ``transactional=True`` (clusters only) goes one further: the whole
+    stream — every data record AND its control-message announce — is one
+    transaction. A ``read_committed`` training job therefore observes
+    either the complete stream or nothing: a crash mid-ingest aborts,
+    leaving no partial stream and no dangling announce to train on.
+    Transactions are single-producer, so the stream runs on one thread
+    (``num_threads`` is ignored) under ``transactional.id``
+    ``ingest-<deployment_id>``; re-running the ingest fences — and
+    aborts — a crashed predecessor's unfinished transaction.
     """
+    if transactional and not hasattr(log, "init_producer"):
+        # never degrade silently: the caller asked for an all-or-nothing
+        # publish a bare StreamLog cannot provide
+        raise ValueError(
+            "ingest(transactional=True) requires a BrokerCluster backend "
+            "(transactions live in the cluster coordinator)"
+        )
     log.ensure_topic(topic)
     encoded = codec.encode_batch(arrays)
     total = len(encoded)
-    use_idem = idempotent and hasattr(log, "init_producer")
+    use_txn = transactional
+    use_idem = (idempotent or use_txn) and hasattr(log, "init_producer")
 
     def produce_span(
-        span: Sequence[bytes], part: int | None
+        span: Sequence[bytes],
+        part: int | None,
+        producer: "ClusterProducer | None" = None,
     ) -> tuple[list[StreamRange], "ClusterProducer | None"]:
-        producer = ClusterProducer(log, idempotent=True) if use_idem else None
+        if producer is None and use_idem:
+            producer = ClusterProducer(log, idempotent=True)
         append = producer.send_batch if producer is not None else (
             lambda t, chunk, partition: log.produce_batch(
                 t, chunk, partition=partition
@@ -246,6 +280,35 @@ def ingest(
         if cur is not None:
             out.append(StreamRange(topic, cur[0], cur[1], cur[2] - cur[1] + 1))
         return out, producer
+
+    if use_txn:
+        # one transaction = one producer: the data records and the
+        # control-message announce commit (or abort) together
+        producer = ClusterProducer(
+            log, transactional_id=f"ingest-{deployment_id}"
+        )
+        producer.begin_txn()
+        try:
+            ranges, _ = produce_span(encoded, partition, producer)
+            msg = ControlMessage(
+                deployment_id=deployment_id,
+                topic=topic,
+                input_format=codec.FORMAT,
+                input_config=codec.input_config(),
+                validation_rate=validation_rate,
+                total_msg=total,
+                ranges=ranges,
+            )
+            if send_control_message:
+                send_control(log, msg, producer=producer)
+            producer.commit_txn()
+        except BaseException:
+            try:
+                producer.abort_txn()
+            except Exception:
+                pass  # outcome resolves via coordinator recovery
+            raise
+        return msg
 
     num_threads = max(1, min(num_threads, total or 1))
     if partition is not None:
@@ -283,6 +346,142 @@ def ingest(
         # duplicated control message would re-trigger training
         send_control(log, msg, producer=control_producer)
     return msg
+
+
+# ------------------------------------------------- transactional transform
+class TransactionalProcessor:
+    """Exactly-once read-process-write: consume a topic, transform each
+    record with ``fn``, produce the results — input offsets and output
+    records committed in ONE transaction (Kafka Streams' exactly-once
+    processing mode, DESIGN.md §8).
+
+    Each cycle is atomic: either the transformed records land on the
+    output topic AND the input offsets advance, or neither happens. A
+    crash anywhere inside a cycle — including between "produce output"
+    and "commit offsets", the window where a plain at-least-once
+    processor duplicates (produce-first) or drops (commit-first) a step —
+    aborts or completes via coordinator recovery, and the re-run resumes
+    from the committed offsets with the aborted outputs invisible to
+    ``read_committed`` consumers downstream.
+
+    The input is read ``read_committed`` too, so chained processors
+    compose into an end-to-end exactly-once pipeline. Zombie fencing
+    comes from the transactional id: a re-created processor with the same
+    id bumps the producer epoch, and the predecessor's unfinished
+    transaction is aborted, its late appends fenced.
+    """
+
+    def __init__(
+        self,
+        cluster: BrokerCluster,
+        transactional_id: str,
+        input_topic: str,
+        output_topic: str,
+        fn,
+        *,
+        group_id: str | None = None,
+        max_records: int = 256,
+    ):
+        self.cluster = cluster
+        self.input_topic = input_topic
+        self.output_topic = output_topic
+        self.fn = fn
+        self.group_id = group_id or f"txn-{transactional_id}"
+        self.max_records = max_records
+        # output mirrors the input's partitioning (partition p in → p out,
+        # so per-partition record order is preserved through the stage)
+        cluster.ensure_topic(output_topic, LogConfig(
+            num_partitions=cluster.num_partitions(input_topic)
+        ))
+        self.producer = ClusterProducer(
+            cluster, transactional_id=transactional_id
+        )
+        self.consumer = ClusterConsumer(
+            cluster, group_id=self.group_id, isolation_level="read_committed"
+        )
+
+    def _position(self, tp: TopicPartition) -> int:
+        off = self.consumer.committed(tp)
+        if off is None:
+            off = self.cluster.start_offset(tp.topic, tp.partition)
+        return off
+
+    def process_once(self) -> int:
+        """One atomic cycle over every input partition; returns the
+        number of input offsets consumed (0 = caught up — includes
+        filtered control markers and aborted records, so progress never
+        reads as zero while the input still advances)."""
+        if self.producer.in_txn:
+            # a previous cycle died with its abort unresolved (quorum
+            # outage): retry the abort now; InvalidTxnState means the
+            # outcome is already decided and is resolved just below
+            try:
+                self.producer.abort_txn()
+            except InvalidTxnState:
+                pass
+        st = self.cluster.txn_state(self.producer.producer_id)
+        if st in ("prepare_commit", "prepare_abort"):
+            # a predecessor's outcome is durably decided but its offsets
+            # may not be applied yet — finish it BEFORE reading committed
+            # positions, or this cycle would re-fetch (and re-produce)
+            # the very batch a prepared commit covers. resolve_txn runs
+            # at the transaction's own recorded epoch, so this also
+            # covers a RESTARTED processor whose producer epoch already
+            # moved past the transaction it inherited.
+            self.cluster.resolve_txn(self.producer.producer_id)
+        in_txn = False
+        done = 0
+        offsets: dict[TopicPartition, int] = {}
+        try:
+            for p in range(self.cluster.num_partitions(self.input_topic)):
+                tp = TopicPartition(self.input_topic, p)
+                pos = self._position(tp)
+                batch = self.consumer.fetch(
+                    self.input_topic, p, pos, self.max_records
+                )
+                if len(batch) == 0 and (batch.scanned or 0) == 0:
+                    continue
+                if not in_txn:
+                    self.producer.begin_txn()
+                    in_txn = True
+                if len(batch):
+                    outs = [self.fn(bytes(v)) for v in batch.values]
+                    self.producer.send_batch(
+                        self.output_topic, outs, partition=p
+                    )
+                # progress is measured in *consumed* input offsets, not
+                # delivered records: a window holding only an aborted
+                # transaction's records (filtered out) still advances,
+                # so run_to_end keeps draining past it
+                done += batch.next_offset - pos
+                offsets[tp] = batch.next_offset
+            if in_txn:
+                # one AddOffsetsToTxn for the whole cycle (one quorum
+                # round-trip), not one per partition
+                self.producer.send_offsets_to_txn(self.group_id, offsets)
+                self.producer.commit_txn()
+        except BaseException:
+            if in_txn:
+                try:
+                    self.producer.abort_txn()
+                except Exception:
+                    # a prepared commit cannot be aborted (its outcome is
+                    # durably decided: InvalidTxnState) and a quorum
+                    # outage resolves via coordinator recovery — either
+                    # way the re-run resumes from the recovered offsets
+                    pass
+            raise
+        return done
+
+    def run_to_end(self, max_cycles: int = 1000) -> int:
+        """Drain the input: cycles until one processes nothing."""
+        total = 0
+        for _ in range(max_cycles):
+            got = self.process_once()
+            if got == 0:
+                return total
+            total += got
+        return total
 
 
 # -------------------------------------------------------------- StreamDataset

@@ -37,8 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.cluster import ClusterProducer, InvalidTxnState
 from repro.core.consumer import ConsumerGroup, RebalanceError
-from repro.core.log import StreamBackend
+from repro.core.log import ProducerFenced, StreamBackend
 from repro.core.registry import Registry, TrainedResult
 from repro.data.formats import codec_from_control
 from repro.models.model import StreamModel
@@ -89,10 +90,29 @@ class InferenceReplica:
         result: TrainedResult,
         predict_fn: Callable[[Mapping[str, np.ndarray]], np.ndarray],
         output_topic: str,
+        transactional: bool = False,
     ):
         self.replica_id = replica_id
         self.log = log
-        self.consumer = group.join(replica_id)
+        # transactional publish (DESIGN.md §8): predictions and the input
+        # offsets they were computed from commit in ONE transaction, so a
+        # replica crash between "produce predictions" and "commit
+        # offsets" can neither re-serve a request batch (duplicate
+        # predictions downstream) nor drop one. Each replica owns a
+        # stable transactional id — re-creating it fences its zombie.
+        self._txn_producer = (
+            ClusterProducer(
+                log, transactional_id=f"{group.group_id}-{replica_id}"
+            )
+            if transactional and hasattr(log, "init_producer")
+            else None
+        )
+        self.consumer = group.join(
+            replica_id,
+            isolation_level=(
+                "read_committed" if self._txn_producer is not None else None
+            ),
+        )
         # getDeserializer(input_configuration): auto-configured from the
         # training control message (paper §IV-E)
         self.codec = codec_from_control(result.input_format, result.input_config)
@@ -143,9 +163,12 @@ class InferenceReplica:
     def publish(self, outs: list[list[bytes]] | None) -> int:
         """Produce computed predictions, then commit the read offsets —
         commit-after-produce keeps delivery at-least-once (a crash between
-        the two re-polls the batch)."""
+        the two re-polls the batch). A transactional replica upgrades the
+        pair to exactly-once: predictions and offsets commit atomically."""
         if outs is None:
             return 0
+        if self._txn_producer is not None:
+            return self._publish_txn(outs)
         done = 0
         if outs:
             self.log.ensure_topic(self.output_topic)
@@ -155,6 +178,91 @@ class InferenceReplica:
             self.stats.batches += 1
             done += len(out)
         self.consumer.commit()
+        return done
+
+    def _txn_aborted(self) -> bool:
+        """Whether the producer's current/last transaction is (or will
+        be) aborted — drives whether local positions must rewind. A
+        durably-decided COMMIT means the positions stand: rewinding them
+        would re-deliver (and re-publish) a batch the commit covers."""
+        st = self.log.txn_state(self._txn_producer.producer_id)
+        return st not in ("prepare_commit", "complete_commit")
+
+    def _recover_txn(self) -> bool:
+        """Resolve a transaction a previous tick left behind (commit or
+        abort raised mid-flight) before starting a new one. Returns True
+        when it ended in an abort — local positions were rewound, so the
+        CURRENT tick's computed outputs must be discarded too (their
+        source records re-deliver at the next poll; publishing them now
+        would commit outputs whose offsets were just reset)."""
+        prod = self._txn_producer
+        try:
+            prod.abort_txn()
+            self.consumer.reset_positions()
+            return True
+        except (InvalidTxnState, ProducerFenced):
+            pass  # outcome already decided (or we were fenced)
+        except Exception:
+            pass  # quorum window: outcome still open, try again next tick
+        if self._txn_aborted():
+            self.consumer.reset_positions()
+            return True
+        # commit durably decided: finish it (at the transaction's own
+        # recorded epoch) so the committed offsets reflect the previous
+        # tick's work before the next poll
+        try:
+            self.log.resolve_txn(prod.producer_id)
+        except Exception:
+            pass  # controller_tick recovery finishes it
+        return False
+
+    def _publish_txn(self, outs: list[list[bytes]]) -> int:
+        prod = self._txn_producer
+        if prod.in_txn:
+            if self._recover_txn():
+                return 0  # positions rewound: this tick's outs re-derive
+            if prod.in_txn:
+                return 0  # still unresolved (no quorum): skip this tick
+        if not outs:
+            return 0  # nothing polled: nothing to publish or commit
+        self.log.ensure_topic(self.output_topic)
+        prod.begin_txn()
+        try:
+            done = 0
+            for out in outs:
+                prod.send_batch(self.output_topic, out, partition=0)
+                done += len(out)
+            group = self.consumer.group
+            if (
+                self.replica_id not in group.members
+                or group.generation != self.consumer.generation
+            ):
+                # the group moved on while we computed (stall → eviction
+                # → rebalance): committing these offsets would rewind the
+                # new owner. Abort — the aborted predictions are
+                # invisible, and the new owner re-serves the batch.
+                # (Best-effort fence, same shape as commit_member's
+                # generation check; the generation-atomic variant is the
+                # KIP-447 follow-up in ROADMAP.)
+                prod.abort_txn()
+                self.consumer.reset_positions()
+                return 0
+            prod.send_offsets_to_txn(
+                group.group_id, self.consumer.positions()
+            )
+            prod.commit_txn()
+        except BaseException:
+            try:
+                prod.abort_txn()
+            except Exception:
+                pass  # decided or quorum-blocked: resolved below / next tick
+            if self._txn_aborted():
+                # the abort un-published this tick's work: rewind to the
+                # committed offsets so the next poll re-delivers it
+                self.consumer.reset_positions()
+            raise
+        self.stats.processed += done
+        self.stats.batches += len(outs)
         return done
 
     def kill(self) -> None:
@@ -188,6 +296,14 @@ class InferenceDeployment:
     Outputs are then published — and offsets committed — serially in
     replica order, so the output topic's record order is identical to a
     serial tick's.
+
+    ``transactional=True`` (clusters only) makes each replica publish its
+    predictions atomically with the input offsets they answer — a replica
+    crash mid-tick can neither duplicate nor drop a served request batch,
+    and downstream read_committed consumers of the prediction topic never
+    observe a half-published tick. Replicas then also read their input
+    read_committed, composing end-to-end exactly-once with a
+    transactional upstream (DESIGN.md §8).
     """
 
     def __init__(
@@ -202,6 +318,7 @@ class InferenceDeployment:
         replicas: int = 2,
         session_timeout_s: float = 5.0,
         parallel_poll: bool = True,
+        transactional: bool = False,
         clock=None,
     ):
         self.log = log
@@ -215,7 +332,8 @@ class InferenceDeployment:
         )
         self.replicas = [
             InferenceReplica(
-                f"replica-{i}", log, self.group, self.result, predict_fn, output_topic
+                f"replica-{i}", log, self.group, self.result, predict_fn,
+                output_topic, transactional=transactional,
             )
             for i in range(replicas)
         ]

@@ -221,6 +221,7 @@ class TrainingJob:
         ckpt_dir: str | None = None,
         ckpt_every: int = 50,
         seed: int = 0,
+        isolation_level: str | None = None,
     ):
         self.log = log
         self.registry = registry
@@ -232,6 +233,10 @@ class TrainingJob:
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.seed = seed
+        # "read_committed" pairs with ingest(transactional=True): the job
+        # only ever acts on a control message whose whole stream is
+        # durably committed — a crashed (aborted) ingest announces nothing
+        self.isolation_level = isolation_level
         self.manager = (
             ckpt_lib.CheckpointManager(ckpt_dir) if ckpt_dir is not None else None
         )
@@ -250,7 +255,10 @@ class TrainingJob:
         offset = 0
         for _ in range(max_polls):
             try:
-                msg, offset = poll_control(self.log, self.deployment_id, offset)
+                msg, offset = poll_control(
+                    self.log, self.deployment_id, offset,
+                    isolation=self.isolation_level,
+                )
             except ClusterError:
                 msg = None  # control topic unavailable mid-election
             if msg is not None:

@@ -108,6 +108,42 @@ def test_missing_idempotent_section_fails_schema():
     assert any("pairs" in f for f in failures)
 
 
+def test_txn_overhead_regression_fails_gate():
+    gate = load_gate()
+    results = load_results()
+    # doctor every recorded pair to cost 2x the 25% budget
+    for p in results["transactions"]["pairs"]:
+        p["txn_msgs_per_s"] = p["baseline_msgs_per_s"] / 1.50
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("transactional overhead" in f for f in failures)
+    # the stored overhead_frac is ignored: doctoring it alone changes nothing
+    results = load_results()
+    results["transactions"]["overhead_frac"] = 9.9
+    assert gate.check(results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE) == []
+    # a single outlier pair does not fail the median-based gate
+    results["transactions"]["pairs"][0]["txn_msgs_per_s"] /= 10.0
+    assert gate.check(results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE) == []
+
+
+def test_missing_transactions_section_fails_schema():
+    gate = load_gate()
+    results = load_results()
+    del results["transactions"]
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("transactions" in f for f in failures)
+    # a pairs list with no valid pair is a schema failure too
+    results = load_results()
+    results["transactions"]["pairs"] = [{"baseline_msgs_per_s": 0}]
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("transactions['pairs']" in f for f in failures)
+
+
 def test_unreadable_file_fails_cli(tmp_path):
     gate = load_gate()
     assert gate.main([str(tmp_path / "missing.json")]) == 1

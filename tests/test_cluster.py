@@ -610,7 +610,8 @@ def test_poll_control_terminates_when_visible_end_regresses():
         def end_offset(self, topic, partition):
             return 10  # captured before the regression
 
-        def read(self, topic, partition, offset, max_records=1024):
+        def read(self, topic, partition, offset, max_records=1024,
+                 isolation=None):
             # everything below the captured end is now above the HW
             return RecordBatch(
                 topic=topic, partition=partition, first_offset=offset,

@@ -248,11 +248,11 @@ class TestMidAppendLeaderDeath:
         died = []
 
         def dying_commit(ctl, values, keys, now_ms, first, last,
-                         producer=None):
+                         producer=None, **kw):
             if not died:
                 died.append(0)
                 c.brokers[0].alive = False  # dies append -> commit
-            orig(ctl, values, keys, now_ms, first, last, producer)
+            orig(ctl, values, keys, now_ms, first, last, producer, **kw)
 
         c._commit_batch = dying_commit
         prod = ClusterProducer(c, acks="all")
@@ -283,11 +283,11 @@ class TestMidAppendLeaderDeath:
         died = []
 
         def dying_commit(ctl, values, keys, now_ms, first, last,
-                         producer=None):
+                         producer=None, **kw):
             if not died:
                 died.append(0)
                 c.brokers[0].alive = False
-            orig(ctl, values, keys, now_ms, first, last, producer)
+            orig(ctl, values, keys, now_ms, first, last, producer, **kw)
 
         c._commit_batch = dying_commit
         prod = ClusterProducer(c, acks="all")

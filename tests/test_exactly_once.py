@@ -163,6 +163,63 @@ class TestLogProducerState:
             )
         assert 3 not in log.producer_state("t", 0)
 
+    def test_idle_pid_expires_on_retention_clock_identically_on_replicas(self):
+        """ROADMAP follow-up (PR-5): pid expiry is tied to the retention
+        *clock* — a producer id whose newest record timestamp aged past
+        ``retention_ms`` is forgotten even while its records still sit in
+        the never-evicted active segment (previously such a pid lived
+        forever). Keyed to record timestamps, which replicate verbatim,
+        so leader and follower expire the same pid at the same stream
+        time — never to local fetch time or table size."""
+        t = [0.0]
+        leader = StreamLog(clock=lambda: t[0])
+        follower = StreamLog(clock=lambda: t[0])
+        for log in (leader, follower):
+            log.create_topic("t", LogConfig(num_partitions=1, retention_ms=1000))
+        leader.producer_append("t", 0, [b"old"], None, None, pid=5, epoch=0, seq=0)
+
+        def sync():
+            end = follower.end_offset("t", 0)
+            vals, keys, ts, prods = leader.replica_fetch("t", 0, end, 1024)
+            if vals:
+                follower.replica_append("t", 0, vals, keys, ts, prods=prods)
+
+        sync()
+        t[0] = 0.5  # within retention: both replicas still dedup pid 5
+        leader.producer_append("t", 0, [b"k1"], None, None, pid=6, epoch=0, seq=0)
+        sync()
+        assert 5 in leader.producer_state("t", 0)
+        assert 5 in follower.producer_state("t", 0)
+        t[0] = 2.0  # pid 5 idle past retention_ms; pid 6 stays fresh
+        leader.producer_append("t", 0, [b"k2"], None, None, pid=6, epoch=0, seq=1)
+        sync()
+        for log in (leader, follower):
+            st = log.producer_state("t", 0)
+            assert 5 not in st, "idle pid must expire on the retention clock"
+            assert 6 in st
+        # the records themselves are still retained (active segment):
+        # only the dedup table aged out, so a post-expiry retry of pid 5
+        # re-appends as a fresh producer instead of erroring
+        assert leader.start_offset("t", 0) == 0
+        first, _last, dup = leader.producer_append(
+            "t", 0, [b"old"], None, None, pid=5, epoch=0, seq=0
+        )
+        assert not dup and first == 3
+
+    def test_open_transaction_pins_pid_against_clock_expiry(self):
+        t = [0.0]
+        log = StreamLog(clock=lambda: t[0])
+        log.create_topic("t", LogConfig(num_partitions=1, retention_ms=1000))
+        log.producer_append(
+            "t", 0, [b"txn"], None, None, pid=5, epoch=0, seq=0, txn=True
+        )
+        t[0] = 5.0
+        log.producer_append("t", 0, [b"k"], None, None, pid=6, epoch=0, seq=0)
+        # pid 5's transaction is still open: it must not be forgotten, or
+        # its marker could never resolve the dangling LSO pin
+        assert 5 in log.producer_state("t", 0)
+        assert log.last_stable_offset("t", 0) == 0
+
     def test_truncation_rebuilds_state_from_retained_log(self):
         log = self._log()
         log.producer_append("t", 0, [b"a0", b"a1", b"a2"], None, 0, 9, 0, 0)

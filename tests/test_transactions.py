@@ -1,0 +1,794 @@
+"""Transactional streaming: atomic read-process-write across partitions.
+
+Covers the full transaction stack (DESIGN.md §8):
+
+* log-level control records: LSO tracking, COMMIT/ABORT markers, aborted
+  ranges filtered at read_committed, transaction state derived from the
+  log (replication replay + rebuild after truncation agree);
+* the cluster transaction coordinator: begin/add-partitions/add-offsets/
+  prepare/complete as committed metadata commands, two-phase commit with
+  markers on every registered partition, consumer offsets applied
+  atomically with the commit, recovery of a prepared transaction whose
+  driver died (``controller_tick``), producer-epoch zombie fencing;
+* the **pinned read-process-write reproduction**: a non-transactional
+  consume→transform→produce loop crashed between "produce output" and
+  "commit offsets" duplicates a step on restart (and drops one with the
+  opposite order) — the same pipeline wrapped in a transaction, replayed
+  under coordinator kill, broker kill and ack loss, yields exactly-once
+  output verified by offset + payload audit;
+* chaos (slow): controller leader AND a partition leader killed between
+  ``PrepareCommit`` and the marker writes — every touched partition
+  converges to the same outcome and a read_committed consumer never
+  observes a partial transaction.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.cluster import (
+    BrokerCluster,
+    ClusterConsumer,
+    ClusterError,
+    ClusterProducer,
+    ControllerUnavailable,
+    InvalidTxnState,
+    NotLeaderError,
+    ReplicationService,
+)
+from repro.core.consumer import ConsumerGroup
+from repro.core.control import ControlMessage, poll_control, send_control
+from repro.core.log import LogConfig, ProducerFenced, StreamLog, TopicPartition
+from repro.data.pipeline import TransactionalProcessor
+
+
+def mkcluster(parts=1, **kw):
+    c = BrokerCluster(3, default_acks="all", **kw)
+    c.create_topic(
+        "t", LogConfig(num_partitions=parts, replication_factor=3)
+    )
+    return c
+
+
+def committed_values(cluster, topic, p, group="audit"):
+    """Payload audit: every record a read_committed consumer can observe."""
+    cons = ClusterConsumer(cluster, group_id=group,
+                           isolation_level="read_committed")
+    out, off = [], 0
+    while True:
+        batch = cons.fetch(topic, p, off, 1024)
+        if len(batch) == 0 and (batch.scanned or 0) == 0:
+            return out
+        out.extend(bytes(v) for v in batch.values)
+        off = batch.next_offset
+
+
+# ------------------------------------------------------------ log substrate
+class TestLogTransactions:
+    def _log(self):
+        log = StreamLog()
+        log.create_topic("t", LogConfig(num_partitions=1))
+        return log
+
+    def test_open_txn_pins_lso_and_commit_releases(self):
+        log = self._log()
+        log.producer_append("t", 0, [b"a", b"b"], None, 0, 7, 0, 0, txn=True)
+        assert log.end_offset("t", 0) == 2
+        assert log.last_stable_offset("t", 0) == 0
+        batch = log.read("t", 0, 0, 100, isolation="read_committed")
+        assert len(batch) == 0 and batch.scanned == 0
+        # raw readers (replication, range reads) still see the records
+        assert len(log.read("t", 0, 0, 100)) == 2
+        marker = log.append_control("t", 0, 7, 0, abort=False)
+        assert marker == 2
+        assert log.last_stable_offset("t", 0) == 3
+        batch = log.read("t", 0, 0, 100, isolation="read_committed")
+        assert [bytes(v) for v in batch.values] == [b"a", b"b"]
+        # the marker is scanned past, never delivered
+        assert batch.offsets == [0, 1] and batch.next_offset == 3
+
+    def test_abort_hides_records_forever(self):
+        log = self._log()
+        log.producer_append("t", 0, [b"dead"], None, 0, 7, 0, 0, txn=True)
+        log.append_control("t", 0, 7, 0, abort=True)
+        log.produce("t", b"alive", partition=0)
+        batch = log.read("t", 0, 0, 100, isolation="read_committed")
+        assert [bytes(v) for v in batch.values] == [b"alive"]
+        assert log.aborted_ranges("t", 0) == [(7, 0, 1)]
+
+    def test_marker_without_open_txn_is_noop(self):
+        log = self._log()
+        assert log.append_control("t", 0, 7, 0, abort=False) is None
+        log.producer_append("t", 0, [b"a"], None, 0, 7, 0, 0, txn=True)
+        assert log.append_control("t", 0, 7, 0, abort=False) == 1
+        # the re-drive after a coordinator recovery is a no-op
+        assert log.append_control("t", 0, 7, 0, abort=False) is None
+
+    def test_stale_epoch_marker_cannot_resolve_newer_txn(self):
+        log = self._log()
+        log.producer_append("t", 0, [b"new"], None, 0, 7, 3, 0, txn=True)
+        # a zombie coordinator's marker for epoch 1 must not release it
+        assert log.append_control("t", 0, 7, 1, abort=True) is None
+        assert log.last_stable_offset("t", 0) == 0
+
+    def test_interleaved_producers_block_at_earliest_open_txn(self):
+        log = self._log()
+        log.producer_append("t", 0, [b"x0"], None, 0, 1, 0, 0, txn=True)
+        log.producer_append("t", 0, [b"y0"], None, 0, 2, 0, 0, txn=True)
+        log.append_control("t", 0, 2, 0, abort=False)  # pid 2 commits first
+        # pid 1 still open at offset 0: nothing is stable yet
+        assert log.last_stable_offset("t", 0) == 0
+        log.append_control("t", 0, 1, 0, abort=False)
+        batch = log.read("t", 0, 0, 100, isolation="read_committed")
+        assert [bytes(v) for v in batch.values] == [b"x0", b"y0"]
+
+    def test_replication_replays_txn_state(self):
+        log = self._log()
+        log.producer_append("t", 0, [b"a"], None, 0, 1, 0, 0, txn=True)
+        log.append_control("t", 0, 1, 0, abort=True)
+        log.producer_append("t", 0, [b"b"], None, 0, 1, 0, 1, txn=True)
+        replica = StreamLog()
+        replica.create_topic("t", LogConfig(num_partitions=1))
+        vals, keys, ts, prods = log.replica_fetch("t", 0, 0, 100)
+        replica.replica_append("t", 0, vals, keys, ts, prods=prods)
+        assert replica.aborted_ranges("t", 0) == log.aborted_ranges("t", 0)
+        assert replica.open_txns("t", 0) == log.open_txns("t", 0) == {1: 2}
+        assert replica.last_stable_offset("t", 0) == 2
+
+    def test_markers_never_delivered_at_any_isolation(self):
+        """Review finding, pinned: control markers are filtered at EVERY
+        isolation level (Kafka consumers never see control records) — a
+        default-isolation reader handed raw marker bytes as a data record
+        would crash decoding them. read_uncommitted still sees open and
+        aborted transactional data."""
+        log = self._log()
+        log.producer_append("t", 0, [b"a"], None, 0, 7, 0, 0, txn=True)
+        log.append_control("t", 0, 7, 0, abort=False)
+        log.producer_append("t", 0, [b"dead"], None, 0, 7, 0, 1, txn=True)
+        log.append_control("t", 0, 7, 0, abort=True)
+        batch = log.read("t", 0, 0, 100)  # read_uncommitted
+        assert [bytes(v) for v in batch.values] == [b"a", b"dead"]
+        assert batch.offsets == [0, 2] and batch.next_offset == 4
+
+    def test_control_logger_default_isolation_survives_txn_markers(self):
+        """The crash the finding predicted, end to end: a transactional
+        control-message send leaves a COMMIT marker on the control topic;
+        a default-isolation ControlLogger/poll_control must skip it, not
+        hand it to ControlMessage.from_bytes."""
+        from repro.core.control import ControlLogger
+
+        c = mkcluster()
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        msg = ControlMessage(
+            deployment_id="d1", topic="t", input_format="RAW",
+            input_config={}, validation_rate=0.0, total_msg=0,
+        )
+        send_control(c, msg, producer=prod)
+        prod.commit_txn()
+        logger = ControlLogger(c)  # default (read_uncommitted) isolation
+        got = logger.poll()
+        assert [m.deployment_id for m in got] == ["d1"]
+        found, _ = poll_control(c, "nonexistent")  # scans past the marker
+        assert found is None
+
+    def test_read_range_counts_markers_as_raw_offsets(self):
+        """Review finding, pinned: a window containing a control marker
+        must not raise — the marker occupies its raw offset without
+        being delivered, and an in-bounds window stays readable."""
+        log = self._log()
+        log.producer_append("t", 0, [b"a", b"b"], None, 0, 7, 0, 0, txn=True)
+        log.append_control("t", 0, 7, 0, abort=False)  # marker at offset 2
+        log.produce("t", b"c", partition=0)
+        batch = log.read_range("t", 0, 0, 4)  # covers the marker
+        assert [bytes(v) for v in batch.values] == [b"a", b"b", b"c"]
+        with pytest.raises(Exception):
+            log.read_range("t", 0, 0, 5)  # genuinely past the end
+
+    def test_truncation_rebuild_reopens_txn(self):
+        log = self._log()
+        log.producer_append("t", 0, [b"a", b"b"], None, 0, 1, 0, 0, txn=True)
+        log.append_control("t", 0, 1, 0, abort=False)
+        # drop the marker (an unreplicated suffix on a deposed leader):
+        # the transaction must be open again, its records unstable
+        log.truncate_to("t", 0, 2)
+        assert log.open_txns("t", 0) == {1: 0}
+        assert log.last_stable_offset("t", 0) == 0
+
+
+# ------------------------------------------------------- cluster coordinator
+class TestClusterTransactions:
+    def test_commit_is_atomic_across_partitions(self):
+        c = mkcluster(parts=3)
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        for p in range(3):
+            prod.send_batch("t", [b"r%d" % p], partition=p)
+        for p in range(3):  # nothing visible before the commit
+            assert committed_values(c, "t", p, group=f"pre{p}") == []
+        prod.commit_txn()
+        assert c.txn_state(prod.producer_id) == "complete_commit"
+        for p in range(3):
+            assert committed_values(c, "t", p, group=f"post{p}") == [b"r%d" % p]
+
+    def test_abort_is_atomic_across_partitions(self):
+        c = mkcluster(parts=3)
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        for p in range(3):
+            prod.send_batch("t", [b"dead%d" % p], partition=p)
+        prod.abort_txn()
+        prod.begin_txn()
+        prod.send_batch("t", [b"alive"], partition=0)
+        prod.commit_txn()
+        assert committed_values(c, "t", 0) == [b"alive"]
+        for p in (1, 2):
+            assert committed_values(c, "t", p, group=f"g{p}") == []
+
+    def test_offsets_commit_atomically_with_records(self):
+        c = mkcluster()
+        tp = TopicPartition("in", 0)
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        prod.send_batch("t", [b"out"], partition=0)
+        prod.send_offsets_to_txn("g", {tp: 5})
+        assert c.committed_offset("g", tp) is None  # not before commit
+        prod.commit_txn()
+        assert c.committed_offset("g", tp) == 5
+        # an aborted transaction's offsets never apply
+        prod.begin_txn()
+        prod.send_offsets_to_txn("g", {tp: 99})
+        prod.abort_txn()
+        assert c.committed_offset("g", tp) == 5
+
+    def test_txn_state_machine_rejects_invalid_transitions(self):
+        c = mkcluster()
+        plain = ClusterProducer(c, idempotent=True)
+        with pytest.raises(InvalidTxnState):
+            plain.begin_txn()  # no transactional id
+        prod = ClusterProducer(c, transactional_id="tx")
+        with pytest.raises(InvalidTxnState):
+            prod.commit_txn()  # no txn in progress
+        prod.begin_txn()
+        with pytest.raises(InvalidTxnState):
+            prod.begin_txn()  # already in progress
+
+    def test_reinit_fences_zombie_and_aborts_its_txn(self):
+        c = mkcluster()
+        zombie = ClusterProducer(c, transactional_id="tx")
+        zombie.begin_txn()
+        zombie.send_batch("t", [b"zombie"], partition=0)
+        # the operator restarts the job: same transactional id, new epoch
+        fresh = ClusterProducer(c, transactional_id="tx")
+        fresh.begin_txn()  # aborts the predecessor's ongoing transaction
+        assert c.txn_state(zombie.producer_id) == "ongoing"  # the NEW txn
+        # the zombie's in-flight append and its commit are both fenced
+        with pytest.raises(ProducerFenced):
+            zombie.send_batch("t", [b"late"], partition=0)
+        with pytest.raises(ProducerFenced):
+            zombie.commit_txn()
+        fresh.send_batch("t", [b"fresh"], partition=0)
+        fresh.commit_txn()
+        assert committed_values(c, "t", 0) == [b"fresh"]
+
+    def test_prepared_commit_survives_driver_crash(self):
+        """The 2PC core: once PrepareCommit is in the metadata log the
+        transaction commits even though the driver died before writing a
+        single marker — controller_tick finishes it."""
+        c = mkcluster(parts=2)
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        prod.send_batch("t", [b"a"], partition=0)
+        prod.send_batch("t", [b"b"], partition=1)
+        prod.send_offsets_to_txn("g", {TopicPartition("in", 0): 7})
+        c.crash_after_prepare = True
+        with pytest.raises(ControllerUnavailable):
+            prod.commit_txn()
+        assert c.txn_state(prod.producer_id) == "prepare_commit"
+        # nothing visible, offsets unapplied: the crash left no partials
+        assert committed_values(c, "t", 0, group="w0") == []
+        assert c.committed_offset("g", TopicPartition("in", 0)) is None
+        c.controller_tick()  # any later heartbeat completes the 2PC
+        assert c.txn_state(prod.producer_id) == "complete_commit"
+        assert committed_values(c, "t", 0) == [b"a"]
+        assert committed_values(c, "t", 1, group="a1") == [b"b"]
+        assert c.committed_offset("g", TopicPartition("in", 0)) == 7
+        # the client may also re-drive the prepared commit itself
+        prod._in_txn = True
+        prod.commit_txn()  # idempotent: already complete
+
+    def test_prepared_abort_survives_driver_crash(self):
+        c = mkcluster(parts=2)
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        prod.send_batch("t", [b"a"], partition=0)
+        c.crash_after_prepare = True
+        with pytest.raises(ControllerUnavailable):
+            prod.abort_txn()
+        assert c.txn_state(prod.producer_id) == "prepare_abort"
+        c.controller_tick()
+        assert c.txn_state(prod.producer_id) == "complete_abort"
+        assert committed_values(c, "t", 0) == []
+
+    def test_prepared_commit_cannot_be_aborted(self):
+        c = mkcluster()
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        prod.send_batch("t", [b"a"], partition=0)
+        c.crash_after_prepare = True
+        with pytest.raises(ControllerUnavailable):
+            prod.commit_txn()
+        with pytest.raises(InvalidTxnState):
+            c.abort_txn(prod.producer_id, prod.producer_epoch)
+        c.controller_tick()
+        assert committed_values(c, "t", 0) == [b"a"]
+
+    def test_txn_through_leader_failover(self):
+        """A partition leader dies mid-transaction: the idempotent retry
+        machinery lands the batch on the new leader, the marker follows
+        it there, and the committed output is exactly-once."""
+        c = mkcluster()
+        prod = ClusterProducer(c, transactional_id="tx", retries=10)
+        prod.begin_txn()
+        prod.send_batch("t", [b"x"], partition=0)
+        c.kill_broker(c.leader_for("t", 0))
+        prod.send_batch("t", [b"y"], partition=0)
+        prod.commit_txn()
+        assert committed_values(c, "t", 0) == [b"x", b"y"]
+
+    def test_group_consumer_skips_markers_and_advances(self):
+        c = mkcluster()
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        prod.send_batch("t", [b"a"], partition=0)
+        prod.commit_txn()
+        group = ConsumerGroup(c, "g", ["t"])
+        member = group.join("m0", isolation_level="read_committed")
+        batches = member.poll()
+        assert [bytes(v) for b in batches for v in b.values] == [b"a"]
+        # position advanced past the marker: the next poll is empty, and
+        # doesn't loop on the marker span forever
+        assert member.poll() == []
+        member.commit()
+        assert group.committed(TopicPartition("t", 0)) == 2
+
+    def test_read_committed_control_topic(self):
+        c = mkcluster()
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        msg = ControlMessage(
+            deployment_id="d1", topic="t", input_format="RAW",
+            input_config={}, validation_rate=0.0, total_msg=0,
+        )
+        send_control(c, msg, producer=prod)
+        # the announce is invisible until the transaction commits
+        assert poll_control(c, "d1", isolation="read_committed")[0] is None
+        prod.commit_txn()
+        got, _ = poll_control(c, "d1", isolation="read_committed")
+        assert got is not None and got.deployment_id == "d1"
+
+
+    def test_marker_must_replicate_below_hw_before_txn_completes(self):
+        """Review finding, pinned: a marker that landed on the leader but
+        never replicated must NOT count as written — a commit re-drive
+        that sees the transaction closed on the leader has to force the
+        marker below the HW (an unreplicated marker dies with its leader,
+        silently re-opening the transaction on the survivors)."""
+        c = mkcluster()
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        prod.send_batch("t", [b"a"], partition=0)
+        pid, ep = prod.producer_id, prod.producer_epoch
+        leader = c.leader_for("t", 0)
+        # the marker lands on the leader's log alone (no replication, no
+        # HW advance) — exactly what a crashed first commit attempt that
+        # died between append and push would leave behind
+        off = c.brokers[leader].log.append_control("t", 0, pid, ep, abort=False)
+        assert off is not None
+        ctl = c._meta[("t", 0)]
+        assert ctl.hw <= off  # genuinely unreplicated
+        prod.commit_txn()  # the re-drive must make the close durable
+        assert ctl.hw > off
+        for bid in c.live_brokers():
+            assert c.brokers[bid].log.open_txns("t", 0) == {}
+        assert committed_values(c, "t", 0) == [b"a"]
+
+    def test_unreplicated_marker_lost_with_leader_is_redriven(self):
+        """Same window, harsher: the leader dies with the unreplicated
+        marker — the re-drive writes a fresh marker on the new leader."""
+        c = mkcluster()
+        prod = ClusterProducer(c, transactional_id="tx", retries=10)
+        prod.begin_txn()
+        prod.send_batch("t", [b"a"], partition=0)
+        pid, ep = prod.producer_id, prod.producer_epoch
+        leader = c.leader_for("t", 0)
+        c.brokers[leader].log.append_control("t", 0, pid, ep, abort=False)
+        c.kill_broker(leader)
+        prod.commit_txn()
+        assert committed_values(c, "t", 0) == [b"a"]
+        for bid in c.live_brokers():
+            assert c.brokers[bid].log.open_txns("t", 0) == {}
+
+    def test_abandoned_txn_times_out_fenced_and_aborted(self):
+        """Review finding, pinned: an ongoing transaction whose producer
+        died for good must not pin the LSO forever — the controller tick
+        fences the incarnation and aborts it after txn_timeout_s."""
+        t = [0.0]
+        c = BrokerCluster(
+            3, default_acks="all", txn_timeout_s=5.0, clock=lambda: t[0]
+        )
+        c.create_topic("t", LogConfig(num_partitions=1, replication_factor=3))
+        prod = ClusterProducer(c, transactional_id="tx")
+        prod.begin_txn()
+        prod.send_batch("t", [b"dead"], partition=0)
+        assert committed_values(c, "t", 0, group="g0") == []  # LSO pinned
+        t[0] = 3.0
+        c.controller_tick()
+        assert c.txn_state(prod.producer_id) == "ongoing"  # inside timeout
+        t[0] = 10.0
+        c.controller_tick()
+        assert c.txn_state(prod.producer_id) == "complete_abort"
+        # the LSO is released: later records flow to read_committed
+        c.produce_batch("t", [b"alive"], partition=0)
+        assert committed_values(c, "t", 0, group="g1") == [b"alive"]
+        # the timed-out incarnation is fenced: its late appends and its
+        # commit both die instead of re-opening the transaction
+        with pytest.raises(ProducerFenced):
+            prod.send_batch("t", [b"late"], partition=0)
+        prod._in_txn = True  # the client still believed it was in a txn
+        with pytest.raises(ProducerFenced):
+            prod.commit_txn()
+
+    def test_processor_does_not_reprocess_after_post_prepare_crash(self):
+        """Review finding, pinned: a cycle whose commit crashed after the
+        prepare decision must not be reprocessed by the next cycle — the
+        processor finishes the decided commit (advancing the committed
+        offsets) before trusting them."""
+        c = mkcluster()
+        vals = _fill_input(c, n=4)
+        proc = TransactionalProcessor(
+            c, "rpw", "in", "t", lambda v: v.upper(), max_records=4
+        )
+        c.crash_after_prepare = True
+        with pytest.raises(ClusterError):
+            proc.process_once()
+        # deliberately NO controller_tick: the processor itself must
+        # resolve the decided commit before reading positions
+        assert proc.run_to_end() == 0
+        assert committed_values(c, "t", 0) == [v.upper() for v in vals]
+        assert c.committed_offset(proc.group_id, TopicPartition("in", 0)) == 4
+
+    def test_restarted_processor_finishes_predecessors_prepared_commit(self):
+        """Review finding, pinned: recovery must run at the prepared
+        transaction's OWN epoch — a restarted processor re-initializes
+        its transactional id (epoch bump), and committing the inherited
+        transaction with the new epoch would be rejected as a mismatch,
+        wedging the stage forever."""
+        c = mkcluster()
+        vals = _fill_input(c, n=4)
+        proc = TransactionalProcessor(
+            c, "rpw", "in", "t", lambda v: v.upper(), max_records=4
+        )
+        c.crash_after_prepare = True
+        with pytest.raises(ClusterError):
+            proc.process_once()
+        # the operator restarts the stage: same transactional id, bumped
+        # producer epoch; NO controller tick in between
+        proc2 = TransactionalProcessor(
+            c, "rpw", "in", "t", lambda v: v.upper(), max_records=4
+        )
+        assert proc2.run_to_end() == 0  # predecessor's commit finished,
+        # not reprocessed — and the output is exactly-once
+        assert committed_values(c, "t", 0) == [v.upper() for v in vals]
+        assert c.committed_offset(proc.group_id, TopicPartition("in", 0)) == 4
+
+    def test_run_to_end_drains_past_aborted_windows(self):
+        """Review finding, pinned: a fetch window holding only an aborted
+        transaction's records delivers nothing but still consumes
+        offsets — run_to_end must keep draining to the committed records
+        beyond it instead of declaring the input caught up."""
+        c = mkcluster()
+        c.ensure_topic("in", LogConfig(num_partitions=1, replication_factor=3))
+        writer = ClusterProducer(c, transactional_id="w")
+        writer.begin_txn()
+        writer.send_batch("in", [b"dead%d" % i for i in range(6)], partition=0)
+        writer.abort_txn()
+        writer.begin_txn()
+        writer.send_batch("in", [b"live"], partition=0)
+        writer.commit_txn()
+        # window (4) smaller than the aborted span (6 + marker): the
+        # first cycles consume only filtered records
+        proc = TransactionalProcessor(
+            c, "rpw", "in", "t", lambda v: v.upper(), max_records=4
+        )
+        assert proc.run_to_end() > 0
+        assert committed_values(c, "t", 0) == [b"LIVE"]
+
+    def test_zombie_replica_cannot_commit_stale_offsets_via_txn(self):
+        """Review finding, pinned: a replica evicted between poll and
+        publish must not rewind the committed offsets through its
+        transaction — the publish aborts (its predictions invisible) and
+        the new owner re-serves the batch."""
+        import numpy as np
+        from repro.core.registry import Registry
+        from repro.serve import InferenceDeployment
+
+        c = mkcluster()
+        reg = Registry()
+        spec = reg.register_model("m")
+        cfg = reg.create_configuration([spec.model_id])
+        dep = reg.deploy(cfg.config_id, "train")
+        res = reg.upload_result(
+            dep.deployment_id, spec.model_id, {"loss": 0.0},
+            input_format="RAW",
+            input_config={"data_type": "float32", "data_reshape": [2],
+                          "label_type": "int32", "label_reshape": []},
+        )
+        c.create_topic("req", LogConfig(num_partitions=1, replication_factor=3))
+        infer = InferenceDeployment(
+            c, reg, res.result_id,
+            predict_fn=lambda d: d["data"].sum(axis=1),
+            input_topic="req", output_topic="pred", replicas=1,
+            transactional=True,
+        )
+        reqs = np.arange(8, dtype=np.float32).reshape(4, 2)
+        c.produce_batch(
+            "req",
+            [np.concatenate([r, np.zeros(1, np.float32)]).tobytes() for r in reqs],
+            partition=0,
+        )
+        r0 = infer.replicas[0]
+        outs = r0.poll_compute()  # polled the batch, positions advanced
+        # the group moves on while r0 is stalled (eviction + new owner)
+        infer.group.leave(r0.replica_id)
+        tp = TopicPartition("req", 0)
+        c.commit_offset(infer.group.group_id, tp, 4)  # new owner's commit
+        assert r0.publish(outs) == 0  # zombie publish must abort
+        assert c.committed_offset(infer.group.group_id, tp) == 4  # no rewind
+        # and the zombie's predictions never became visible
+        assert committed_values(c, "pred", 0) == []
+        infer.close()
+
+
+# -------------------------------------------- pinned read-process-write repro
+def _fill_input(c, n=8):
+    c.ensure_topic("in", LogConfig(num_partitions=1, replication_factor=3))
+    vals = [b"rec%02d" % i for i in range(n)]
+    c.produce_batch("in", vals, partition=0)
+    return vals
+
+
+def test_pinned_nontransactional_rpw_duplicates_on_crash():
+    """The bug, pinned: produce-output-then-commit-offsets crashed between
+    the two re-processes the batch on restart — duplicated output."""
+    c = mkcluster()
+    vals = _fill_input(c)
+    group = "rpw"
+    tp = TopicPartition("in", 0)
+
+    def cycle(crash_before_commit):
+        pos = c.committed_offset(group, tp) or 0
+        batch = c.read("in", 0, pos, 4)
+        if not len(batch):
+            return 0
+        c.produce_batch("t", [bytes(v).upper() for v in batch.values],
+                        partition=0)
+        if crash_before_commit:
+            raise RuntimeError("crashed between produce and offset commit")
+        c.commit_offset(group, tp, batch.next_offset)
+        return len(batch)
+
+    with pytest.raises(RuntimeError):
+        cycle(crash_before_commit=True)
+    while cycle(False):  # restart: reprocesses the uncommitted batch
+        pass
+    got = committed_values(c, "t", 0)
+    expected = [bytes(v).upper() for v in vals]
+    assert got != expected  # this assertion documents the failure mode
+    assert got == expected[:4] + expected  # the first batch is duplicated
+
+
+def test_pinned_nontransactional_rpw_drops_on_crash():
+    """The mirror bug: commit-offsets-then-produce drops the batch."""
+    c = mkcluster()
+    vals = _fill_input(c)
+    group = "rpw"
+    tp = TopicPartition("in", 0)
+
+    def cycle(crash_after_commit):
+        pos = c.committed_offset(group, tp) or 0
+        batch = c.read("in", 0, pos, 4)
+        if not len(batch):
+            return 0
+        c.commit_offset(group, tp, batch.next_offset)
+        if crash_after_commit:
+            raise RuntimeError("crashed between offset commit and produce")
+        c.produce_batch("t", [bytes(v).upper() for v in batch.values],
+                        partition=0)
+        return len(batch)
+
+    with pytest.raises(RuntimeError):
+        cycle(crash_after_commit=True)
+    while cycle(False):
+        pass
+    got = committed_values(c, "t", 0)
+    assert got == [bytes(v).upper() for v in vals[4:]]  # first batch LOST
+
+
+def test_pinned_transactional_rpw_exactly_once_under_faults(monkeypatch):
+    """The same read-process-write pipeline wrapped in a transaction,
+    replayed under (1) a coordinator crash between prepare and markers +
+    controller-leader kill, (2) a partition-leader kill, (3) ack loss —
+    yields exactly-once output, verified by offset + payload audit."""
+    c = mkcluster()
+    vals = _fill_input(c, n=12)
+    proc = TransactionalProcessor(
+        c, "rpw-txn", "in", "t", lambda v: v.upper(), max_records=4
+    )
+
+    # fault 1: coordinator dies after the prepare decision; the
+    # controller leader dies too — a successor finishes the 2PC
+    c.crash_after_prepare = True
+    with pytest.raises(ClusterError):
+        proc.process_once()
+    c.kill_controller()
+    deadline = time.monotonic() + 10
+    while c.txn_state(proc.producer.producer_id) != "complete_commit":
+        c.controller_tick()
+        assert time.monotonic() < deadline
+
+    # fault 2: a partition leader dies mid-cycle (idempotent retry lands
+    # the batch on the new leader, the marker follows)
+    orig_append = c.broker_append
+    state = {"fired": False}
+
+    def kill_once(broker_id, topic, partition, values, **kw):
+        first, last = orig_append(broker_id, topic, partition, values, **kw)
+        if not state["fired"] and topic == "t":
+            state["fired"] = True
+            c.kill_broker(broker_id)
+            raise NotLeaderError(topic, partition, None)
+        return first, last
+
+    monkeypatch.setattr(c, "broker_append", kill_once)
+    assert proc.process_once() == 4
+
+    # fault 3: an ack is lost after the append committed (the canonical
+    # duplicate window — dedup resolves the retry to original offsets)
+    state2 = {"fired": False}
+
+    def drop_ack_once(broker_id, topic, partition, values, **kw):
+        first, last = orig_append(broker_id, topic, partition, values, **kw)
+        if not state2["fired"] and topic == "t":
+            state2["fired"] = True
+            raise NotLeaderError(topic, partition, None)
+        return first, last
+
+    monkeypatch.setattr(c, "broker_append", drop_ack_once)
+    proc.run_to_end()
+
+    # offset audit: the input is fully consumed, exactly once
+    assert c.committed_offset(proc.group_id, TopicPartition("in", 0)) == 12
+    # payload audit: every record transformed exactly once, in order
+    assert committed_values(c, "t", 0) == [v.upper() for v in vals]
+
+
+# ------------------------------------------------------------- chaos (slow)
+@pytest.mark.slow
+@pytest.mark.parametrize("outcome", ["commit", "abort"])
+def test_chaos_controller_and_partition_leader_die_between_prepare_and_markers(
+    outcome,
+):
+    """The satellite chaos scenario: kill the controller leader AND a
+    partition leader in the window between the PrepareCommit/PrepareAbort
+    decision and the marker writes. Every touched partition must converge
+    to the decided outcome — never a mix — and a read_committed consumer
+    polling throughout never observes a partial transaction."""
+    c = mkcluster(parts=3, controller_lease_s=0.05)
+    prod = ClusterProducer(c, transactional_id="chaos", retries=10)
+    prod.begin_txn()
+    expected = {p: [b"p%d-%d" % (p, i) for i in range(4)] for p in range(3)}
+    for p, vals in expected.items():
+        prod.send_batch("t", vals, partition=p)
+    c.crash_after_prepare = True
+    end = prod.commit_txn if outcome == "commit" else prod.abort_txn
+    with pytest.raises(ClusterError):
+        end()
+    # the coordinator's driver is gone; now the controller leader AND a
+    # touched partition's leader die before any recovery ran
+    c.kill_controller()
+    victim = c.leader_for("t", 0)
+    c.kill_broker(victim, defer_election=True)
+
+    observed_partial = []
+    stop = threading.Event()
+
+    def audit():
+        cons = ClusterConsumer(
+            c, group_id="audit", retries=2,
+            isolation_level="read_committed", follower_reads=True,
+        )
+        while not stop.is_set():
+            for p in range(3):
+                try:
+                    batch = cons.fetch("t", p, 0, 100)
+                except ClusterError:
+                    continue
+                got = [bytes(v) for v in batch.values]
+                if got not in ([], expected[p]):
+                    observed_partial.append((p, got))
+            time.sleep(0.001)
+
+    auditor = threading.Thread(target=audit, daemon=True)
+    auditor.start()
+    pid = prod.producer_id
+    want = "complete_commit" if outcome == "commit" else "complete_abort"
+    try:
+        with ReplicationService(c, interval_s=0.002, workers=2):
+            deadline = time.monotonic() + 30
+            while c.txn_state(pid) != want:
+                assert time.monotonic() < deadline, (
+                    f"txn stuck in {c.txn_state(pid)}: "
+                    f"{c.controller.describe()}"
+                )
+                time.sleep(0.002)
+            # convergence: every partition reaches the decided outcome
+            final = {
+                p: committed_values(c, "t", p, group=f"fin{p}")
+                for p in range(3)
+            }
+    finally:
+        stop.set()
+        auditor.join(timeout=5)
+    if outcome == "commit":
+        assert final == expected
+    else:
+        assert final == {p: [] for p in range(3)}
+    # the read_committed auditor never saw a prefix of an unresolved txn
+    # on the abort path, and only ([] or the whole batch) on commit
+    assert observed_partial == []
+    # every live replica of every partition agrees (no mixed outcomes)
+    for p in range(3):
+        for bid in c.live_brokers():
+            assert c.brokers[bid].log.open_txns("t", p) == {}
+
+
+@pytest.mark.slow
+def test_chaos_transactional_processor_exactly_once_with_daemon():
+    """Read-process-write under a live replication daemon with repeated
+    broker kills/restarts: the committed output equals the transformed
+    input exactly once, in per-partition order."""
+    c = mkcluster(parts=2, controller_lease_s=0.05)
+    c.ensure_topic("in", LogConfig(num_partitions=2, replication_factor=3))
+    expected = {p: [b"in%d-%02d" % (p, i) for i in range(40)] for p in range(2)}
+    for p, vals in expected.items():
+        c.produce_batch("in", vals, partition=p)
+    proc = TransactionalProcessor(
+        c, "chaos-rpw", "in", "out", lambda v: v.upper(), max_records=8
+    )
+    with ReplicationService(c, interval_s=0.002, workers=2):
+        killed_at = 0
+        processed = 0
+        deadline = time.monotonic() + 60
+        while processed < 80:
+            assert time.monotonic() < deadline
+            try:
+                processed += proc.process_once()
+            except (ClusterError, ProducerFenced):
+                time.sleep(0.01)  # mid-election window: retry the cycle
+                continue
+            if processed >= killed_at + 24 and processed < 80:
+                killed_at = processed
+                victim = c.leader_for("out", processed % 2)
+                if victim is not None and len(c.live_brokers()) == 3:
+                    c.kill_broker(victim)
+                    time.sleep(0.01)
+                    c.restart_broker(victim)
+        for p in range(2):
+            got = committed_values(c, "out", p, group=f"audit{p}")
+            assert got == [v.upper() for v in expected[p]]
+        for p in range(2):
+            assert c.committed_offset(
+                proc.group_id, TopicPartition("in", p)
+            ) == 40
