@@ -23,6 +23,9 @@ def main():
     # a replicated cluster (rf=3, acks=all) — the same StreamBackend
     # surface as a bare StreamLog, with broker failover underneath
     log, registry = core.BrokerCluster(3), core.Registry()
+    # background reporter: snapshots of the whole registry flow onto the
+    # replicated __metrics topic while the pipeline runs (DESIGN §9)
+    reporter = log.start_metrics_reporter(interval_s=0.25)
 
     # A) define the ML model (paper Listing 1/2: just the model definition)
     spec = registry.register_model("copd-mlp", description="HCOPD classifier")
@@ -73,6 +76,22 @@ def main():
     acc = (preds.argmax(1) == dataset["label"][:16]).mean()
     print(f"served {served} predictions via {len(infer.replicas)} replicas; "
           f"accuracy {acc:.2f}")
+
+    # G) end-of-run observability summary — every number comes from the
+    # cluster's own metrics registry (DESIGN §9), not ad-hoc bookkeeping
+    log.stop_metrics_reporter()
+    ingest_rate = log.metrics.gauge_value("ingest_records_per_s", topic="copd")
+    lag = sum(sum(r.consumer.lag().values())
+              for r in infer.replicas if r.alive)
+    snap = log.metrics_snapshot()
+    elections = sum(v for k, v in snap["counters"].items()
+                    if k.startswith("partition_elections_total"))
+    published = log.end_offset(core.METRICS_TOPIC, 0)
+    print(f"metrics: ingest {ingest_rate:,.0f} records/s; inference "
+          f"consumer lag {lag}; partition elections {elections}; "
+          f"{published} snapshots on {core.METRICS_TOPIC} "
+          f"({reporter.published} published by the reporter)")
+    assert lag == 0, f"inference group should have drained to lag 0, got {lag}"
 
 
 if __name__ == "__main__":

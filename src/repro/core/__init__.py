@@ -1,5 +1,6 @@
 """Core: the paper's contribution — stream-driven ML pipeline management."""
 from repro.core.cluster import (
+    METRICS_TOPIC,
     Broker,
     BrokerCluster,
     BrokerUnavailable,
@@ -7,6 +8,7 @@ from repro.core.cluster import (
     ClusterError,
     ClusterProducer,
     InvalidTxnState,
+    MetricsReporter,
     NotEnoughReplicasError,
     NotLeaderError,
     PartitionMeta,
@@ -33,6 +35,14 @@ from repro.core.consumer import (
     GroupConsumer,
     RebalanceError,
     range_assign,
+)
+from repro.core.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Span,
+    series_key,
 )
 from repro.core.log import (
     METADATA_TOPIC,

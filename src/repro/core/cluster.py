@@ -98,6 +98,7 @@ leaf: ``metadata lock → partition lock → controller lock``.
 from __future__ import annotations
 
 import hashlib
+import json
 import os
 import threading
 import time
@@ -120,6 +121,7 @@ from repro.core.log import (
     TopicPartition,
     default_partition,
 )
+from repro.core.metrics import METRICS_TOPIC, MetricsRegistry
 
 __all__ = [
     "Broker",
@@ -130,6 +132,8 @@ __all__ = [
     "ClusterProducer",
     "ControllerUnavailable",
     "InvalidTxnState",
+    "METRICS_TOPIC",
+    "MetricsReporter",
     "NotEnoughReplicasError",
     "NotLeaderError",
     "PartitionMeta",
@@ -270,6 +274,9 @@ class _PartitionCtl:
         "version",
         "gen",
         "lock",
+        "m_produce",
+        "m_repl",
+        "m_fetch",
     )
 
     def __init__(
@@ -302,6 +309,12 @@ class _PartitionCtl:
         # last epoch each replica fully caught up in
         self.synced_epoch: dict[int, int] = {b: 0 for b in replicas}
         self.lock = lock if lock is not None else threading.RLock()
+        # lazily bound per-partition metric handles (produce / replication
+        # / fetch record counters): the hot path must not pay a series-key
+        # format + registry lookup per batch (DESIGN §9 overhead budget)
+        self.m_produce = None
+        self.m_repl = None
+        self.m_fetch = None
 
     def meta(self) -> PartitionMeta:
         with self.lock:
@@ -425,6 +438,90 @@ class ReplicationService:
         self.stop()
 
 
+# -------------------------------------------------------- metrics reporter
+class MetricsReporter:
+    """Background observability daemon: periodically snapshots the
+    cluster's metrics registry and publishes it to the replicated
+    internal ``__metrics`` topic (DESIGN.md §9).
+
+    The observability plane is itself a data stream: any plain consumer
+    (or a future Web UI) can subscribe to ``__metrics`` and decode each
+    record with :meth:`MetricsRegistry.decode_snapshot`. Publishing goes
+    through the normal routed produce path, so snapshots keep flowing
+    across broker leader kills — exactly when they are needed most; a
+    publish that cannot complete right now (no quorum, partition offline
+    mid-election) is recorded on ``errors`` (bounded) and retried on the
+    next interval, never crashing the daemon.
+
+    Lifecycle mirrors :class:`ReplicationService`: idempotent
+    ``start``/``stop``, context manager, weak cluster reference (the
+    daemon exits on its own once every other reference to the cluster is
+    dropped), and a fresh stop event per start generation so a worker
+    that outlived a ``stop()`` join timeout can never be resurrected.
+    """
+
+    def __init__(
+        self,
+        cluster: "BrokerCluster",
+        *,
+        interval_s: float = 0.05,
+    ):
+        self._cluster_ref = weakref.ref(cluster)
+        self.interval_s = interval_s
+        self.errors: list[BaseException] = []
+        self.published = 0  # snapshots that reached the __metrics topic
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    @property
+    def cluster(self) -> "BrokerCluster | None":
+        return self._cluster_ref()
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and not self._stop.is_set()
+
+    def start(self) -> "MetricsReporter":
+        if self._thread is not None:
+            return self
+        self._stop = stop = threading.Event()
+        t = threading.Thread(
+            target=self._run, args=(stop,), name="metrics-reporter",
+            daemon=True,
+        )
+        t.start()
+        self._thread = t
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+        self._thread = None
+
+    def _run(self, stop: threading.Event) -> None:
+        while not stop.is_set():
+            cluster = self._cluster_ref()
+            if cluster is None:
+                return  # cluster dropped without stop()
+            try:
+                cluster.publish_metrics()
+                self.published += 1
+            except (ClusterError, ControllerUnavailable):
+                pass  # quorum/election window — next interval retries
+            except BaseException as e:  # pragma: no cover - diagnostics
+                if len(self.errors) < 16:
+                    self.errors.append(e)
+            del cluster  # don't pin the cluster across the sleep
+            stop.wait(self.interval_s)
+
+    def __enter__(self) -> "MetricsReporter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
 # ------------------------------------------------------------------ cluster
 class BrokerCluster:
     """N replicated brokers behind a single :class:`StreamBackend` surface.
@@ -456,14 +553,35 @@ class BrokerCluster:
         controller_nodes: int = 3,
         controller_lease_s: float = 1.0,
         txn_timeout_s: float = 60.0,
+        metrics_enabled: bool = True,
         clock: Callable[[], float] | None = None,
     ):
         if num_brokers < 1:
             raise ValueError("need at least one broker")
         self._clock = clock or time.time
+        # cluster-wide observability registry (DESIGN.md §9), shared with
+        # every broker's log; metrics_enabled=False turns every probe
+        # into a near-free no-op (the benchmark's control arm)
+        self.metrics = MetricsRegistry(enabled=metrics_enabled)
+        # bound hot-path handles (no registry lookup per produce/fetch);
+        # harmless null singletons when the registry is disabled. The
+        # latency histograms sample 1-in-8 after warm-up (see
+        # metrics.Histogram) to stay inside the ≤5% overhead budget.
+        self._h_produce_latency = self.metrics.histogram(
+            "produce_latency_seconds", sample=8
+        )
+        self._h_commit_latency = self.metrics.histogram(
+            "commit_latency_seconds", sample=8
+        )
+        self._h_fetch_latency = self.metrics.histogram(
+            "fetch_latency_seconds", sample=8
+        )
+        self._c_produce_dups = self.metrics.counter("produce_duplicates_total")
         self.brokers: dict[int, Broker] = {
             i: Broker(i, StreamLog(clock=self._clock)) for i in range(num_brokers)
         }
+        for br in self.brokers.values():
+            br.log.metrics = self.metrics
         self.default_replication_factor = (
             num_brokers if default_replication_factor is None
             else default_replication_factor
@@ -516,11 +634,58 @@ class BrokerCluster:
         self._meta_lock = threading.RLock()
         self._data_lock = threading.RLock() if legacy_global_lock else None
         self._services: list[ReplicationService] = []
+        self._reporters: list[MetricsReporter] = []
         # the replicated control plane: every topology mutation below goes
         # through a command committed to this quorum's metadata log
         self.controller = QuorumController(
             controller_nodes, lease_s=controller_lease_s, clock=self._clock
         )
+        # open 2PC trace spans (pid -> Span), begun at BeginTxn and ended
+        # when CompleteTxn commits; coordinator-local bookkeeping only
+        self._txn_spans: dict[int, object] = {}
+        # (topic, partition) -> monotonic time its leader was observed
+        # down, consumed by the elect_leader apply to measure election
+        # duration (detection -> committed new leader)
+        self._election_pending: dict[tuple[str, int], float] = {}
+        self._register_gauges()
+
+    def _register_gauges(self) -> None:
+        """Register lazy gauge callbacks: expensive-to-compute state is
+        evaluated only at snapshot/render time, never on the hot path.
+        Closures hold the cluster weakly so the registry (owned by the
+        cluster) never pins it into a reference cycle."""
+        ref = weakref.ref(self)
+
+        def controller_stat(name: str) -> Callable[[], float]:
+            def fn() -> float:
+                c = ref()
+                return 0.0 if c is None else float(
+                    getattr(c.controller, name)
+                )
+            return fn
+
+        m = self.metrics
+        m.gauge_fn("controller_elections", controller_stat("elections"))
+        m.gauge_fn("controller_term_changes", controller_stat("term_changes"))
+        m.gauge_fn("controller_quorum_rpcs", controller_stat("quorum_rpcs"))
+
+        def apply_lag() -> float:
+            c = ref()
+            return 0.0 if c is None else float(c.controller.apply_lag())
+
+        m.gauge_fn("controller_apply_lag", apply_lag)
+
+        def log_stat(broker_id: int, key: str) -> Callable[[], float]:
+            def fn() -> float:
+                c = ref()
+                if c is None:
+                    return 0.0
+                return float(c.brokers[broker_id].log.stats()[key])
+            return fn
+
+        for bid in self.brokers:
+            for key in ("segments", "producer_state_entries", "open_txns"):
+                m.gauge_fn(f"log_{key}", log_stat(bid, key), broker=bid)
 
     # ------------------------------------------------------------------ admin
     def create_topic(self, name: str, cfg: LogConfig | None = None) -> None:
@@ -720,6 +885,10 @@ class BrokerCluster:
             self._submit_txn(MetadataCommand(
                 kind="begin_txn", pid=pid, producer_epoch=epoch, txn_seq=seq
             ))
+            if self.metrics.enabled:
+                # 2PC trace span: BeginTxn -> prepare -> markers ->
+                # complete, with per-phase timings (DESIGN.md §9)
+                self._txn_spans[pid] = self.metrics.span("txn_2pc", pid=pid)
 
     def _require_ongoing(self, pid: int, epoch: int) -> _TxnState:
         st = self._txns.get(pid)
@@ -812,6 +981,9 @@ class BrokerCluster:
                     kind=prepared, pid=pid, producer_epoch=epoch,
                     txn_seq=st.seq + 1,
                 ))
+                sp = self._txn_spans.get(pid)
+                if sp is not None:
+                    sp.phase("prepare")
             elif st.state != prepared:
                 # the opposite decision (or completion) is already durable
                 raise InvalidTxnState(
@@ -854,6 +1026,9 @@ class BrokerCluster:
                 offsets = {g: dict(o) for g, o in st.offsets.items()}
             for topic, p in parts:
                 self._write_marker(topic, p, pid, epoch, commit=commit)
+            sp = self._txn_spans.get(pid)
+            if sp is not None:
+                sp.phase("markers")
             with self._meta_lock:
                 st = self._txns.get(pid)
                 if st is None or not st.state.startswith("prepare"):
@@ -869,6 +1044,13 @@ class BrokerCluster:
                     kind="complete_txn", pid=pid, producer_epoch=epoch,
                     committed=commit, txn_seq=st.seq + 1,
                 ))
+                sp = self._txn_spans.pop(pid, None)
+                if sp is not None:
+                    sp.phase("complete")
+                    sp.end("commit" if commit else "abort")
+                self.metrics.counter(
+                    "txn_commit_total" if commit else "txn_abort_total"
+                ).inc()
 
     def _write_marker(
         self, topic: str, partition: int, pid: int, epoch: int, *, commit: bool
@@ -987,6 +1169,7 @@ class BrokerCluster:
                 # abort outside the metadata lock (phase two takes
                 # partition locks; see _finish_txn)
                 self._end_txn(pid, ep, commit=False, internal=True)
+                self.metrics.counter("txn_timeout_total").inc()
             except (ClusterError, ControllerUnavailable, InvalidTxnState):
                 continue  # next tick retries (fence bump is idempotent)
 
@@ -1113,6 +1296,7 @@ class BrokerCluster:
             leader = self._leader_broker(ctl)
             leo = leader.log.end_offset(ctl.topic, ctl.partition)
             new_isr = set(ctl.isr)
+            copied = 0
             for bid in ctl.replicas:
                 if bid == ctl.leader:
                     continue
@@ -1159,6 +1343,7 @@ class BrokerCluster:
                         prods=prods,
                     )
                     local_end += len(values)
+                    copied += len(values)
                 if local_end == leo:
                     new_isr.add(bid)
                     ctl.synced_epoch[bid] = ctl.epoch
@@ -1166,6 +1351,14 @@ class BrokerCluster:
                     new_isr.discard(bid)
             new_isr.add(ctl.leader)
             ctl.synced_epoch[ctl.leader] = ctl.epoch
+            if copied and self.metrics.enabled:
+                mr = ctl.m_repl
+                if mr is None:
+                    mr = ctl.m_repl = self.metrics.counter(
+                        "replication_records_total", topic=ctl.topic,
+                        partition=ctl.partition,
+                    )
+                mr.inc(copied)
             self._propose_isr(ctl, new_isr)
             # the HW derives from the *committed* ISR: if the quorum was
             # unavailable and a dead member is still in the ISR, its stale
@@ -1196,6 +1389,10 @@ class BrokerCluster:
                 )
                 self.controller.submit(cmd)
                 self._apply_metadata(cmd)
+                self.metrics.counter(
+                    "isr_shrink_total", topic=ctl.topic,
+                    partition=ctl.partition,
+                ).inc()
             if added:
                 cmd = MetadataCommand(
                     kind="expand_isr", topic=ctl.topic, partition=ctl.partition,
@@ -1204,6 +1401,10 @@ class BrokerCluster:
                 )
                 self.controller.submit(cmd)
                 self._apply_metadata(cmd)
+                self.metrics.counter(
+                    "isr_expand_total", topic=ctl.topic,
+                    partition=ctl.partition,
+                ).inc()
         except ControllerUnavailable:
             pass
 
@@ -1243,6 +1444,7 @@ class BrokerCluster:
             self._replicate_partition(ctl)
             return
         need_full = False
+        pushed = 0
         for bid in sorted(ctl.isr):
             if bid == ctl.leader:
                 continue
@@ -1263,6 +1465,15 @@ class BrokerCluster:
                 ctl.topic, ctl.partition, values, keys, now_ms,
                 producer=producer, txn=txn,
             )
+            pushed += 1
+        if pushed and self.metrics.enabled:
+            mr = ctl.m_repl
+            if mr is None:
+                mr = ctl.m_repl = self.metrics.counter(
+                    "replication_records_total", topic=ctl.topic,
+                    partition=ctl.partition,
+                )
+            mr.inc(pushed * len(values))
         if need_full:
             self._replicate_partition(ctl)
         else:
@@ -1305,6 +1516,49 @@ class BrokerCluster:
     @property
     def _daemon_active(self) -> bool:
         return any(s.running for s in self._services)
+
+    # ---------------------------------------------------------- observability
+    def metrics_text(self) -> str:
+        """Prometheus-style text dump of every metric series (zero
+        dependencies) — for humans and CI artifacts."""
+        return self.metrics.render_text()
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-safe point-in-time dump of the cluster registry."""
+        return self.metrics.snapshot()
+
+    def publish_metrics(self) -> tuple[int, int]:
+        """Snapshot the registry and produce it to the replicated
+        internal ``__metrics`` topic (creating it on first use,
+        ``rf=min(3, brokers)``). Returns ``(partition, offset)``. Goes
+        through the routed produce path, so a snapshot lands even while
+        a broker leader election is being completed lazily. Raises
+        ``ClusterError``/``ControllerUnavailable`` when the cluster
+        cannot accept it right now — callers (the reporter daemon)
+        retry on the next interval."""
+        payload = json.dumps(
+            self.metrics.snapshot(), sort_keys=True
+        ).encode("utf-8")
+        if METRICS_TOPIC not in self._configs:
+            self.ensure_topic(METRICS_TOPIC, LogConfig(
+                num_partitions=1,
+                replication_factor=min(3, len(self.brokers)),
+            ))
+        return self.produce(METRICS_TOPIC, payload)
+
+    def start_metrics_reporter(
+        self, *, interval_s: float = 0.05
+    ) -> MetricsReporter:
+        """Start (and register) a background metrics reporter daemon."""
+        rep = MetricsReporter(self, interval_s=interval_s)
+        self._reporters.append(rep)
+        return rep.start()
+
+    def stop_metrics_reporter(self) -> None:
+        """Stop every registered metrics reporter."""
+        for rep in self._reporters:
+            rep.stop()
+        self._reporters = []
 
     # ----------------------------------------------------------- elections
     def _election_command(self, ctl: _PartitionCtl) -> MetadataCommand:
@@ -1367,6 +1621,7 @@ class BrokerCluster:
         """
         with self._meta_lock:
             self.brokers[broker_id].alive = False
+            self._note_leader_down(broker_id)
             if not defer_election:
                 self._register_broker(broker_id, up=False)
 
@@ -1374,6 +1629,7 @@ class BrokerCluster:
         """Network-partition a broker away from the cluster."""
         with self._meta_lock:
             self.brokers[broker_id].reachable = False
+            self._note_leader_down(broker_id)
             if not defer_election:
                 self._register_broker(broker_id, up=False)
 
@@ -1392,6 +1648,19 @@ class BrokerCluster:
             self.brokers[broker_id].reachable = True
             if not self._register_broker(broker_id, up=True):
                 self._rejoin(broker_id)
+
+    def _note_leader_down(self, broker_id: int) -> None:
+        """Stamp election-duration start for every partition the dying
+        broker leads (detection time; the matching elect_leader apply
+        records the duration). Caller holds the metadata lock; ctl.leader
+        is read without the ctl lock — this is observability bookkeeping,
+        a torn read only mis-times one measurement."""
+        if not self.metrics.enabled:
+            return
+        now = time.monotonic()
+        for (topic, p), ctl in self._meta.items():
+            if ctl.leader == broker_id:
+                self._election_pending.setdefault((topic, p), now)
 
     def _register_broker(self, broker_id: int, *, up: bool) -> bool:
         """Commit a broker liveness transition to the metadata log and
@@ -1510,6 +1779,19 @@ class BrokerCluster:
             if kind == "elect_leader":
                 ctl.epoch = cmd.epoch
                 ctl.leader = cmd.leader
+                if self.metrics.enabled:
+                    # inside the pversion guard, so controller-failover
+                    # replay of the same committed election can never
+                    # double-count (exactly once per election)
+                    self.metrics.counter(
+                        "partition_elections_total", topic=ctl.topic,
+                        partition=ctl.partition,
+                    ).inc()
+                    since = self._election_pending.pop(key, None)
+                    if since is not None:
+                        self.metrics.histogram(
+                            "election_duration_seconds"
+                        ).record(time.monotonic() - since)
                 if cmd.leader is None:
                     return  # offline fence: epoch bumped, ISR retained
                 ctl.isr = set(cmd.isr)
@@ -1651,6 +1933,8 @@ class BrokerCluster:
         if acks not in (0, 1, "all", -1):
             raise ValueError(f"bad acks {acks!r}; want 0, 1, or 'all'")
         ctl = self._ctl(topic, partition)
+        m = self.metrics
+        t0 = time.perf_counter() if m.enabled else 0.0
         with ctl.lock:
             br = self._check_leader(broker_id, ctl)
             if epoch is not None and epoch != ctl.epoch:
@@ -1695,21 +1979,39 @@ class BrokerCluster:
                         self._replicate_partition(ctl)
                         if ctl.hw <= last:
                             raise NotLeaderError(topic, partition, ctl.leader)
+                    if m.enabled:
+                        self._c_produce_dups.inc()
+                        self._h_produce_latency.record(
+                            time.perf_counter() - t0
+                        )
                     return first, last
             else:
                 first, last = br.log.replica_append(
                     topic, partition, values, keys, now_ms
                 )
             if acks in ("all", -1):
+                tc = time.perf_counter() if m.enabled else 0.0
                 self._commit_batch(
                     ctl, values, keys, now_ms, first, last, producer,
                     txn=transactional,
                 )
+                if m.enabled:
+                    # acks=all commit latency: ISR push + HW advance
+                    self._h_commit_latency.record(time.perf_counter() - tc)
                 if ctl.hw <= last:
                     # leadership moved under us mid-append and the batch
                     # did not commit: it must not be acknowledged (a new
                     # leader without it caps the HW at `first` or below)
                     raise NotLeaderError(topic, partition, ctl.leader)
+            if m.enabled:
+                mp = ctl.m_produce
+                if mp is None:
+                    mp = ctl.m_produce = m.counter(
+                        "produce_records_total", topic=topic,
+                        partition=partition,
+                    )
+                mp.inc(len(values))
+                self._h_produce_latency.record(time.perf_counter() - t0)
             return first, last
 
     def broker_fetch(
@@ -1739,6 +2041,8 @@ class BrokerCluster:
         log, so follower reads stay exact at read_committed too.
         """
         ctl = self._ctl(topic, partition)
+        m = self.metrics
+        t0 = time.perf_counter() if m.enabled else 0.0
         with ctl.lock:
             br = self.brokers.get(broker_id)
             if br is None or not br.up:
@@ -1746,10 +2050,18 @@ class BrokerCluster:
             if ctl.leader == broker_id:
                 if not self._daemon_active or ctl.hw <= offset:
                     self._replicate_partition(ctl)  # opportunistic HW advance
-                return self._read_visible(br, ctl, offset, max_records, isolation)
-            if not allow_follower or broker_id not in ctl.isr:
+                batch = self._read_visible(
+                    br, ctl, offset, max_records, isolation
+                )
+            elif not allow_follower or broker_id not in ctl.isr:
                 raise NotLeaderError(topic, partition, ctl.leader)
-            return self._read_visible(br, ctl, offset, max_records, isolation)
+            else:
+                batch = self._read_visible(
+                    br, ctl, offset, max_records, isolation
+                )
+            if m.enabled:
+                self._h_fetch_latency.record(time.perf_counter() - t0)
+            return batch
 
     def _serving_follower(self, ctl: _PartitionCtl) -> Broker | None:
         """Lowest-id live in-sync non-leader replica, or None — the single
@@ -1790,7 +2102,16 @@ class BrokerCluster:
                 values=[],
                 timestamps=[],
             )
-        return br.log.read(ctl.topic, ctl.partition, offset, n, isolation)
+        batch = br.log.read(ctl.topic, ctl.partition, offset, n, isolation)
+        if self.metrics.enabled and len(batch):
+            mf = ctl.m_fetch
+            if mf is None:
+                mf = ctl.m_fetch = self.metrics.counter(
+                    "fetch_records_total", topic=ctl.topic,
+                    partition=ctl.partition,
+                )
+            mf.inc(len(batch))
+        return batch
 
     # ------------------------------------- StreamBackend facade (StreamLog)
     # Everything below makes the cluster a drop-in for StreamLog: internal
@@ -2397,3 +2718,34 @@ class ClusterConsumer:
         if self.group_id is None:
             raise ValueError("consumer has no group_id")
         return self.cluster.committed_offset(self.group_id, tp)
+
+    def lag(self, topic: str, partition: int, *,
+            offset: int | None = None) -> int:
+        """LSO-aware consumer lag for one partition.
+
+        Lag is measured against min(HW, LSO) for ``read_committed``
+        consumers — records behind an open transaction are not
+        consumable, so they must not count as lag — and against the
+        high watermark otherwise. ``offset`` overrides the consumer
+        position; by default the group's committed offset is used
+        (0 when nothing has been committed). Never negative.
+        """
+        if offset is None:
+            if self.group_id is not None:
+                offset = self.cluster.committed_offset(
+                    self.group_id, TopicPartition(topic, partition)
+                ) or 0
+            else:
+                offset = 0
+        if self.isolation_level == "read_committed":
+            bound = self.cluster.last_stable_offset(topic, partition)
+        else:
+            bound = self.cluster.end_offset(topic, partition)
+        lag = max(0, bound - offset)
+        m = self.cluster.metrics
+        if m.enabled and self.group_id is not None:
+            m.gauge(
+                "consumer_lag", group=self.group_id,
+                topic=topic, partition=str(partition),
+            ).set(lag)
+        return lag

@@ -111,6 +111,7 @@ class ConsumerGroup:
         self._members: dict[str, _Member] = {}
         self._assignment: dict[str, list[TopicPartition]] = {}
         self.generation = 0
+        self.rebalances = 0
         self._lock = threading.RLock()
 
     # ------------------------------------------------------------ membership
@@ -196,7 +197,12 @@ class ConsumerGroup:
 
     def _rebalance(self) -> None:
         self.generation += 1
+        self.rebalances += 1
         self._assignment = range_assign(list(self._members), self._partitions())
+        # backends without a registry (bare StreamLog default) skip this
+        m = getattr(self.log, "metrics", None)
+        if m is not None and m.enabled:
+            m.counter("consumer_rebalances_total", group=self.group_id).inc()
 
     def assignment(self, member_id: str) -> list[TopicPartition]:
         with self._lock:
@@ -366,6 +372,39 @@ class GroupConsumer:
         return self.group.commit_member(
             self.member_id, self._generation_seen, dict(self._positions)
         )
+
+    def lag(self) -> dict[TopicPartition, int]:
+        """Per-partition LSO-aware lag for this member's assignment.
+
+        Lag = bound - committed offset, clamped at 0, where the bound is
+        min(HW, LSO) for a ``read_committed`` member (records parked
+        behind an open transaction are not consumable, so they are not
+        lag) and the high watermark otherwise. Uses the *group's
+        committed* offsets, not local polled positions: lag is an
+        external progress measure, and uncommitted positions would be
+        lost on a crash anyway.
+        """
+        log = self.group.log
+        out: dict[TopicPartition, int] = {}
+        for tp in self.group.assignment(self.member_id):
+            try:
+                committed = self.group.committed(tp)
+                if (self.isolation_level == "read_committed"
+                        and hasattr(log, "last_stable_offset")):
+                    bound = log.last_stable_offset(tp.topic, tp.partition)
+                else:
+                    bound = log.end_offset(tp.topic, tp.partition)
+            except ClusterError:
+                continue  # partition unavailable mid-election: omit
+            out[tp] = max(0, bound - committed)
+        m = getattr(log, "metrics", None)
+        if m is not None and m.enabled:
+            for tp, lag in out.items():
+                m.gauge(
+                    "consumer_lag", group=self.group.group_id,
+                    topic=tp.topic, partition=str(tp.partition),
+                ).set(lag)
+        return out
 
     def positions(self) -> dict[TopicPartition, int]:
         """Snapshot of the member's polled positions — what a

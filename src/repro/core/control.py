@@ -36,7 +36,7 @@ import re
 from dataclasses import dataclass, field
 from typing import Any
 
-from repro.core.log import StreamBackend, TopicPartition
+from repro.core.log import OffsetOutOfRange, StreamBackend, TopicPartition
 
 __all__ = [
     "CONTROL_TOPIC",
@@ -247,8 +247,71 @@ class ControlLogger:
                 return msg
         return None
 
+    def _stream_committed(self, msg: ControlMessage) -> bool:
+        """Whether every record ``msg`` names is visible at
+        ``read_committed`` — i.e. the stream's ingest transaction (if
+        any) durably committed.
+
+        ``ingest`` emits only offset-contiguous ranges, so a range is
+        committed iff exactly ``length`` records of ``[offset, end)``
+        survive a read_committed scan: an aborted transaction's records
+        are filtered out of such a read (count comes up short) and an
+        *open* transaction blocks it at the LSO (no progress). Ranges
+        that cannot be inspected at all (topic unknown to this backend,
+        offsets already retention-expired) are skipped rather than
+        failed: §V stream reuse is a metadata operation and replaying a
+        coordinates-only announce predates this check — only a
+        *provable* isolation violation vetoes the replay.
+        """
+        for r in msg.ranges:
+            seen = 0
+            off = r.offset
+            while off < r.end:
+                try:
+                    batch = self._log.read(
+                        r.topic, r.partition, off, r.end - off,
+                        isolation="read_committed",
+                    )
+                except (KeyError, IndexError, OffsetOutOfRange):
+                    seen = r.length  # uninspectable, not provably aborted
+                    break
+                if not len(batch) and (batch.scanned or 0) == 0:
+                    return False  # LSO-blocked: transaction still open
+                if batch.offsets is not None:
+                    seen += sum(
+                        1 for o in batch.offsets if r.offset <= o < r.end
+                    )
+                else:
+                    seen += sum(
+                        1 for i in range(len(batch))
+                        if r.offset <= batch.first_offset + i < r.end
+                    )
+                if batch.next_offset <= off:
+                    return False  # no progress: nothing visible here
+                off = batch.next_offset
+            if seen != r.length:
+                return False  # aborted records were filtered out
+        return True
+
     def replay(self, msg: ControlMessage, new_deployment_id: str) -> ControlMessage:
-        """Re-send an historical stream to another deployment (§V, Fig. 8)."""
+        """Re-send an historical stream to another deployment (§V, Fig. 8).
+
+        Honors transactional isolation regardless of the logger's own
+        isolation level: a logger polling at default isolation can hold
+        an announce from an *aborted* transactional ingest in its
+        history, and replaying it would hand a new deployment stream
+        coordinates whose records no committed reader can see (a
+        read_committed trainer hangs waiting for data that is filtered
+        forever). Every range is therefore re-verified at
+        ``read_committed`` before the announce is re-sent; replaying an
+        aborted or still-open stream raises ``ValueError``.
+        """
+        if not self._stream_committed(msg):
+            raise ValueError(
+                f"cannot replay stream for deployment {msg.deployment_id!r}: "
+                "its records are not fully visible at read_committed "
+                "(aborted or still-open ingest transaction)"
+            )
         retargeted = msg.retarget(new_deployment_id)
         send_control(self._log, retargeted)
         return retargeted

@@ -265,6 +265,16 @@ class QuorumController:
         self.leader_id: int | None = None
         self._lease_until = 0.0
         self.elections = 0  # completed leadership changes (observability)
+        self.term_changes = 0  # election rounds that bumped the term
+        self.quorum_rpcs = 0  # AppendEntries-shaped node-to-node calls
+        # last-observed leader for read-only metadata queries: unlike
+        # ``leader_id`` (reset to None on fencing/deposal) this sticks
+        # around, so reads keep routing to one node instead of probing
+        # all N — falling back to a full probe only when the observed
+        # leader can no longer serve. The counters prove the reduction.
+        self._observed_leader: int | None = None
+        self.observed_reads = 0  # reads served by the observed leader alone
+        self.probe_reads = 0  # reads that fell back to probing every node
         self._applied: set[int] = set()  # entry indexes handed to the SM
         self._lock = threading.RLock()
         # test hook: crash the leader mid-commit ("append": before any
@@ -283,14 +293,53 @@ class QuorumController:
             return self.leader_id
 
     def term(self) -> int:
+        """Current controller term — an observed-leader read: served from
+        the last-observed leader's state alone when that node is still the
+        serving leader (one node touched), probing every node only when it
+        is not. A serving leader's term is the quorum's term (any higher
+        term would have fenced it), so the routed answer is never stale."""
         with self._lock:
+            obs = self._observed_node_locked()
+            if obs is not None:
+                self.observed_reads += 1
+                return obs.term
+            self.probe_reads += 1
             return max(n.term for n in self.nodes.values())
+
+    def _observed_node_locked(self) -> ControllerNode | None:
+        """The last-observed leader, iff it can still serve reads (up and
+        the elected leader for its own term)."""
+        if self._observed_leader is None:
+            return None
+        obs = self.nodes.get(self._observed_leader)
+        if obs is not None and obs.up and obs.won_term == obs.term:
+            return obs
+        return None
+
+    def apply_lag(self) -> int:
+        """Committed-but-unapplied metadata entries (state-machine backlog
+        a ``controller_tick`` still has to drain)."""
+        with self._lock:
+            ldr = (
+                self.nodes.get(self.leader_id)
+                if self.leader_id is not None
+                else None
+            )
+            if ldr is None or not ldr.up:
+                return 0
+            return sum(
+                1 for i in range(ldr.commit_count) if i not in self._applied
+            )
 
     def describe(self) -> dict:
         with self._lock:
             return {
                 "leader": self.leader_id,
                 "elections": self.elections,
+                "term_changes": self.term_changes,
+                "quorum_rpcs": self.quorum_rpcs,
+                "observed_reads": self.observed_reads,
+                "probe_reads": self.probe_reads,
                 "lease_until": self._lease_until,
                 "nodes": {
                     n.node_id: {
@@ -342,6 +391,7 @@ class QuorumController:
             if len(visible) < self._majority:
                 continue  # pre-vote: cannot win, don't disturb terms
             term = max(n.term for n in visible) + 1
+            self.term_changes += 1
             votes = 0
             for n in visible:
                 # grant iff the candidate's log is at least as up-to-date
@@ -353,6 +403,7 @@ class QuorumController:
             if votes < self._majority:
                 continue
             self.leader_id = cand.node_id
+            self._observed_leader = cand.node_id
             cand.won_term = term
             self.elections += 1
             self._lease_until = self._clock() + self.lease_s
@@ -402,6 +453,7 @@ class QuorumController:
         """Bring follower ``f`` up to ``ldr``'s log (AppendEntries):
         truncate the conflicting suffix, copy missing entries, propagate
         the commit index. Returns False when unreachable or fenced."""
+        self.quorum_rpcs += 1
         if not self._visible(ldr, f):
             return False
         if f.term > ldr.term:

@@ -1169,6 +1169,29 @@ class StreamLog:
         self._clock = clock or time.time
         # consumer group -> TopicPartition -> committed offset
         self._committed: dict[str, dict[TopicPartition, int]] = {}
+        # attachable observability registry (repro.core.metrics
+        # MetricsRegistry) — None by default, so a bare log pays one
+        # attribute load per append/read; BrokerCluster attaches its
+        # cluster-wide registry to every broker's log
+        self.metrics = None
+        # bound hot-path handles, cached per attached registry: the
+        # append/read fast path must not pay a series-key format + dict
+        # lookup per call (that alone blows the ≤5% overhead budget)
+        self._mcache: tuple | None = None
+
+    def _hot_metrics(self, m) -> tuple:
+        """(registry, append_hist, append_ctr, read_hist, read_ctr) for
+        the currently attached registry; rebuilt if it was swapped."""
+        cache = self._mcache
+        if cache is None or cache[0] is not m:
+            cache = self._mcache = (
+                m,
+                m.histogram("log_append_seconds", sample=8),
+                m.counter("log_append_records_total"),
+                m.histogram("log_read_seconds", sample=8),
+                m.counter("log_read_records_total"),
+            )
+        return cache
 
     def _now_ms(self) -> int:
         return int(self._clock() * 1000)
@@ -1253,7 +1276,15 @@ class StreamLog:
         if partition is None:
             partition = default_partition(keys, len(parts), self._now_ms())
         part = parts[partition]
+        m = self.metrics
+        if m is None or not m.enabled:
+            first, last = part.append_batch(values, keys)
+            return partition, first, last
+        _, h_app, c_app, _, _ = self._hot_metrics(m)
+        t0 = time.perf_counter()
         first, last = part.append_batch(values, keys)
+        h_app.record(time.perf_counter() - t0)
+        c_app.inc(len(values))
         return partition, first, last
 
     # ---------------------------------------------------------------- consume
@@ -1265,9 +1296,19 @@ class StreamLog:
         max_records: int = 1024,
         isolation: str | None = None,
     ) -> RecordBatch:
-        return self._partition(topic, partition).read(
+        m = self.metrics
+        if m is None or not m.enabled:
+            return self._partition(topic, partition).read(
+                offset, max_records, isolation
+            )
+        _, _, _, h_read, c_read = self._hot_metrics(m)
+        t0 = time.perf_counter()
+        batch = self._partition(topic, partition).read(
             offset, max_records, isolation
         )
+        h_read.record(time.perf_counter() - t0)
+        c_read.inc(len(batch))
+        return batch
 
     def read_one(self, topic: str, partition: int, offset: int) -> Record:
         """Point read of a single record, key included (the metadata-log
@@ -1362,9 +1403,20 @@ class StreamLog:
         (the acks=all direct ISR push, one run-merge instead of a
         per-record loop). Either keeps the follower's dedup table in step
         with the leader's, so exactly-once survives failover."""
-        return self._partition(topic, partition).append_batch(
+        m = self.metrics
+        if m is None or not m.enabled:
+            return self._partition(topic, partition).append_batch(
+                values, keys, timestamps, prods=prods, producer=producer,
+                txn=txn,
+            )
+        _, h_app, c_app, _, _ = self._hot_metrics(m)
+        t0 = time.perf_counter()
+        out = self._partition(topic, partition).append_batch(
             values, keys, timestamps, prods=prods, producer=producer, txn=txn
         )
+        h_app.record(time.perf_counter() - t0)
+        c_app.inc(len(values))
+        return out
 
     def producer_append(
         self,
@@ -1385,9 +1437,20 @@ class StreamLog:
         rules. ``txn=True`` additionally marks the records transactional:
         they stay above the LSO — invisible to read_committed consumers —
         until a control marker resolves their transaction."""
-        return self._partition(topic, partition).idempotent_append(
+        m = self.metrics
+        if m is None or not m.enabled:
+            return self._partition(topic, partition).idempotent_append(
+                values, keys, timestamps, pid, epoch, seq, txn=txn
+            )
+        _, h_app, c_app, _, _ = self._hot_metrics(m)
+        t0 = time.perf_counter()
+        out = self._partition(topic, partition).idempotent_append(
             values, keys, timestamps, pid, epoch, seq, txn=txn
         )
+        h_app.record(time.perf_counter() - t0)
+        if not out[2]:  # a dedup hit appended nothing
+            c_app.inc(len(values))
+        return out
 
     def append_control(
         self, topic: str, partition: int, pid: int, epoch: int, *, abort: bool
@@ -1402,6 +1465,33 @@ class StreamLog:
     def last_stable_offset(self, topic: str, partition: int) -> int:
         """The partition's LSO — the read_committed visibility bound."""
         return self._partition(topic, partition).last_stable_offset()
+
+    def stats(self) -> dict[str, int]:
+        """Aggregate substrate stats: segment/retention state and
+        producer-state (dedup) table size across every partition.
+        Evaluated lazily by metrics gauge callbacks at snapshot time —
+        never on the append hot path."""
+        out = {
+            "partitions": 0,
+            "segments": 0,
+            "size_bytes": 0,
+            "retained_records": 0,
+            "producer_state_entries": 0,
+            "open_txns": 0,
+        }
+        with self._lock:
+            parts = [p for ps in self._topics.values() for p in ps]
+        for part in parts:
+            with part.lock:
+                out["partitions"] += 1
+                out["segments"] += len(part.segments)
+                out["size_bytes"] += sum(s.size_bytes for s in part.segments)
+                out["retained_records"] += (
+                    part.end_offset - part.log_start_offset
+                )
+                out["producer_state_entries"] += len(part.producers)
+                out["open_txns"] += len(part.txn_open)
+        return out
 
     def open_txns(self, topic: str, partition: int) -> dict[int, int]:
         """pid -> first offset of its open transaction (test/observability

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Iterator, Mapping, Sequence
@@ -247,6 +248,20 @@ def ingest(
     use_txn = transactional
     use_idem = (idempotent or use_txn) and hasattr(log, "init_producer")
 
+    # ingest throughput metrics (no-op on backends without a registry)
+    _m = getattr(log, "metrics", None)
+    _instrument = _m is not None and _m.enabled
+    _t0 = time.perf_counter() if _instrument else 0.0
+
+    def _done(msg: ControlMessage) -> ControlMessage:
+        if _instrument:
+            dt = time.perf_counter() - _t0
+            _m.counter("ingest_records_total", topic=topic).inc(total)
+            _m.histogram("ingest_seconds").record(dt)
+            if dt > 0:
+                _m.gauge("ingest_records_per_s", topic=topic).set(total / dt)
+        return msg
+
     def produce_span(
         span: Sequence[bytes],
         part: int | None,
@@ -308,7 +323,7 @@ def ingest(
             except Exception:
                 pass  # outcome resolves via coordinator recovery
             raise
-        return msg
+        return _done(msg)
 
     num_threads = max(1, min(num_threads, total or 1))
     if partition is not None:
@@ -345,7 +360,7 @@ def ingest(
         # the announce rides the same exactly-once path as the data: a
         # duplicated control message would re-trigger training
         send_control(log, msg, producer=control_producer)
-    return msg
+    return _done(msg)
 
 
 # ------------------------------------------------- transactional transform

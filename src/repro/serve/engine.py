@@ -142,6 +142,10 @@ class InferenceReplica:
             self.consumer.rejoin()
             return None
         outs: list[list[bytes]] = []
+        # poll-to-predict latency (no-op on backends with no registry)
+        reg = getattr(self.log, "metrics", None)
+        instrument = reg is not None and reg.enabled
+        t0 = time.perf_counter() if instrument else 0.0
         try:
             polled = self.consumer.poll(max_records)
         except RebalanceError:
@@ -158,6 +162,13 @@ class InferenceReplica:
             decoded = _decode_data(self.codec, mat, data_bytes)
             preds = np.asarray(self.predict_fn(decoded))
             outs.append([preds[i].tobytes() for i in range(preds.shape[0])])
+        if instrument and outs:
+            reg.histogram(
+                "serve_poll_to_predict_seconds", replica=self.replica_id
+            ).record(time.perf_counter() - t0)
+            reg.counter(
+                "serve_predictions_total", replica=self.replica_id
+            ).inc(sum(len(o) for o in outs))
         return outs
 
     def publish(self, outs: list[list[bytes]] | None) -> int:

@@ -307,6 +307,9 @@ class TrainingJob:
         total = max_steps if max_steps is not None else epochs * steps_per_epoch
 
         metrics = {}
+        # training throughput metrics (no-op on backends with no registry)
+        reg = getattr(self.log, "metrics", None)
+        instrument = reg is not None and reg.enabled
         # batch assembly overlaps the device step (prefetch is a bounded
         # background queue over the same deterministic batch sequence)
         stream = iter(it)
@@ -315,9 +318,23 @@ class TrainingJob:
             for _ in range(start_step):
                 next(stream)
             for step_i in range(start_step, total):
+                t0 = time.perf_counter() if instrument else 0.0
                 batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
                 state, m = step_fn(state, batch)
                 metrics = {k: float(v) for k, v in m.items()}
+                if instrument:
+                    dt = time.perf_counter() - t0
+                    reg.histogram(
+                        "train_step_seconds", deployment=self.deployment_id
+                    ).record(dt)
+                    reg.counter(
+                        "train_records_total", deployment=self.deployment_id
+                    ).inc(batch_size)
+                    if dt > 0:
+                        reg.gauge(
+                            "train_records_per_s",
+                            deployment=self.deployment_id,
+                        ).set(batch_size / dt)
                 done = step_i + 1
                 if self.manager is not None and done % self.ckpt_every == 0:
                     self.manager.save_async(

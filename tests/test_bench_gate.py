@@ -75,9 +75,9 @@ def test_schema_violations_fail_gate():
 def test_idempotent_overhead_regression_fails_gate():
     gate = load_gate()
     results = load_results()
-    # doctor every recorded pair to cost 2x the 15% budget
+    # doctor every recorded pair to cost 2x the 35% budget
     for p in results["idempotent"]["pairs"]:
-        p["idempotent_msgs_per_s"] = p["baseline_msgs_per_s"] / 1.30
+        p["idempotent_msgs_per_s"] = p["baseline_msgs_per_s"] / 1.70
     failures = gate.check(
         results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
     )
@@ -142,6 +142,42 @@ def test_missing_transactions_section_fails_schema():
         results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
     )
     assert any("transactions['pairs']" in f for f in failures)
+
+
+def test_observability_overhead_regression_fails_gate():
+    gate = load_gate()
+    results = load_results()
+    # doctor every recorded pair to cost 2x the 5% budget
+    for p in results["observability"]["pairs"]:
+        p["instrumented_msgs_per_s"] = p["baseline_msgs_per_s"] / 1.10
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("observability overhead" in f for f in failures)
+    # the stored overhead_frac is ignored: doctoring it alone changes nothing
+    results = load_results()
+    results["observability"]["overhead_frac"] = 9.9
+    assert gate.check(results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE) == []
+    # a single outlier pair does not fail the median-based gate
+    results["observability"]["pairs"][0]["instrumented_msgs_per_s"] /= 10.0
+    assert gate.check(results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE) == []
+
+
+def test_missing_observability_section_fails_schema():
+    gate = load_gate()
+    results = load_results()
+    del results["observability"]
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("observability" in f for f in failures)
+    # a pairs list with no valid pair is a schema failure too
+    results = load_results()
+    results["observability"]["pairs"] = [{"baseline_msgs_per_s": 0}]
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("observability['pairs']" in f for f in failures)
 
 
 def test_unreadable_file_fails_cli(tmp_path):

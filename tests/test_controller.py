@@ -121,6 +121,47 @@ class TestElections:
         assert [c.note for c in qc.committed_commands() if c.note] == ["a"]
 
 
+# --------------------------------------------------- observed-leader routing
+class TestObservedLeaderRouting:
+    def test_term_reads_route_to_observed_leader(self):
+        """Read-only metadata queries go to the last-observed controller
+        leader instead of probing all nodes — the counters prove it."""
+        qc, _ = make_qc()
+        qc.submit(noop("a"))  # elects node 0, observed
+        base_obs, base_probe = qc.observed_reads, qc.probe_reads
+        for _ in range(10):
+            assert qc.term() == 1
+        assert qc.observed_reads == base_obs + 10
+        assert qc.probe_reads == base_probe  # zero extra full probes
+
+    def test_routing_falls_back_to_probe_when_leader_down(self):
+        qc, _ = make_qc()
+        qc.submit(noop("a"))
+        qc.term()
+        obs_before = qc.observed_reads
+        qc.kill_node(0)  # observed leader dead: sticky route is invalid
+        probe_before = qc.probe_reads
+        t = qc.term()
+        assert qc.probe_reads == probe_before + 1
+        assert qc.observed_reads == obs_before
+        assert t >= 1  # probed term is still correct
+        # failover re-establishes the sticky route to the new leader
+        assert qc.tick()
+        assert qc.term() > 1
+        assert qc.observed_reads > obs_before
+
+    def test_routed_term_never_stale_across_failover(self):
+        """A deposed-but-alive ex-leader is not served from: the observed
+        route requires the node to still be serving its won term."""
+        qc, clock = make_qc(lease_s=1.0)
+        qc.submit(noop("a"))
+        qc.partition_node(0)  # old leader isolated but alive
+        clock.advance(2.0)
+        assert qc.tick()  # majority elects a successor at a higher term
+        new_term = max(n.term for n in qc.nodes.values())
+        assert qc.term() == new_term  # never the isolated node's old term
+
+
 # ------------------------------------------------------------ lease + fencing
 class TestLeaseAndFencing:
     def test_partitioned_leader_holds_lease_until_expiry(self):
