@@ -1,4 +1,5 @@
-"""CI regression gate over ``BENCH_replication.json`` (stdlib only).
+"""CI regression gate over ``BENCH_replication.json`` and (with
+``--datapath``) ``BENCH_datapath.json`` (stdlib only).
 
 Two checks, wired into the nightly CI job right after the benchmark run
 (`.github/workflows/ci.yml`):
@@ -31,10 +32,31 @@ Two checks, wired into the nightly CI job right after the benchmark run
   ``OBS_MAX_OVERHEAD`` (5%) versus the same run's ``metrics_enabled=False``
   baseline, with the same median-of-paired-runs statistic.
 
+With ``--datapath BENCH_datapath.json`` the gate additionally validates
+the broker→device data-path benchmark (PR-7, DESIGN.md §10):
+
+* **decode speedup** — the zero-copy framed decode must beat the
+  per-record Python baseline by at least ``DATAPATH_MIN_DECODE_SPEEDUP``
+  (10x); the statistic is the median within-pair ratio recomputed from
+  the recorded (per_record, framed) timing pairs. The quiet-host reading
+  is ~1000x+, so the 10x floor only trips on a real regression to
+  per-record work.
+* **overlap** — overlapped poll→device throughput vs the serial path,
+  median within-pair ratio over slice-interleaved pairs. Host-aware: on
+  a multi-core host (``overlap.host_cores >= 2``) overlap must beat
+  serial by ``DATAPATH_MIN_OVERLAP_SPEEDUP`` (1.05x); on a single-core
+  host the two legs timeshare one CPU — the theoretical ceiling is
+  parity — so the gate instead holds the pipeline at
+  ``DATAPATH_MIN_OVERLAP_RATIO_1CORE`` (0.90x: double buffering must
+  cost nothing to leave on).
+* **schema** — decode/overlap/step sections present with positive
+  values, including the poll→kernel step measurement.
+
 Exit code 0 on pass, 1 on any failure (the CI job fails on non-zero).
 
     python benchmarks/check_bench.py [BENCH_replication.json]
         [--baseline MSGS_PER_S] [--tolerance FRACTION]
+        [--datapath BENCH_datapath.json]
 """
 
 from __future__ import annotations
@@ -67,6 +89,13 @@ TXN_MAX_OVERHEAD = 0.25
 # observability tax budget: a metrics-instrumented produce hot path may
 # cost at most this fraction vs the same run's metrics-disabled baseline
 OBS_MAX_OVERHEAD = 0.05
+
+# broker→device data-path gates (BENCH_datapath.json, PR-7)
+DATAPATH_MIN_DECODE_SPEEDUP = 10.0
+DATAPATH_MIN_OVERLAP_SPEEDUP = 1.05
+# single-core hosts can't run the host and device legs concurrently —
+# the honest ceiling is parity, so gate "costs nothing to leave on"
+DATAPATH_MIN_OVERLAP_RATIO_1CORE = 0.90
 
 ACCEPTANCE_KEY = "contended_t4_rf3_acksall"
 
@@ -113,6 +142,130 @@ def _txn_overhead(txn: dict) -> tuple[float, int] | None:
 
 def _obs_overhead(obs: dict) -> tuple[float, int] | None:
     return _pair_overhead(obs, "instrumented_msgs_per_s")
+
+
+def _datapath_decode_speedup(decode: dict) -> tuple[float, int] | None:
+    """Median framed-vs-per-record speedup recomputed from the recorded
+    timing pairs (never trusted from the stored ``speedup``)."""
+    pairs = decode.get("pairs")
+    if not isinstance(pairs, list):
+        return None
+    ratios = sorted(
+        p["per_record_us"] / p["framed_us"]
+        for p in pairs
+        if isinstance(p, dict)
+        and p.get("per_record_us", 0) > 0
+        and p.get("framed_us", 0) > 0
+    )
+    if not ratios:
+        return None
+    return ratios[len(ratios) // 2], len(ratios)
+
+
+def _datapath_overlap_ratio(overlap: dict) -> tuple[float, int] | None:
+    """Median overlap/serial throughput ratio recomputed from the
+    recorded slice-interleaved pairs."""
+    pairs = overlap.get("pairs")
+    if not isinstance(pairs, list):
+        return None
+    ratios = sorted(
+        p["overlap_records_per_s"] / p["serial_records_per_s"]
+        for p in pairs
+        if isinstance(p, dict)
+        and p.get("overlap_records_per_s", 0) > 0
+        and p.get("serial_records_per_s", 0) > 0
+    )
+    if not ratios:
+        return None
+    return ratios[len(ratios) // 2], len(ratios)
+
+
+def check_datapath(results: dict) -> list[str]:
+    """Return failure messages for a BENCH_datapath.json result set."""
+    failures: list[str] = []
+    for key in ("config", "decode", "overlap", "step"):
+        if key not in results:
+            failures.append(f"datapath schema: missing section {key!r}")
+
+    decode = results.get("decode", {})
+    decode = decode if isinstance(decode, dict) else {}
+    for key in ("per_record", "framed_view", "fallback_copy",
+                "matrix_copy"):
+        row = decode.get(key)
+        if not (isinstance(row, dict) and row.get("us_per_batch", 0) > 0
+                and row.get("MB_per_s", 0) > 0):
+            failures.append(
+                f"datapath schema: decode[{key!r}] missing or non-positive"
+            )
+    if isinstance(decode.get("framed_view"), dict) and not decode[
+        "framed_view"
+    ].get("zero_copy", False):
+        failures.append(
+            "datapath schema: decode['framed_view'] did not take the "
+            "zero-copy path"
+        )
+    measured = _datapath_decode_speedup(decode)
+    if measured is None:
+        failures.append(
+            "datapath schema: decode['pairs'] missing or holds no valid "
+            "(per_record, framed) timing pair"
+        )
+    else:
+        speedup, n_pairs = measured
+        if speedup < DATAPATH_MIN_DECODE_SPEEDUP:
+            failures.append(
+                f"regression: zero-copy framed decode is only "
+                f"{speedup:.1f}x the per-record baseline (median across "
+                f"{n_pairs} pairs), below the "
+                f"{DATAPATH_MIN_DECODE_SPEEDUP:.0f}x floor"
+            )
+
+    overlap = results.get("overlap", {})
+    overlap = overlap if isinstance(overlap, dict) else {}
+    for key in ("serial", "overlap"):
+        row = overlap.get(key)
+        if not (isinstance(row, dict) and row.get("records_per_s", 0) > 0):
+            failures.append(
+                f"datapath schema: overlap[{key!r}] missing or non-positive"
+            )
+    cores = overlap.get("host_cores")
+    if not isinstance(cores, int) or cores < 1:
+        failures.append(
+            "datapath schema: overlap['host_cores'] missing or non-positive"
+        )
+    measured = _datapath_overlap_ratio(overlap)
+    if measured is None:
+        failures.append(
+            "datapath schema: overlap['pairs'] missing or holds no valid "
+            "(serial, overlap) throughput pair"
+        )
+    elif isinstance(cores, int) and cores >= 1:
+        ratio, n_pairs = measured
+        if cores >= 2:
+            if ratio < DATAPATH_MIN_OVERLAP_SPEEDUP:
+                failures.append(
+                    f"regression: overlapped poll→device throughput is "
+                    f"{ratio:.2f}x the serial path (median across "
+                    f"{n_pairs} pairs) on a {cores}-core host, below the "
+                    f"{DATAPATH_MIN_OVERLAP_SPEEDUP:.2f}x floor"
+                )
+        elif ratio < DATAPATH_MIN_OVERLAP_RATIO_1CORE:
+            failures.append(
+                f"regression: overlapped poll→device throughput is "
+                f"{ratio:.2f}x the serial path (median across {n_pairs} "
+                f"pairs) on a single-core host, below the parity floor "
+                f"{DATAPATH_MIN_OVERLAP_RATIO_1CORE:.2f}x (double "
+                "buffering must cost nothing to leave on)"
+            )
+
+    st = results.get("step", {})
+    st = st if isinstance(st, dict) else {}
+    if not (st.get("records_per_s", 0) > 0 and st.get("kernel")):
+        failures.append(
+            "datapath schema: step['records_per_s']/'kernel' missing or "
+            "non-positive (poll→kernel measurement absent)"
+        )
+    return failures
 
 
 def check(results: dict, baseline: float, tolerance: float) -> list[str]:
@@ -244,6 +397,9 @@ def main(argv: list[str] | None = None) -> int:
                          "(default: recorded PR-2 value)")
     ap.add_argument("--tolerance", type=float, default=TOLERANCE,
                     help="allowed fractional regression (default 0.20)")
+    ap.add_argument("--datapath", default=None, metavar="BENCH_datapath.json",
+                    help="also validate + gate the broker→device "
+                         "data-path benchmark result file")
     args = ap.parse_args(argv)
 
     try:
@@ -254,6 +410,17 @@ def main(argv: list[str] | None = None) -> int:
         return 1
 
     failures = check(results, args.baseline, args.tolerance)
+
+    dp_results = None
+    if args.datapath is not None:
+        try:
+            with open(args.datapath) as f:
+                dp_results = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(f"cannot read {args.datapath}: {e}")
+        else:
+            failures.extend(check_datapath(dp_results))
+
     if failures:
         for msg in failures:
             print(f"check_bench: FAIL — {msg}")
@@ -276,6 +443,20 @@ def main(argv: list[str] | None = None) -> int:
         f"{OBS_MAX_OVERHEAD:.0%}); "
         f"controller failover {fo * 1e3:.1f} ms"
     )
+    if dp_results is not None:
+        dec, _ = _datapath_decode_speedup(dp_results["decode"])
+        ovr, _ = _datapath_overlap_ratio(dp_results["overlap"])
+        cores = dp_results["overlap"]["host_cores"]
+        floor = (DATAPATH_MIN_OVERLAP_SPEEDUP if cores >= 2
+                 else DATAPATH_MIN_OVERLAP_RATIO_1CORE)
+        print(
+            f"check_bench: OK — datapath decode {dec:.0f}x vs per-record "
+            f"(floor {DATAPATH_MIN_DECODE_SPEEDUP:.0f}x); overlap "
+            f"{ovr:.2f}x vs serial on {cores} core(s) (floor "
+            f"{floor:.2f}x); poll→kernel "
+            f"{dp_results['step']['records_per_s'] / 1e3:.0f} krec/s "
+            f"({dp_results['step']['kernel']})"
+        )
     return 0
 
 

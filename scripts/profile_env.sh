@@ -1,0 +1,48 @@
+#!/usr/bin/env sh
+# Host-side perf knobs for the benchmark entrypoints (SNIPPETS.md items
+# 2-3: the olmax / HomebrewNLP run.sh recipes). SOURCE this file — it
+# only exports environment variables:
+#
+#   . scripts/profile_env.sh
+#   PYTHONPATH=src python -m benchmarks.datapath
+#
+# Everything degrades gracefully on hosts without the optional pieces
+# (frozen container policy: nothing is installed, knobs that need a
+# missing library are skipped):
+#
+# * tcmalloc LD_PRELOAD — thread-caching malloc speeds up the
+#   allocation-heavy host path (batch assembly, decode fallbacks) and
+#   removes glibc-malloc arena contention under the prefetch threads.
+#   Only set when the library is actually present.
+# * TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD — silence tcmalloc's
+#   large-alloc warnings for big numpy buffers (60 GB threshold).
+# * TF_CPP_MIN_LOG_LEVEL=4 — mute the XLA/TSL C++ banner noise that
+#   otherwise pollutes benchmark CSV output.
+# * XLA_FLAGS --xla_force_host_platform_device_count — pin the CPU
+#   platform's device count to the host's actual core budget instead of
+#   XLA's default, so intra-op threading doesn't oversubscribe the
+#   benchmark's own prefetch threads. Appends to (never clobbers) any
+#   caller-provided XLA_FLAGS.
+
+# tcmalloc, when the host has it (checked at the usual multiarch paths)
+for _tcm in \
+    /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+    /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+    /usr/lib/libtcmalloc.so.4; do
+    if [ -r "$_tcm" ]; then
+        export LD_PRELOAD="$_tcm${LD_PRELOAD:+:$LD_PRELOAD}"
+        export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+        break
+    fi
+done
+unset _tcm
+
+# mute XLA/TSL C++ logging so CSV rows stay machine-parseable
+export TF_CPP_MIN_LOG_LEVEL=4
+
+# one XLA host device per available core (sched_getaffinity respects
+# container CPU limits where nproc may not)
+_cores="$(python -c 'import os; print(len(os.sched_getaffinity(0)))' \
+          2>/dev/null || echo 1)"
+export XLA_FLAGS="--xla_force_host_platform_device_count=${_cores}${XLA_FLAGS:+ $XLA_FLAGS}"
+unset _cores

@@ -461,6 +461,14 @@ class RecordBatch:
     # Both stay None on the contiguous (raw) read path.
     offsets: list[int] | None = None
     scanned: int | None = None
+    # zero-copy framing (DESIGN.md §10): records of one segment are always
+    # tightly packed, so the contiguous read path also hands out one
+    # ``(payload_view, record_count)`` memoryview per segment span covering
+    # the delivered records back to back. Fixed-layout decoders
+    # (repro.data.formats) turn a span directly into per-field strided
+    # ndarray views — no per-record Python, no copy. None on filtered
+    # (marker/aborted-skipping) reads, where delivery is non-contiguous.
+    spans: list[tuple[memoryview, int]] | None = None
 
     def __len__(self) -> int:
         return len(self.values)
@@ -471,12 +479,38 @@ class RecordBatch:
             return self.first_offset + self.scanned
         return self.first_offset + len(self.values)
 
+    def framed(self, record_bytes: int) -> list[tuple[memoryview, int]] | None:
+        """The batch's contiguous spans, validated for fixed-layout decode
+        at ``record_bytes`` per record: every delivered record accounted
+        for, every span exactly ``count * record_bytes`` long. None when
+        the batch came off a filtered read (no spans) or the records are
+        not the expected fixed size — callers then fall back to the
+        copying :meth:`to_matrix` path."""
+        if self.spans is None or record_bytes <= 0:
+            return None
+        if sum(n for _, n in self.spans) != len(self.values):
+            return None
+        for mv, n in self.spans:
+            if mv.nbytes != n * record_bytes:
+                return None
+        return self.spans
+
     def to_matrix(self) -> np.ndarray:
         if not self.values:
             return np.zeros((0, 0), dtype=np.uint8)
         n = len(self.values[0])
         if any(len(v) != n for v in self.values):
             raise ValueError("to_matrix requires fixed-size records")
+        spans = self.framed(n)
+        if spans is not None:
+            # contiguous fixed-size records: bulk row-block copies (one
+            # per segment span) instead of a per-record loop
+            out = np.empty((len(self.values), n), dtype=np.uint8)
+            row = 0
+            for mv, cnt in spans:
+                out[row : row + cnt] = np.frombuffer(mv, np.uint8).reshape(cnt, n)
+                row += cnt
+            return out
         out = np.empty((len(self.values), n), dtype=np.uint8)
         for i, v in enumerate(self.values):
             out[i] = np.frombuffer(v, dtype=np.uint8)
@@ -842,18 +876,26 @@ class _Partition:
                 )
             values: list[memoryview] = []
             timestamps: list[int] = []
+            payload_spans: list[tuple[memoryview, int]] = []
             for seg, lo, hi in spans:
                 mv = memoryview(seg.buf)
                 for r in range(lo, hi):
                     start = seg.starts[r]
                     values.append(mv[start : start + seg.lengths[r]])
                     timestamps.append(seg.timestamps[r])
+                # records of one segment are tightly packed (starts are
+                # cumulative lengths), so the whole [lo, hi) span is ONE
+                # contiguous byte range — exported as a single view for
+                # zero-copy fixed-layout decode (RecordBatch.framed)
+                end = seg.starts[hi - 1] + seg.lengths[hi - 1]
+                payload_spans.append((mv[seg.starts[lo] : end], hi - lo))
             return RecordBatch(
                 topic=self.topic,
                 partition=self.index,
                 first_offset=offset,
                 values=values,
                 timestamps=timestamps,
+                spans=payload_spans,
             )
 
     def _read_committed(self, offset: int, max_records: int) -> RecordBatch:

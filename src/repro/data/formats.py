@@ -17,6 +17,19 @@ job can decode without out-of-band coordination:
 Both codecs expose *vectorized* batch encode/decode: a RecordBatch of n
 fixed-size messages decodes with one (n, record_bytes) uint8 view + per
 field ``.view(dtype).reshape`` — no per-record Python loop on the hot path.
+
+**Zero-copy framed decode** (DESIGN.md §10): the log's contiguous read
+path hands out one payload memoryview per segment span
+(:attr:`RecordBatch.spans`), and :meth:`_PackedCodec.decode_frames` turns
+a span directly into per-field **strided ndarray views** over the segment
+buffer — no per-record Python, no copy until the device transfer. The
+fast path requires the aligned-stride layout (field offset and record
+stride both multiples of the dtype's itemsize, measured from the span's
+actual base address); an unaligned field falls back to one vectorized
+column copy (the *measured* fallback — ``benchmarks/datapath.py`` records
+both paths). Decoded views are read-only: the log's buffers are the
+single source of truth and a consumer must not be able to rewrite
+history through a borrowed view.
 """
 
 from __future__ import annotations
@@ -34,6 +47,7 @@ __all__ = [
     "FieldSpec",
     "RawCodec",
     "codec_from_control",
+    "decode_span_fields",
 ]
 
 
@@ -43,6 +57,70 @@ def _dtype_size(dtype: str) -> int:
 
 def _shape_elems(shape: Sequence[int]) -> int:
     return int(math.prod(shape)) if shape else 1
+
+
+def decode_span_fields(
+    view,
+    n: int,
+    fields: Sequence[FieldSpec],
+    offsets: Sequence[int],
+    record_bytes: int,
+) -> tuple[dict[str, np.ndarray], bool]:
+    """Decode ``n`` fixed-layout records packed back to back in ``view``.
+
+    The zero-copy primitive behind :meth:`_PackedCodec.decode_frames`:
+    each field becomes an ``np.ndarray`` **view** over the span's buffer
+    with record stride ``record_bytes`` — provided the layout is aligned
+    (the field's absolute base address and the record stride are both
+    multiples of the dtype's itemsize). An unaligned field takes the
+    fallback: one vectorized column copy, never a per-record loop.
+
+    Returns ``(arrays, zero_copy)`` where ``zero_copy`` is True iff every
+    field took the view path. View arrays are marked read-only (they
+    alias live log segment buffers).
+    """
+    base = np.frombuffer(view, dtype=np.uint8)
+    if base.nbytes != n * record_bytes:
+        raise ValueError(
+            f"span holds {base.nbytes} bytes, expected {n} x {record_bytes}"
+        )
+    if n == 0:
+        return (
+            {f.name: np.zeros((0,) + f.shape, f.dtype) for f in fields},
+            True,
+        )
+    ptr = base.__array_interface__["data"][0]
+    out: dict[str, np.ndarray] = {}
+    zero_copy = True
+    mat = None
+    for f, off in zip(fields, offsets):
+        item = _dtype_size(f.dtype)
+        if (ptr + off) % item == 0 and record_bytes % item == 0:
+            # aligned-stride fast path: a strided view, no bytes move.
+            # Within one record the field's elements are contiguous, so
+            # the inner strides are plain C strides; the outer (record)
+            # stride is the full record width.
+            strides = (record_bytes,) + tuple(
+                item * _shape_elems(f.shape[i + 1 :])
+                for i in range(len(f.shape))
+            )
+            arr = np.ndarray(
+                shape=(n,) + f.shape,
+                dtype=f.dtype,
+                buffer=base,
+                offset=off,
+                strides=strides,
+            )
+            if arr.flags.writeable:
+                arr.flags.writeable = False
+            out[f.name] = arr
+        else:
+            if mat is None:
+                mat = base.reshape(n, record_bytes)
+            chunk = np.ascontiguousarray(mat[:, off : off + f.nbytes])
+            out[f.name] = chunk.view(np.dtype(f.dtype)).reshape((n,) + f.shape)
+            zero_copy = False
+    return out, zero_copy
 
 
 @dataclass(frozen=True)
@@ -125,6 +203,43 @@ class _PackedCodec:
 
     def decode_batch(self, batch: RecordBatch) -> dict[str, np.ndarray]:
         return self.decode_matrix(batch.to_matrix())
+
+    def decode_span(
+        self, view, n: int
+    ) -> tuple[dict[str, np.ndarray], bool]:
+        """Zero-copy decode of ``n`` records packed in one contiguous
+        span; see :func:`decode_span_fields`."""
+        return decode_span_fields(
+            view, n, self.fields, self._offsets, self.record_bytes
+        )
+
+    def decode_frames(self, batch: RecordBatch) -> dict[str, np.ndarray]:
+        """Decode a fetched batch through the zero-copy framed path.
+
+        A single-span batch (the overwhelmingly common case: one fetch
+        inside one segment) decodes into per-field strided views over the
+        segment buffer — no copy at all on the aligned layout. A batch
+        whose records cross a segment boundary decodes each span
+        zero-copy and pays one C-level concatenate per field. A batch
+        with no framing (filtered read, ragged records) falls back to the
+        copying matrix path. Either way there is never per-record Python
+        work.
+        """
+        if not batch.values:
+            return {
+                f.name: np.zeros((0,) + f.shape, f.dtype)
+                for f in self.fields
+            }
+        spans = batch.framed(self.record_bytes)
+        if spans is None:
+            return self.decode_matrix(batch.to_matrix())
+        if len(spans) == 1:
+            return self.decode_span(spans[0][0], spans[0][1])[0]
+        parts = [self.decode_span(mv, cnt)[0] for mv, cnt in spans]
+        return {
+            f.name: np.concatenate([p[f.name] for p in parts], axis=0)
+            for f in self.fields
+        }
 
     def decode(self, value: bytes | memoryview) -> dict[str, np.ndarray]:
         mat = np.frombuffer(bytes(value), dtype=np.uint8)[None, :]

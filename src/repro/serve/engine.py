@@ -41,7 +41,7 @@ from repro.core.cluster import ClusterProducer, InvalidTxnState
 from repro.core.consumer import ConsumerGroup, RebalanceError
 from repro.core.log import ProducerFenced, StreamBackend
 from repro.core.registry import Registry, TrainedResult
-from repro.data.formats import codec_from_control
+from repro.data.formats import codec_from_control, decode_span_fields
 from repro.models.model import StreamModel
 
 __all__ = ["InferenceDeployment", "InferenceReplica", "build_serve_step", "build_prefill_step"]
@@ -154,13 +154,17 @@ class InferenceReplica:
             # tick instead of killing the deployment's poll thread
             self.consumer.rejoin()
             return None
+        # dispatch/collect split (DESIGN.md §10): predict for batch i is
+        # dispatched before batch i+1 is decoded — with a jitted
+        # predict_fn, JAX's async dispatch returns immediately and the
+        # device computes batch i while the host zero-copy decodes i+1.
+        # Results are collected (np.asarray blocks on the device) only
+        # after every dispatch is in flight.
+        pending = []
         for batch in polled:
-            mat = batch.to_matrix()
-            # inference streams carry only the data fields; tolerate
-            # full-record streams by slicing the data prefix
-            data_bytes = sum(f.nbytes for f in getattr(self.codec, "data_fields", self.codec.fields[:-1]))
-            decoded = _decode_data(self.codec, mat, data_bytes)
-            preds = np.asarray(self.predict_fn(decoded))
+            pending.append(self.predict_fn(self._decode_batch(batch)))
+        for preds in pending:
+            preds = np.asarray(preds)
             outs.append([preds[i].tobytes() for i in range(preds.shape[0])])
         if instrument and outs:
             reg.histogram(
@@ -170,6 +174,42 @@ class InferenceReplica:
                 "serve_predictions_total", replica=self.replica_id
             ).inc(sum(len(o) for o in outs))
         return outs
+
+    def _decode_batch(self, batch) -> dict[str, np.ndarray]:
+        """Decode a polled request batch to its data fields, zero-copy
+        when framed (DESIGN.md §10).
+
+        Inference streams carry only the data fields; full-record
+        streams (training-format replays) are tolerated by slicing the
+        data prefix. Either layout takes the framed strided-view path
+        when the fetch is contiguous; a filtered/ragged fetch falls back
+        to the copying matrix decode.
+        """
+        data_fields = list(
+            getattr(self.codec, "data_fields", self.codec.fields[:-1])
+        )
+        data_bytes = sum(f.nbytes for f in data_fields)
+        if batch.framed(self.codec.record_bytes) is not None:
+            full = self.codec.decode_frames(batch)
+            return {f.name: full[f.name] for f in data_fields}
+        spans = batch.framed(data_bytes)
+        if spans is not None:
+            # data-only records: frame against the data-prefix layout
+            offs, pos = [], 0
+            for f in data_fields:
+                offs.append(pos)
+                pos += f.nbytes
+            parts = [
+                decode_span_fields(mv, cnt, data_fields, offs, data_bytes)[0]
+                for mv, cnt in spans
+            ]
+            if len(parts) == 1:
+                return parts[0]
+            return {
+                f.name: np.concatenate([p[f.name] for p in parts], axis=0)
+                for f in data_fields
+            }
+        return _decode_data(self.codec, batch.to_matrix(), data_bytes)
 
     def publish(self, outs: list[list[bytes]] | None) -> int:
         """Produce computed predictions, then commit the read offsets —

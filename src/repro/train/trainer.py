@@ -43,7 +43,13 @@ from repro.core.control import ControlMessage, poll_control
 from repro.core.controller import ClusterError
 from repro.core.log import StreamBackend
 from repro.core.registry import Registry
-from repro.data.pipeline import BatchIterator, ShardedFeeder, StreamDataset
+from repro.data.pipeline import (
+    BatchIterator,
+    ShardedFeeder,
+    StreamDataset,
+    StreamingBatchIterator,
+    device_feed,
+)
 from repro.models.model import StreamModel
 from repro.models.policy import Policy
 from repro.train import checkpoint as ckpt_lib
@@ -278,11 +284,27 @@ class TrainingJob:
         resume: bool = False,
         max_steps: int | None = None,
         prefetch: int = 2,  # batches assembled ahead of the device step
+        streaming: bool = False,
+        fetch_records: int = 4096,
         crash_after: int | None = None,  # fault-injection hook for tests
     ) -> TrainResult:
+        """Train over the announced stream.
+
+        ``streaming=False`` (default) materializes the stream on the host
+        (``StreamDataset.split()``) and trains with a seeded global
+        shuffle. ``streaming=True`` is the broker→device path of
+        DESIGN.md §10: a :class:`StreamingBatchIterator` polls the
+        consumer ``fetch_records`` records at a time, zero-copy decodes,
+        and :func:`device_feed` double-buffers ``jax.device_put`` so the
+        next poll+decode+transfer overlaps the running device step —
+        peak host memory is O(fetch_records), not O(stream), and resume
+        fast-forwards by offset arithmetic instead of replaying batches.
+        Streaming trains in stream order (no global shuffle — that would
+        require exactly the materialization streaming avoids); both modes
+        yield a deterministic batch sequence, so checkpoints resume
+        exactly either way.
+        """
         msg = self.wait_for_control()
-        ds = StreamDataset(self.log, msg)
-        train_arrays, eval_arrays = ds.split()
 
         params = self.init_fn(jax.random.PRNGKey(self.seed))
         state = {"params": params, "opt": self.opt.init(params)}
@@ -299,10 +321,22 @@ class TrainingJob:
             new_params, new_opt = self.opt.update(grads, state["opt"], state["params"])
             return {"params": new_params, "opt": new_opt}, metrics
 
-        it = BatchIterator(
-            train_arrays, batch_size, seed=self.seed, epochs=None, shuffle=True,
-            prefetch=prefetch,
-        )
+        eval_arrays: dict[str, np.ndarray] | None = None
+        if streaming:
+            it = StreamingBatchIterator(
+                self.log, msg, batch_size, split="train", epochs=None,
+                fetch_records=fetch_records,
+            )
+            # resume = offset arithmetic: no records are fetched, decoded,
+            # or transferred for the fast-forwarded prefix
+            it.fast_forward(start_step)
+        else:
+            ds = StreamDataset(self.log, msg)
+            train_arrays, eval_arrays = ds.split()
+            it = BatchIterator(
+                train_arrays, batch_size, seed=self.seed, epochs=None,
+                shuffle=True, prefetch=prefetch,
+            )
         steps_per_epoch = it.steps_per_epoch()
         total = max_steps if max_steps is not None else epochs * steps_per_epoch
 
@@ -311,15 +345,24 @@ class TrainingJob:
         reg = getattr(self.log, "metrics", None)
         instrument = reg is not None and reg.enabled
         # batch assembly overlaps the device step (prefetch is a bounded
-        # background queue over the same deterministic batch sequence)
-        stream = iter(it)
+        # background queue over the same deterministic batch sequence);
+        # streaming additionally overlaps the device_put dispatch
+        if streaming:
+            stream = device_feed(iter(it), depth=prefetch)
+        else:
+            stream = iter(it)
         try:
-            # deterministic resume: fast-forward the shuffled stream
-            for _ in range(start_step):
-                next(stream)
+            if not streaming:
+                # deterministic resume: fast-forward the shuffled stream
+                for _ in range(start_step):
+                    next(stream)
             for step_i in range(start_step, total):
                 t0 = time.perf_counter() if instrument else 0.0
-                batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+                nxt = next(stream)
+                batch = (
+                    nxt if streaming
+                    else {k: jnp.asarray(v) for k, v in nxt.items()}
+                )
                 state, m = step_fn(state, batch)
                 metrics = {k: float(v) for k, v in m.items()}
                 if instrument:
@@ -359,7 +402,25 @@ class TrainingJob:
             self.manager.wait()
 
         eval_metrics = {}
-        if msg.validation_rate > 0 and next(iter(eval_arrays.values())).shape[0] > 0:
+        n_eval = int(round(msg.total_msg * msg.validation_rate))
+        if streaming:
+            if msg.validation_rate > 0 and n_eval > 0:
+                # bounded-memory eval: stream the tail split in batches and
+                # average the metric means (equal-size batches, so the
+                # average of means is exact up to the dropped remainder)
+                acc: dict[str, float] = {}
+                seen = 0
+                ev = StreamingBatchIterator(
+                    self.log, msg, min(batch_size, n_eval), split="eval",
+                    epochs=1, fetch_records=fetch_records,
+                )
+                for eb in device_feed(iter(ev), depth=prefetch):
+                    _, em = self.loss_fn(state["params"], eb)
+                    for k, v in em.items():
+                        acc[k] = acc.get(k, 0.0) + float(v)
+                    seen += 1
+                eval_metrics = {k: v / seen for k, v in acc.items()}
+        elif msg.validation_rate > 0 and next(iter(eval_arrays.values())).shape[0] > 0:
             eb = {k: jnp.asarray(v) for k, v in eval_arrays.items()}
             _, em = self.loss_fn(state["params"], eb)
             eval_metrics = {k: float(v) for k, v in em.items()}

@@ -26,6 +26,10 @@ def load_results():
     return json.loads((ROOT / "BENCH_replication.json").read_text())
 
 
+def load_datapath():
+    return json.loads((ROOT / "BENCH_datapath.json").read_text())
+
+
 def test_checked_in_results_pass_gate():
     gate = load_gate()
     failures = gate.check(
@@ -186,3 +190,91 @@ def test_unreadable_file_fails_cli(tmp_path):
     bad = tmp_path / "bad.json"
     bad.write_text("{not json")
     assert gate.main([str(bad)]) == 1
+
+
+# ------------------------------------------------- datapath gate (--datapath)
+
+
+def test_checked_in_datapath_passes_gate():
+    gate = load_gate()
+    assert gate.check_datapath(load_datapath()) == []
+    # and the combined CLI invocation CI runs exits 0
+    assert gate.main([
+        str(ROOT / "BENCH_replication.json"),
+        "--datapath", str(ROOT / "BENCH_datapath.json"),
+    ]) == 0
+
+
+def test_datapath_decode_regression_fails_gate():
+    gate = load_gate()
+    results = load_datapath()
+    # doctor every recorded pair to a framed decode barely 2x per-record:
+    # far below the 10x floor
+    for p in results["decode"]["pairs"]:
+        p["framed_us"] = p["per_record_us"] / 2.0
+    failures = gate.check_datapath(results)
+    assert any("framed decode" in f for f in failures)
+    # the stored speedup is ignored: doctoring it alone changes nothing
+    results = load_datapath()
+    results["decode"]["speedup"] = 1.0
+    assert gate.check_datapath(results) == []
+    # a single outlier pair does not fail the median-based gate
+    results["decode"]["pairs"][0]["framed_us"] *= 1000.0
+    assert gate.check_datapath(results) == []
+
+
+def test_datapath_overlap_gate_is_host_aware():
+    gate = load_gate()
+    # single-core host (the checked-in result): parity floor 0.90x — a
+    # ~0.95x median passes, a real pipeline tax fails
+    results = load_datapath()
+    assert results["overlap"]["host_cores"] == 1
+    for p in results["overlap"]["pairs"]:
+        p["overlap_records_per_s"] = 0.5 * p["serial_records_per_s"]
+    failures = gate.check_datapath(results)
+    assert any("parity floor" in f for f in failures)
+    # multi-core host: overlap must actually beat serial (1.05x floor),
+    # so the single-core-parity pairs that pass above now fail
+    results = load_datapath()
+    results["overlap"]["host_cores"] = 4
+    failures = gate.check_datapath(results)
+    assert any("below the 1.05x floor" in f for f in failures)
+    # and a genuine multi-core overlap win passes
+    for p in results["overlap"]["pairs"]:
+        p["overlap_records_per_s"] = 1.4 * p["serial_records_per_s"]
+    assert gate.check_datapath(results) == []
+
+
+def test_datapath_schema_violations_fail_gate():
+    gate = load_gate()
+    results = load_datapath()
+    del results["step"]
+    results["decode"].pop("framed_view")
+    failures = gate.check_datapath(results)
+    assert any("missing section 'step'" in f for f in failures)
+    assert any("framed_view" in f for f in failures)
+    # a framed decode that silently fell off the zero-copy path fails
+    results = load_datapath()
+    results["decode"]["framed_view"]["zero_copy"] = False
+    failures = gate.check_datapath(results)
+    assert any("zero-copy path" in f for f in failures)
+    # empty pair lists are schema failures, not silent passes
+    results = load_datapath()
+    results["decode"]["pairs"] = []
+    results["overlap"]["pairs"] = [{"serial_records_per_s": 0}]
+    failures = gate.check_datapath(results)
+    assert any("decode['pairs']" in f for f in failures)
+    assert any("overlap['pairs']" in f for f in failures)
+    # the host-aware gate needs the recorded core count
+    results = load_datapath()
+    del results["overlap"]["host_cores"]
+    failures = gate.check_datapath(results)
+    assert any("host_cores" in f for f in failures)
+
+
+def test_unreadable_datapath_file_fails_cli(tmp_path):
+    gate = load_gate()
+    assert gate.main([
+        str(ROOT / "BENCH_replication.json"),
+        "--datapath", str(tmp_path / "missing.json"),
+    ]) == 1

@@ -97,3 +97,46 @@ def test_offset_coupled_resume_trains_to_completion(tmp_path):
     _, offsets, meta = ck.restore(str(tmp_path / "c"), {"params": copd_mlp.init(jax.random.PRNGKey(3)), "opt": adamw(1e-2).init(copd_mlp.init(jax.random.PRNGKey(3)))})
     assert meta["deployment_id"] == dep.deployment_id
     assert all(v > 0 for v in offsets.values())
+
+
+def test_streaming_resume_matches_uninterrupted(tmp_path):
+    """Same fault-tolerance claim through the streaming (bounded-memory)
+    broker→device path: kill a ``streaming=True`` job mid-run, resume it,
+    and land on the same final metrics as the uninterrupted streaming run
+    — resume fast-forwards the deterministic stream by pure offset
+    arithmetic (DESIGN.md §10), so no drift can creep in."""
+    import repro.core as core
+    import repro.data as data
+    from repro.configs import copd_mlp
+    from repro.data.formats import AvroCodec, FieldSpec
+    from repro.train import TrainingJob, adamw
+
+    log = core.StreamLog()
+    reg = core.Registry()
+    spec = reg.register_model("copd-mlp")
+    cfg = reg.create_configuration([spec.model_id])
+    dep = reg.deploy(cfg.config_id, "train")
+    codec = AvroCodec(
+        [FieldSpec("data", "float32", (copd_mlp.N_FEATURES,))],
+        [FieldSpec("label", "int32", ())],
+    )
+    log.create_topic("copd")
+    data.ingest(log, "copd", codec, copd_mlp.synth_dataset(), dep.deployment_id,
+                validation_rate=0.2)
+
+    def run(d, **kw):
+        job = TrainingJob(log, reg, dep.deployment_id, spec.model_id,
+                          loss_fn=copd_mlp.loss_fn, init_fn=copd_mlp.init,
+                          opt=adamw(1e-2), ckpt_dir=str(d), ckpt_every=10,
+                          seed=3)
+        # fetch_records=64 keeps several polls per epoch in play, so the
+        # resumed run re-enters mid-stream, not at a poll boundary
+        return job.run(batch_size=10, max_steps=60, streaming=True,
+                       fetch_records=64, **kw)
+
+    ref = run(tmp_path / "ref")
+    with pytest.raises(RuntimeError, match="injected crash"):
+        run(tmp_path / "c", crash_after=25)
+    res = run(tmp_path / "c", resume=True)
+    assert res.steps == 60
+    assert res.metrics["loss"] == pytest.approx(ref.metrics["loss"], abs=1e-5)

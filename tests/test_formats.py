@@ -1,11 +1,19 @@
-"""RAW/AVRO codecs: roundtrip property tests + control-message autoconfig."""
+"""RAW/AVRO codecs: roundtrip property tests, control-message autoconfig,
+and the zero-copy framed decode invariants (DESIGN.md §10)."""
 
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core import LogConfig
 from repro.core.log import StreamLog
-from repro.data.formats import AvroCodec, FieldSpec, RawCodec, codec_from_control
+from repro.data.formats import (
+    AvroCodec,
+    FieldSpec,
+    RawCodec,
+    codec_from_control,
+    decode_span_fields,
+)
 
 DTYPES = ["float32", "int32", "uint8", "float64", "int16"]
 
@@ -87,3 +95,127 @@ def test_decode_matrix_validates_width():
     codec = RawCodec("float32", (4,), "int32", ())
     with pytest.raises(ValueError):
         codec.decode_matrix(np.zeros((3, 5), np.uint8))
+
+
+# ------------------------------------------------- zero-copy framed decode
+
+
+def _aligned_codec_and_buf(n=32, seed=7):
+    codec = RawCodec("float32", (3,), "int32", ())
+    arrays = _arrays_for(codec.fields, n, seed)
+    buf = b"".join(codec.encode_batch(arrays))
+    return codec, arrays, buf
+
+
+def test_decode_span_fields_aligned_is_a_view():
+    """The aligned layout decodes into strided views: no bytes move."""
+    codec, arrays, buf = _aligned_codec_and_buf()
+    base = np.frombuffer(buf, np.uint8)
+    out, zero_copy = codec.decode_span(memoryview(buf), 32)
+    assert zero_copy
+    for name, arr in out.items():
+        np.testing.assert_array_equal(arr, arrays[name])
+        assert np.shares_memory(arr, base)  # the regression this pins
+        # views alias live log buffers, so they must be read-only
+        assert not arr.flags.writeable
+        with pytest.raises(ValueError):
+            arr[...] = 0
+
+
+def test_decode_span_fields_unaligned_falls_back_to_copy():
+    """An unaligned field (float32 at byte offset 3, 11-byte record
+    stride) takes the vectorized copy fallback — correct values, no
+    aliasing — while byte-aligned fields in the same record stay views."""
+    codec = RawCodec("uint8", (3,), "float32", (2,))
+    assert codec.record_bytes == 11  # guarantees the misalignment
+    arrays = _arrays_for(codec.fields, 16, 11)
+    buf = b"".join(codec.encode_batch(arrays))
+    base = np.frombuffer(buf, np.uint8)
+    out, zero_copy = codec.decode_span(memoryview(buf), 16)
+    assert not zero_copy
+    np.testing.assert_array_equal(out["data"], arrays["data"])
+    np.testing.assert_array_equal(out["label"], arrays["label"])
+    assert not np.shares_memory(out["label"], base)  # copied, not viewed
+
+
+def test_decode_span_fields_empty_span():
+    codec = RawCodec("float32", (3,), "int32", ())
+    out, zero_copy = codec.decode_span(memoryview(b""), 0)
+    assert zero_copy
+    assert out["data"].shape == (0, 3) and out["label"].shape == (0,)
+
+
+def test_decode_span_fields_validates_length():
+    codec, _, buf = _aligned_codec_and_buf()
+    with pytest.raises(ValueError):
+        decode_span_fields(
+            memoryview(buf), 31, codec.fields, codec._offsets,
+            codec.record_bytes,
+        )
+
+
+def test_decode_frames_is_zero_copy_over_log_segment():
+    """A fetched batch decodes into views over the segment buffer itself
+    — the broker→device path moves no bytes on the host."""
+    codec, arrays, _ = _aligned_codec_and_buf(n=64)
+    log = StreamLog()
+    log.create_topic("t")
+    for rec in codec.encode_batch(arrays):
+        log.produce("t", rec)
+    batch = log.read("t", 0, 0, max_records=64)
+    spans = batch.framed(codec.record_bytes)
+    assert spans is not None and sum(n for _, n in spans) == 64
+    out = codec.decode_frames(batch)
+    seg = np.frombuffer(spans[0][0], np.uint8)
+    for name, arr in out.items():
+        np.testing.assert_array_equal(arr, arrays[name])
+    assert np.shares_memory(out["data"], seg)
+    assert np.shares_memory(out["label"], seg)
+
+
+def test_decode_frames_across_segment_roll():
+    """Records spanning several rolled segments decode span-by-span
+    (each zero-copy) and concatenate once — values identical to the
+    copying matrix path."""
+    codec = RawCodec("float32", (3,), "int32", ())
+    arrays = _arrays_for(codec.fields, 200, 3)
+    log = StreamLog()
+    log.create_topic("t", LogConfig(segment_bytes=512))  # force rolls
+    for rec in codec.encode_batch(arrays):
+        log.produce("t", rec)
+    batch = log.read("t", 0, 0, max_records=200)
+    spans = batch.framed(codec.record_bytes)
+    assert spans is not None and len(spans) > 1  # really multi-span
+    out = codec.decode_frames(batch)
+    ref = codec.decode_matrix(batch.to_matrix())
+    for name in ref:
+        np.testing.assert_array_equal(out[name], ref[name])
+        np.testing.assert_array_equal(out[name], arrays[name])
+
+
+def test_truncation_under_live_zero_copy_view_is_safe():
+    """Truncating (and appending past) a partition while decoded views
+    alias its segment buffer must neither raise BufferError nor corrupt
+    the held views — the PR-1/PR-2 buffer-hardening contract extended to
+    the zero-copy decode path."""
+    codec, arrays, _ = _aligned_codec_and_buf(n=48, seed=5)
+    log = StreamLog()
+    log.create_topic("t")
+    for rec in codec.encode_batch(arrays):
+        log.produce("t", rec)
+    out = codec.decode_frames(log.read("t", 0, 0, max_records=48))
+    held = {k: v.copy() for k, v in out.items()}  # expected contents
+    # truncate the suffix out from under the live view: the old buffer
+    # must stay resident (resizing an exported bytearray would raise)
+    assert log.truncate_to("t", 0, 16) == 16
+    for name, arr in out.items():
+        np.testing.assert_array_equal(arr, held[name])
+    # the partition stays fully usable: append + re-read after truncation
+    fresh = _arrays_for(codec.fields, 8, 9)
+    for rec in codec.encode_batch(fresh):
+        log.produce("t", rec)
+    out2 = codec.decode_frames(log.read("t", 0, 16, max_records=8))
+    np.testing.assert_array_equal(out2["label"], fresh["label"])
+    # and the original views still read their pre-truncation contents
+    for name, arr in out.items():
+        np.testing.assert_array_equal(arr, held[name])

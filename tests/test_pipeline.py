@@ -86,3 +86,172 @@ def test_multi_partition_ingest_ranges_cover_everything():
     msg = data.ingest(log, "t", codec, arrays, "D", message_set_size=16)
     got = data.StreamDataset(log, msg).read()
     np.testing.assert_array_equal(np.sort(got["label"]), np.arange(64))
+
+
+# --------------------------------------------------- streaming batch iterator
+
+
+def _ingested(n=100, partitions=4, vr=0.25, msize=16):
+    log, codec, arrays = _mk(n, partitions=partitions)
+    msg = data.ingest(log, "t", codec, arrays, "D", validation_rate=vr,
+                      message_set_size=msize)
+    return log, msg
+
+
+def _assert_batches_identical(got, want):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert set(g) == set(w)
+        for k in w:
+            assert g[k].dtype == w[k].dtype
+            # byte-identical, not merely numerically equal
+            assert np.ascontiguousarray(g[k]).tobytes() == \
+                np.ascontiguousarray(w[k]).tobytes()
+
+
+def test_streaming_matches_materialized_byte_identical():
+    """The PR-7 determinism pin: the streaming iterator yields the exact
+    batch sequence of the materialized path (``split()`` +
+    ``BatchIterator(shuffle=False)``) — byte for byte, across epochs and
+    for both splits — so checkpoint fast-forwarding transfers."""
+    from repro.data.pipeline import BatchIterator, StreamingBatchIterator
+
+    log, msg = _ingested()
+    tr, ev = data.StreamDataset(log, msg).split()
+    # fetch_records=13 misaligns every poll against the batch size, so
+    # chunk-boundary assembly (the concat path) is exercised constantly
+    stream = list(StreamingBatchIterator(log, msg, 10, split="train",
+                                         epochs=2, fetch_records=13))
+    ref = list(BatchIterator(tr, 10, shuffle=False, epochs=2))
+    _assert_batches_identical(stream, ref)
+    stream_ev = list(StreamingBatchIterator(log, msg, 12, split="eval",
+                                            epochs=1, fetch_records=7))
+    ref_ev = list(BatchIterator(ev, 12, shuffle=False, epochs=1))
+    _assert_batches_identical(stream_ev, ref_ev)
+    # the StreamDataset.stream() convenience builds the same iterator
+    conv = list(data.StreamDataset(log, msg).stream(10, epochs=2,
+                                                    fetch_records=13))
+    _assert_batches_identical(conv, ref)
+
+
+def test_streaming_fast_forward_is_offset_arithmetic():
+    from repro.data.pipeline import StreamingBatchIterator
+
+    log, msg = _ingested()
+
+    def mk(**kw):
+        return StreamingBatchIterator(log, msg, 10, split="train",
+                                      epochs=2, fetch_records=13, **kw)
+
+    full = list(mk())
+    spe = mk().steps_per_epoch()
+    assert spe == 7 and len(full) == 14
+    # fast-forward past the epoch boundary: resume mid-epoch-2
+    it = mk()
+    it.fast_forward(9)
+    _assert_batches_identical(list(it), full[9:])
+    # cumulative across calls
+    it = mk()
+    it.fast_forward(7)
+    it.fast_forward(2)
+    _assert_batches_identical(list(it), full[9:])
+    # a whole fast-forwarded epoch is skipped with ZERO log reads
+    reads = []
+    orig = log.read
+    log.read = lambda *a, **kw: (reads.append(1), orig(*a, **kw))[1]
+    try:
+        one_epoch = mk()
+        one_epoch.epochs = 1
+        list(one_epoch)
+        per_epoch = len(reads)
+        reads.clear()
+        it = mk()
+        it.fast_forward(spe)  # skip epoch 1 entirely
+        tail = list(it)
+    finally:
+        del log.read
+    assert len(reads) == per_epoch  # only epoch 2 touched the log
+    _assert_batches_identical(tail, full[spe:])
+
+
+def test_short_stream_error_is_typed_and_actionable():
+    from repro.data.pipeline import (
+        BatchIterator, ShortStreamError, StreamingBatchIterator,
+    )
+
+    log, msg = _ingested()  # n_train=75, n_eval=25
+    with pytest.raises(ShortStreamError) as ei:
+        StreamingBatchIterator(log, msg, 80, split="train")
+    assert issubclass(ShortStreamError, ValueError)  # old handlers keep working
+    assert ei.value.n == 75 and ei.value.batch_size == 80
+    assert "batch_size" in str(ei.value)
+    # the eval split names the knob that shrank it
+    with pytest.raises(ShortStreamError, match="validation_rate"):
+        StreamingBatchIterator(log, msg, 30, split="eval")
+    # the host-array iterator raises the same typed error
+    with pytest.raises(ShortStreamError) as ei:
+        BatchIterator({"x": np.arange(5)}, 10)
+    assert ei.value.n == 5 and ei.value.batch_size == 10
+
+
+def test_batch_iterator_delegates_to_streaming_source():
+    from repro.data.pipeline import BatchIterator, StreamingBatchIterator
+
+    log, msg = _ingested()
+
+    def mk():
+        return StreamingBatchIterator(log, msg, 10, split="train",
+                                      epochs=1, fetch_records=13)
+
+    ref = list(mk())
+    it = BatchIterator(mk(), 10, shuffle=False)
+    assert it.steps_per_epoch() == 7
+    _assert_batches_identical(list(it), ref)
+    # a stream is strictly sequential: shuffle must be refused, loudly
+    with pytest.raises(ValueError, match="shuffle"):
+        BatchIterator(mk(), 10)
+    with pytest.raises(ValueError, match="batch_size"):
+        BatchIterator(mk(), 20, shuffle=False)
+
+
+def test_streaming_over_cluster_backend():
+    """iter_range on a BrokerCluster is the leader-routed consumer path:
+    the streaming iterator rides it unchanged and stays byte-identical
+    to the materialized read."""
+    from repro.data.pipeline import BatchIterator, StreamingBatchIterator
+
+    c = core.BrokerCluster(3)
+    c.create_topic("t", core.LogConfig(num_partitions=2,
+                                       replication_factor=3))
+    codec = RawCodec("float32", (3,), "int32", ())
+    n = 60
+    arrays = {
+        "data": np.arange(n * 3, dtype=np.float32).reshape(n, 3),
+        "label": np.arange(n, dtype=np.int32),
+    }
+    msg = data.ingest(c, "t", codec, arrays, "D", validation_rate=0.2,
+                      message_set_size=16)
+    tr, _ = data.StreamDataset(c, msg).split()
+    stream = list(StreamingBatchIterator(c, msg, 8, split="train",
+                                         epochs=1, fetch_records=11))
+    ref = list(BatchIterator(tr, 8, shuffle=False, epochs=1))
+    _assert_batches_identical(stream, ref)
+
+
+def test_device_feed_places_batches_and_matches_serial():
+    import jax
+    from repro.data.pipeline import StreamingBatchIterator, device_feed
+
+    log, msg = _ingested()
+
+    def mk():
+        return StreamingBatchIterator(log, msg, 10, split="train",
+                                      epochs=1, fetch_records=13)
+
+    overlapped = list(device_feed(iter(mk()), depth=2))
+    serial = list(device_feed(iter(mk()), depth=0))  # benchmark baseline
+    assert len(overlapped) == len(serial) == 7
+    for o, s in zip(overlapped, serial):
+        assert all(isinstance(v, jax.Array) for v in o.values())
+        for k in s:
+            np.testing.assert_array_equal(np.asarray(o[k]), np.asarray(s[k]))
