@@ -7,7 +7,7 @@ Two checks, wired into the nightly CI job right after the benchmark run
 * **schema** — the result file must carry every section the benchmark
   writes (``config`` / ``single`` / ``contended`` / ``speedup_4threads``
   / ``idempotent`` / ``transactions`` / ``observability`` /
-  ``controller``) with sane values, so a silently truncated or
+  ``controller`` / ``storage``) with sane values, so a silently truncated or
   hand-edited file fails loudly;
 * **throughput floor** — contended-producer throughput at 4 threads
   (rf=3, acks=all — the PR-2 acceptance configuration) must not regress
@@ -30,7 +30,16 @@ Two checks, wired into the nightly CI job right after the benchmark run
 * **observability overhead** — the metrics-instrumented produce hot path
   (PR-6: latency histograms + per-partition counters) must cost at most
   ``OBS_MAX_OVERHEAD`` (5%) versus the same run's ``metrics_enabled=False``
-  baseline, with the same median-of-paired-runs statistic.
+  baseline, with the same median-of-paired-runs statistic;
+* **recovery speedup** — restart recovery of the producer/txn state
+  table from the newest producer-state snapshot + suffix replay (PR-8,
+  DESIGN.md §11) must beat a full log replay by at least
+  ``MIN_RECOVERY_SPEEDUP`` (2x), median within-pair ratio recomputed
+  from the recorded (replay_s, snapshot_s) timing pairs. The same
+  ``storage`` section also records the ``.txnindex``-vs-full-abort-scan
+  ``read_committed`` prefilter pairs; those are schema-checked (present,
+  positive) but not gated — the win scales with abort-history length,
+  which the fixed benchmark log keeps modest.
 
 With ``--datapath BENCH_datapath.json`` the gate additionally validates
 the broker→device data-path benchmark (PR-7, DESIGN.md §10):
@@ -89,6 +98,11 @@ TXN_MAX_OVERHEAD = 0.25
 # observability tax budget: a metrics-instrumented produce hot path may
 # cost at most this fraction vs the same run's metrics-disabled baseline
 OBS_MAX_OVERHEAD = 0.05
+# restart-recovery floor: snapshot + suffix replay must beat a full log
+# replay by at least this factor on the benchmark's 64-segment log (the
+# quiet-host reading is ~50x; 2x only trips if snapshots stop pinning
+# the replay suffix)
+MIN_RECOVERY_SPEEDUP = 2.0
 
 # broker→device data-path gates (BENCH_datapath.json, PR-7)
 DATAPATH_MIN_DECODE_SPEEDUP = 10.0
@@ -101,7 +115,7 @@ ACCEPTANCE_KEY = "contended_t4_rf3_acksall"
 
 REQUIRED_SECTIONS = ("config", "single", "contended", "speedup_4threads",
                      "idempotent", "transactions", "observability",
-                     "controller")
+                     "controller", "storage")
 REQUIRED_CONTENDED = (
     "contended_t1_rf3_acksall",
     "contended_t4_rf3_acksall",
@@ -142,6 +156,34 @@ def _txn_overhead(txn: dict) -> tuple[float, int] | None:
 
 def _obs_overhead(obs: dict) -> tuple[float, int] | None:
     return _pair_overhead(obs, "instrumented_msgs_per_s")
+
+
+def _pair_speedup(section: dict, slow_key: str,
+                  fast_key: str) -> tuple[float, int] | None:
+    """``(median slow/fast ratio, valid pair count)`` recomputed from a
+    section's recorded timing pairs — never trusted from a stored
+    ``speedup`` a hand-edit could detach from its inputs."""
+    pairs = section.get("pairs")
+    if not isinstance(pairs, list):
+        return None
+    ratios = sorted(
+        p[slow_key] / p[fast_key]
+        for p in pairs
+        if isinstance(p, dict)
+        and p.get(slow_key, 0) > 0
+        and p.get(fast_key, 0) > 0
+    )
+    if not ratios:
+        return None
+    return ratios[len(ratios) // 2], len(ratios)
+
+
+def _recovery_speedup(recovery: dict) -> tuple[float, int] | None:
+    return _pair_speedup(recovery, "replay_s", "snapshot_s")
+
+
+def _txnindex_speedup(txnindex: dict) -> tuple[float, int] | None:
+    return _pair_speedup(txnindex, "fullscan_us", "indexed_us")
 
 
 def _datapath_decode_speedup(decode: dict) -> tuple[float, int] | None:
@@ -375,6 +417,33 @@ def check(results: dict, baseline: float, tolerance: float) -> list[str]:
                 "metrics-disabled baseline"
             )
 
+    storage = results.get("storage", {})
+    storage = storage if isinstance(storage, dict) else {}
+    recovery = storage.get("recovery", {})
+    recovery = recovery if isinstance(recovery, dict) else {}
+    measured = _recovery_speedup(recovery)
+    if measured is None:
+        failures.append(
+            "schema: storage['recovery']['pairs'] missing or holds no "
+            "valid (replay_s, snapshot_s) timing pair"
+        )
+    else:
+        rec_speedup, n_pairs = measured
+        if rec_speedup < MIN_RECOVERY_SPEEDUP:
+            failures.append(
+                f"regression: snapshot+suffix restart recovery is only "
+                f"{rec_speedup:.2f}x a full log replay (median across "
+                f"{n_pairs} pairs), below the "
+                f"{MIN_RECOVERY_SPEEDUP:.0f}x floor"
+            )
+    txnindex = storage.get("txnindex", {})
+    txnindex = txnindex if isinstance(txnindex, dict) else {}
+    if _txnindex_speedup(txnindex) is None:
+        failures.append(
+            "schema: storage['txnindex']['pairs'] missing or holds no "
+            "valid (fullscan_us, indexed_us) timing pair"
+        )
+
     row = contended.get(ACCEPTANCE_KEY)
     if isinstance(row, dict) and row.get("msgs_per_s", 0) > 0:
         got = row["msgs_per_s"]
@@ -442,6 +511,14 @@ def main(argv: list[str] | None = None) -> int:
         f"observability overhead {obs_overhead:+.1%} (budget "
         f"{OBS_MAX_OVERHEAD:.0%}); "
         f"controller failover {fo * 1e3:.1f} ms"
+    )
+    rec_speedup, _ = _recovery_speedup(results["storage"]["recovery"])
+    tix_speedup, _ = _txnindex_speedup(results["storage"]["txnindex"])
+    print(
+        f"check_bench: OK — storage recovery {rec_speedup:.1f}x vs full "
+        f"replay (floor {MIN_RECOVERY_SPEEDUP:.0f}x); read_committed "
+        f"txnindex prefilter {tix_speedup:.2f}x vs abort-list full scan "
+        "(recorded, not gated)"
     )
     if dp_results is not None:
         dec, _ = _datapath_decode_speedup(dp_results["decode"])

@@ -48,6 +48,14 @@ Six sections:
   :func:`bench_observability_run`). ``OBS_REPS`` independent pairs;
   ``benchmarks/check_bench.py`` gates the median within-pair ratio at
   ≤5%.
+* **storage** — storage-engine v2 recovery (DESIGN.md §11): (a)
+  restart recovery of the producer/txn state table from the newest
+  producer-state snapshot + suffix replay vs a full log replay, as
+  back-to-back pairs (``check_bench.py`` gates the median within-pair
+  speedup at ≥2x — the whole point of snapshotting at segment rolls);
+  (b) ``read_committed``'s abort prefilter answering from the spanned
+  segments' ``.txnindex`` vs the pre-PR-8 partition-wide abort-list
+  scan, recorded as pairs for trend tracking.
 * **controller** — quorum-controller failover latency: with the
   replication daemon ticking the control plane, kill the controller
   leader AND a partition leader in the same tick (the partition election
@@ -101,6 +109,16 @@ OBS_BASE_BATCHES = 200  # acceptance-config baseline batches per run
 CTRL_REPS = 5
 CTRL_LEASE_S = 0.05
 CTRL_DAEMON_INTERVAL_S = 0.002
+
+# storage section: segments of idempotent traffic for the recovery pair,
+# aborted transactions for the txnindex pair
+STORAGE_SEGMENTS = 64
+STORAGE_BATCH = 32  # records per segment (segment_bytes sized to match)
+STORAGE_RECORD_BYTES = 64
+STORAGE_REPS = 5
+STORAGE_REBUILDS = 20  # rebuilds per timed side (amplifies sub-ms cost)
+STORAGE_TXNS = 400  # aborted/committed transactions on the txnindex log
+STORAGE_READS = 200  # tail-window read_committed reads per timed side
 
 OUT_JSON = "BENCH_replication.json"
 
@@ -522,6 +540,115 @@ def bench_controller_failover() -> dict[str, float]:
     }
 
 
+def bench_storage_recovery_pairs(reps: int = STORAGE_REPS) -> dict:
+    """Restart recovery: rebuild the producer/txn state table from the
+    newest producer-state snapshot + suffix replay vs a full replay from
+    the log start, on the same log (``STORAGE_SEGMENTS`` segments of
+    idempotent traffic — recovery work the dedup table actually pays).
+    Back-to-back pairs, so host drift cancels out of the ratio."""
+    log = StreamLog()
+    log.create_topic("bench", LogConfig(
+        num_partitions=1,
+        segment_bytes=STORAGE_BATCH * STORAGE_RECORD_BYTES,
+    ))
+    seq = 0
+    payload = [bytes(STORAGE_RECORD_BYTES)] * STORAGE_BATCH
+    for _ in range(STORAGE_SEGMENTS):
+        log.producer_append("bench", 0, payload, None, 0,
+                            pid=1, epoch=0, seq=seq)
+        seq += STORAGE_BATCH
+    part = log._partition("bench", 0)
+    assert part.snapshots, "no producer-state snapshots were taken"
+    pairs: list[dict[str, float]] = []
+    for _ in range(reps):
+        saved = part.snapshots
+        part.snapshots = []  # force the full-replay path
+        t0 = time.perf_counter()
+        for _ in range(STORAGE_REBUILDS):
+            part._rebuild_producer_state()
+        replay_s = (time.perf_counter() - t0) / STORAGE_REBUILDS
+        part.snapshots = saved  # snapshot + suffix replay
+        t0 = time.perf_counter()
+        for _ in range(STORAGE_REBUILDS):
+            part._rebuild_producer_state()
+        snapshot_s = (time.perf_counter() - t0) / STORAGE_REBUILDS
+        pairs.append({"replay_s": replay_s, "snapshot_s": snapshot_s})
+    speedups = sorted(p["replay_s"] / p["snapshot_s"] for p in pairs)
+    return {
+        "pairs": pairs,
+        "replay_full": {"best_s": min(p["replay_s"] for p in pairs)},
+        "snapshot_suffix": {"best_s": min(p["snapshot_s"] for p in pairs)},
+        "speedup": speedups[len(speedups) // 2],  # median
+        "config": {
+            "segments": STORAGE_SEGMENTS,
+            "records": STORAGE_SEGMENTS * STORAGE_BATCH,
+            "rebuilds_per_side": STORAGE_REBUILDS,
+            "reps": reps,
+        },
+    }
+
+
+def bench_storage_txnindex_pairs(reps: int = STORAGE_REPS) -> dict:
+    """read_committed abort prefilter: the per-segment ``.txnindex``
+    (consults only the segments a read spans) vs the pre-PR-8
+    partition-wide abort-list scan, on a log carrying ``STORAGE_TXNS``
+    resolved transactions. Each timed side serves ``STORAGE_READS``
+    tail-window reads; the fullscan side re-runs the old prefilter (a
+    pass over the whole abort history) on top of the same read."""
+    log = StreamLog()
+    log.create_topic("bench", LogConfig(
+        num_partitions=1,
+        segment_bytes=STORAGE_BATCH * STORAGE_RECORD_BYTES,
+    ))
+    for i in range(STORAGE_TXNS):
+        log.producer_append(
+            "bench", 0, [bytes(STORAGE_RECORD_BYTES)], None, 0,
+            pid=7, epoch=0, seq=i, txn=True,
+        )
+        log.append_control("bench", 0, 7, 0, abort=(i % 2 == 0))
+    part = log._partition("bench", 0)
+    assert len(part.aborted) == STORAGE_TXNS // 2
+    lo = max(0, log.end_offset("bench", 0) - STORAGE_BATCH)
+    hi = lo + STORAGE_BATCH
+
+    def old_prefilter() -> dict:
+        # the pre-.txnindex path: every read walked the partition-wide
+        # abort history to collect ranges overlapping its window
+        ranges: dict[int, list[tuple[int, int]]] = {}
+        for pid, first, marker in part.aborted:
+            if first < hi and marker > lo:
+                ranges.setdefault(pid, []).append((first, marker))
+        return ranges
+
+    pairs: list[dict[str, float]] = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(STORAGE_READS):
+            log.read("bench", 0, lo, STORAGE_BATCH,
+                     isolation="read_committed")
+        indexed_us = (time.perf_counter() - t0) * 1e6 / STORAGE_READS
+        t0 = time.perf_counter()
+        for _ in range(STORAGE_READS):
+            old_prefilter()
+            log.read("bench", 0, lo, STORAGE_BATCH,
+                     isolation="read_committed")
+        fullscan_us = (time.perf_counter() - t0) * 1e6 / STORAGE_READS
+        pairs.append({"indexed_us": indexed_us, "fullscan_us": fullscan_us})
+    speedups = sorted(p["fullscan_us"] / p["indexed_us"] for p in pairs)
+    return {
+        "pairs": pairs,
+        "indexed": {"best_us": min(p["indexed_us"] for p in pairs)},
+        "fullscan": {"best_us": min(p["fullscan_us"] for p in pairs)},
+        "speedup": speedups[len(speedups) // 2],  # median
+        "config": {
+            "transactions": STORAGE_TXNS,
+            "reads_per_side": STORAGE_READS,
+            "window_records": STORAGE_BATCH,
+            "reps": reps,
+        },
+    }
+
+
 def main() -> None:
     results: dict = {
         "config": {
@@ -612,6 +739,16 @@ def main() -> None:
         "replication_rf3_acksall_instrumented", obs["s_per_batch"],
         f"{obs['MB_per_s']:.0f}MB/s_{overhead * 100:+.1f}%_overhead",
     )
+
+    # storage engine v2: restart-recovery snapshot-vs-replay pairs
+    # (gated >=2x) and the txnindex-vs-fullscan read_committed prefilter
+    rec = bench_storage_recovery_pairs()
+    tx = bench_storage_txnindex_pairs()
+    results["storage"] = {"recovery": rec, "txnindex": tx}
+    _row("storage_recovery_snapshot", rec["snapshot_suffix"]["best_s"],
+         f"{rec['speedup']:.1f}x_vs_full_replay")
+    _row("storage_txnindex_read", tx["indexed"]["best_us"] / 1e6,
+         f"{tx['speedup']:.1f}x_vs_abortlist_fullscan")
 
     # controller-leader + partition-leader double-kill failover latency
     fo = bench_controller_failover()

@@ -40,6 +40,10 @@ def main():
         [FieldSpec("data", "float32", (copd_mlp.N_FEATURES,))],
         [FieldSpec("label", "int32", ())],
     )
+    # training data is append-only; keyed state (e.g. a feature or
+    # model-version topic) would use cleanup="compact" instead — the
+    # storage engine keeps the latest record per key at a stable offset
+    # and drops superseded history (DESIGN §11)
     log.create_topic("copd", core.LogConfig(num_partitions=2))
     dataset = copd_mlp.synth_dataset()
     # two idempotent producer threads, one per partition: client retries

@@ -1095,8 +1095,8 @@ class BrokerCluster:
                     # carries its ctrl metadata verbatim, so follower txn
                     # state and timestamps track the leader's exactly;
                     # any lagging follower falls back to a full pass
-                    vals, keys, ts, prods = leader.log.replica_fetch(
-                        topic, partition, off, 1
+                    vals, keys, ts, prods, _offs, _nxt, sbase = (
+                        leader.log.replica_fetch(topic, partition, off, 1)
                     )
                     need_full = self._legacy
                     for bid in sorted(ctl.isr):
@@ -1111,7 +1111,8 @@ class BrokerCluster:
                             need_full = True
                             continue
                         fbr.log.replica_append(
-                            topic, partition, vals, keys, ts, prods=prods
+                            topic, partition, vals, keys, ts, prods=prods,
+                            seg_base=sbase,
                         )
                     if need_full:
                         self._replicate_partition(ctl)
@@ -1333,22 +1334,37 @@ class BrokerCluster:
                     # drop everything and re-fetch from the leader's log start
                     local_end = br.log.reset_to(ctl.topic, ctl.partition, lstart)
                 while local_end < leo:
-                    values, keys, timestamps, prods = leader.log.replica_fetch(
-                        ctl.topic, ctl.partition, local_end, _REPLICA_FETCH_CHUNK
+                    values, keys, timestamps, prods, offs, nxt, sbase = (
+                        leader.log.replica_fetch(
+                            ctl.topic, ctl.partition, local_end,
+                            _REPLICA_FETCH_CHUNK,
+                        )
                     )
-                    if not values:
+                    if nxt <= local_end:
                         break
-                    br.log.replica_append(
-                        ctl.topic, ctl.partition, values, keys, timestamps,
-                        prods=prods,
-                    )
-                    local_end += len(values)
-                    copied += len(values)
-                if local_end == leo:
+                    if values:
+                        br.log.replica_append(
+                            ctl.topic, ctl.partition, values, keys,
+                            timestamps, prods=prods, offsets=offs,
+                            seg_base=sbase,
+                        )
+                        copied += len(values)
+                    # advance by the covered raw window, not the record
+                    # count — a compacted range can deliver fewer records
+                    # than offsets (or none at all)
+                    local_end = nxt
+                if local_end >= leo:
                     new_isr.add(bid)
                     ctl.synced_epoch[bid] = ctl.epoch
                 else:
                     new_isr.discard(bid)
+                # propagate the leader's compact point: the keep rule is
+                # deterministic over the replicated records, so followers
+                # cleaning to the same horizon converge on the same
+                # surviving records (DESIGN.md §11)
+                cp = leader.log.compact_point(ctl.topic, ctl.partition)
+                if cp > br.log.compact_point(ctl.topic, ctl.partition):
+                    br.log.compact_to(ctl.topic, ctl.partition, cp)
             new_isr.add(ctl.leader)
             ctl.synced_epoch[ctl.leader] = ctl.epoch
             if copied and self.metrics.enabled:

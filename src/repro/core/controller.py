@@ -38,6 +38,14 @@ design the paper's availability claims actually need:
   leader is replaced immediately. A deposed leader's late writes are
   fenced twice over: it cannot reach a majority, and any node that
   observed a higher term rejects its entries outright.
+* **Snapshots + install (DESIGN.md §11).** A long-lived quorum folds its
+  applied committed prefix into a snapshot (``ControllerNode.snap_*``):
+  superseded per-partition commands collapse to the newest one, barriers
+  drop, and the node's metadata log physically restarts at the snapshot
+  index (offsets stay Raft indexes). A follower missing the folded
+  prefix — or conflicting below it — receives InstallSnapshot before
+  normal AppendEntries resumes, so restarted controllers recover from
+  snapshot + suffix replay instead of full history.
 
 The controller is a pure consensus module: it never touches partition or
 cluster-metadata locks. :class:`~repro.core.cluster.BrokerCluster`
@@ -157,6 +165,45 @@ def _is_barrier(cmd: MetadataCommand) -> bool:
     return cmd.kind == "noop" and cmd.note is None
 
 
+# Auto-snapshot thresholds: fold once the applied committed prefix
+# exceeds _SNAPSHOT_ENTRIES live entries, keeping the newest
+# _SNAPSHOT_RETAIN committed entries un-folded (recent history stays
+# individually addressable for reconciliation and debugging).
+_SNAPSHOT_ENTRIES = 1024
+_SNAPSHOT_RETAIN = 256
+
+
+def _fold_commands(cmds: list[MetadataCommand]) -> list[MetadataCommand]:
+    """Collapse a committed command prefix to its net effect, order
+    preserved. Deliberately conservative: only commands whose application
+    is last-writer-wins are folded — ``register_broker`` (latest per
+    broker) and the ``pversion``-guarded partition commands
+    ``elect_leader``/``shrink_isr``/``expand_isr`` (latest per kind and
+    partition, so a trailing ISR change never erases the leader/epoch the
+    preceding election carries). Everything else — topic lifecycle,
+    ``allocate_pid`` (an epoch-bump grant carries no ``name``; folding
+    would lose the name→pid binding), the transaction-coordinator
+    commands, tagged no-ops — replays verbatim. Barriers drop."""
+    last: dict[tuple, int] = {}
+    for i, c in enumerate(cmds):
+        if c.kind == "register_broker":
+            last[("register_broker", c.broker_id)] = i
+        elif c.kind in ("elect_leader", "shrink_isr", "expand_isr"):
+            last[(c.kind, c.topic, c.partition)] = i
+    out = []
+    for i, c in enumerate(cmds):
+        if _is_barrier(c):
+            continue
+        if c.kind == "register_broker":
+            if last[("register_broker", c.broker_id)] != i:
+                continue
+        elif c.kind in ("elect_leader", "shrink_isr", "expand_isr"):
+            if last[(c.kind, c.topic, c.partition)] != i:
+                continue
+        out.append(c)
+    return out
+
+
 @dataclass(frozen=True)
 class LogEntry:
     """One committed metadata-log entry as handed to the state machine."""
@@ -174,12 +221,21 @@ class ControllerNode:
     killed node that restarts keeps its durable state (log, term, vote),
     exactly the persistence Raft assumes.
 
+    Snapshot state (DESIGN.md §11): entries below ``snap_index`` have
+    been folded into ``snap_commands`` (their net effect, order
+    preserved); ``snap_term`` is the term of the boundary entry
+    ``snap_index - 1``, which is all AppendEntries consistency checks
+    need about the folded prefix (Raft's Log Matching Property: a
+    matching boundary entry implies the whole prefix matched).
+    ``_terms`` covers only the live suffix ``[snap_index, end())``.
+
     ``alive`` models a crashed controller process; ``reachable`` models a
     network partition. Either way the node is invisible to its peers.
     """
 
     __slots__ = ("node_id", "term", "voted_for", "won_term", "log", "_terms",
-                 "commit_count", "alive", "reachable")
+                 "commit_count", "alive", "reachable",
+                 "snap_index", "snap_term", "snap_commands")
 
     def __init__(self, node_id: int, clock: Callable[[], float] | None = None):
         self.node_id = node_id
@@ -193,8 +249,11 @@ class ControllerNode:
         self.won_term = -1
         self.log = StreamLog(clock=clock)
         self.log.create_topic(METADATA_TOPIC, LogConfig(num_partitions=1))
-        self._terms: list[int] = []  # term of entry i (in-memory index)
+        self._terms: list[int] = []  # term of live entry i - snap_index
         self.commit_count = 0  # entries [0, commit_count) are committed
+        self.snap_index = 0  # entries below this are folded into the snapshot
+        self.snap_term = 0  # term of entry snap_index - 1
+        self.snap_commands: list[MetadataCommand] = []
         self.alive = True
         self.reachable = True
 
@@ -203,33 +262,98 @@ class ControllerNode:
         return self.alive and self.reachable
 
     def end(self) -> int:
-        return len(self._terms)
+        return self.snap_index + len(self._terms)
 
     def last_term(self) -> int:
-        return self._terms[-1] if self._terms else 0
+        return self._terms[-1] if self._terms else self.snap_term
+
+    def term_at(self, index: int) -> int:
+        """Term of entry ``index`` — the boundary entry just below the
+        snapshot answers from ``snap_term``; anything deeper is folded
+        away (and never needed: folded entries are committed, and
+        committed prefixes agree by Leader Completeness)."""
+        if index == self.snap_index - 1:
+            return self.snap_term
+        return self._terms[index - self.snap_index]
 
     def append(self, term: int, cmd: MetadataCommand) -> int:
         """Append one entry; returns its index (== StreamLog offset)."""
         _p, offset = self.log.produce(METADATA_TOPIC, cmd.to_bytes(term))
-        assert offset == len(self._terms)
+        assert offset == self.end()
         self._terms.append(term)
         return offset
 
     def entry(self, index: int) -> LogEntry:
+        if index < self.snap_index:
+            raise LookupError(
+                f"entry {index} folded into snapshot @ {self.snap_index}"
+            )
         rec = self.log.read_one(METADATA_TOPIC, 0, index)
         term, cmd = MetadataCommand.from_bytes(rec.value)
         return LogEntry(term=term, index=index, command=cmd)
 
-    def entries(self, start: int = 0, stop: int | None = None) -> Iterator[LogEntry]:
+    def entries(
+        self, start: int | None = None, stop: int | None = None
+    ) -> Iterator[LogEntry]:
+        """Live (non-folded) entries in ``[start, stop)``; ``start``
+        defaults to the snapshot boundary."""
+        start = self.snap_index if start is None else start
         stop = self.end() if stop is None else stop
-        for i in range(start, stop):
+        for i in range(max(start, self.snap_index), stop):
             yield self.entry(i)
 
     def truncate(self, index: int) -> None:
-        """Drop entries at ``index`` and beyond (conflict reconciliation)."""
+        """Drop entries at ``index`` and beyond (conflict reconciliation).
+        Never reaches into the snapshot: folded entries are committed,
+        and Raft never truncates committed entries."""
+        assert index >= self.snap_index
         self.log.truncate_to(METADATA_TOPIC, 0, index)
-        del self._terms[index:]
+        del self._terms[index - self.snap_index:]
         self.commit_count = min(self.commit_count, index)
+
+    def install_snapshot(
+        self, index: int, term: int, commands: list[MetadataCommand]
+    ) -> None:
+        """Replace this node's log wholesale with a leader's snapshot
+        (Raft InstallSnapshot): the local log restarts empty at ``index``
+        — StreamLog offsets stay Raft indexes — and AppendEntries copies
+        the live suffix afterwards."""
+        self.snap_index = index
+        self.snap_term = term
+        self.snap_commands = list(commands)
+        self.log.reset_to(METADATA_TOPIC, 0, index)
+        self._terms = []
+        self.commit_count = index  # a snapshot only ever covers committed
+
+    def compact_to_snapshot(
+        self, upto: int, folded: list[MetadataCommand]
+    ) -> None:
+        """Fold this node's own prefix ``[snap_index, upto)`` into the
+        snapshot and physically drop it from the log: the live suffix is
+        re-appended into a log restarted at ``upto``, so offsets still
+        equal Raft indexes. Caller provides the folded commands and
+        guarantees the prefix is committed and applied."""
+        boundary = self.term_at(upto - 1)
+        windows = []  # fetch is capped per segment: gather the suffix
+        pos, end = upto, self.end()
+        while pos < end:
+            vals, keys, ts, prods, offs, nxt, _ = self.log.replica_fetch(
+                METADATA_TOPIC, 0, pos, end - pos
+            )
+            if nxt <= pos:
+                break
+            if vals:
+                windows.append((vals, keys, ts, prods, offs))
+            pos = nxt
+        self.log.reset_to(METADATA_TOPIC, 0, upto)
+        for vals, keys, ts, prods, offs in windows:
+            self.log.replica_append(
+                METADATA_TOPIC, 0, vals, keys, ts, prods=prods, offsets=offs
+            )
+        self._terms = self._terms[upto - self.snap_index:]
+        self.snap_commands = folded
+        self.snap_term = boundary
+        self.snap_index = upto
 
 
 class QuorumController:
@@ -267,6 +391,8 @@ class QuorumController:
         self.elections = 0  # completed leadership changes (observability)
         self.term_changes = 0  # election rounds that bumped the term
         self.quorum_rpcs = 0  # AppendEntries-shaped node-to-node calls
+        self.snapshots_taken = 0  # leader-side log folds
+        self.snapshot_installs = 0  # InstallSnapshot pushes to followers
         # last-observed leader for read-only metadata queries: unlike
         # ``leader_id`` (reset to None on fencing/deposal) this sticks
         # around, so reads keep routing to one node instead of probing
@@ -328,7 +454,9 @@ class QuorumController:
             if ldr is None or not ldr.up:
                 return 0
             return sum(
-                1 for i in range(ldr.commit_count) if i not in self._applied
+                1
+                for i in range(ldr.snap_index, ldr.commit_count)
+                if i not in self._applied
             )
 
     def describe(self) -> dict:
@@ -340,12 +468,15 @@ class QuorumController:
                 "quorum_rpcs": self.quorum_rpcs,
                 "observed_reads": self.observed_reads,
                 "probe_reads": self.probe_reads,
+                "snapshots_taken": self.snapshots_taken,
+                "snapshot_installs": self.snapshot_installs,
                 "lease_until": self._lease_until,
                 "nodes": {
                     n.node_id: {
                         "term": n.term,
                         "end": n.end(),
                         "commit": n.commit_count,
+                        "snap_index": n.snap_index,
                         "alive": n.alive,
                         "reachable": n.reachable,
                     }
@@ -459,25 +590,49 @@ class QuorumController:
         if f.term > ldr.term:
             return False  # higher term: the caller must step down
         f.term = ldr.term
+        if ldr.snap_index > f.snap_index and (
+            f.end() < ldr.snap_index
+            or f.term_at(ldr.snap_index - 1) != ldr.snap_term
+        ):
+            # the follower is missing — or conflicts inside — the prefix
+            # the leader folded away: InstallSnapshot, then AppendEntries
+            # resumes for the live suffix
+            self.snapshot_installs += 1
+            f.install_snapshot(
+                ldr.snap_index, ldr.snap_term, ldr.snap_commands
+            )
         # longest common prefix by entry term (logs are small — the
-        # in-memory term index makes this a list comparison)
+        # in-memory term index makes this a list comparison). Entries
+        # below both snapshot boundaries are committed on both sides and
+        # agree by Leader Completeness; the comparison starts above them.
+        lo = max(ldr.snap_index, f.snap_index)
         n = min(f.end(), ldr.end())
         common = n
-        for i in range(n):
-            if f._terms[i] != ldr._terms[i]:
+        for i in range(lo, n):
+            if f.term_at(i) != ldr.term_at(i):
                 common = i
                 break
         if f.end() > common:
             f.truncate(common)
         if common < ldr.end():
-            values, keys, timestamps, prods = ldr.log.replica_fetch(
-                METADATA_TOPIC, 0, common, ldr.end() - common
-            )
-            f.log.replica_append(
-                METADATA_TOPIC, 0, values, keys, timestamps, prods=prods
-            )
-            f._terms.extend(ldr._terms[common:])
-        f.commit_count = min(ldr.commit_count, f.end())
+            pos, end = common, ldr.end()
+            while pos < end:  # fetch is capped per segment: loop
+                values, keys, timestamps, prods, offs, nxt, sbase = (
+                    ldr.log.replica_fetch(METADATA_TOPIC, 0, pos, end - pos)
+                )
+                if nxt <= pos:
+                    break
+                if values:
+                    f.log.replica_append(
+                        METADATA_TOPIC, 0, values, keys, timestamps,
+                        prods=prods, offsets=offs, seg_base=sbase,
+                    )
+                pos = nxt
+            f._terms.extend(ldr._terms[common - ldr.snap_index:])
+        # never below the snapshot boundary (a snapshot covers committed
+        # entries only — a new leader whose commit index lags behind an
+        # old quorum's snapshot catches up at its first barrier commit)
+        f.commit_count = max(f.snap_index, min(ldr.commit_count, f.end()))
         return True
 
     def _heartbeat_locked(self, ldr: ControllerNode) -> bool:
@@ -523,6 +678,11 @@ class QuorumController:
             if ldr is not None and ldr.up and ldr.won_term == ldr.term:
                 self._heartbeat_locked(ldr)
                 if self.leader_id == ldr.node_id:
+                    # steady-state housekeeping: fold a long applied
+                    # prefix so restarts replay a snapshot + short
+                    # suffix, not the full history
+                    if ldr.commit_count - ldr.snap_index > _SNAPSHOT_ENTRIES:
+                        self._snapshot_locked(ldr, _SNAPSHOT_RETAIN)
                     return False
                 # fenced mid-heartbeat: fall through to re-elect
             elif (
@@ -630,7 +790,10 @@ class QuorumController:
             if ldr is None or not ldr.up:
                 return []
             out = []
-            for i in range(ldr.commit_count):
+            # folded entries (below snap_index) are applied by the
+            # snapshot-creation precondition — only the live tail can
+            # hold backlog
+            for i in range(ldr.snap_index, ldr.commit_count):
                 if i in self._applied:
                     continue
                 entry = ldr.entry(i)
@@ -640,7 +803,9 @@ class QuorumController:
             return out
 
     def committed_commands(self) -> list[MetadataCommand]:
-        """The committed metadata log (minus no-ops), from the leader."""
+        """The committed metadata log (minus no-ops), from the leader:
+        the snapshot's folded commands followed by the live committed
+        suffix — the replay a fresh state machine consumes."""
         with self._lock:
             ldr = (
                 self.nodes.get(self.leader_id)
@@ -649,8 +814,45 @@ class QuorumController:
             )
             if ldr is None:
                 return []
-            return [
+            out = [c for c in ldr.snap_commands if not _is_barrier(c)]
+            out.extend(
                 e.command
-                for e in ldr.entries(0, ldr.commit_count)
+                for e in ldr.entries(ldr.snap_index, ldr.commit_count)
                 if not _is_barrier(e.command)
-            ]
+            )
+            return out
+
+    # ------------------------------------------------------------- snapshots
+    def snapshot(self, retain: int = _SNAPSHOT_RETAIN) -> bool:
+        """Fold the leader's applied committed prefix into a snapshot,
+        keeping the newest ``retain`` committed entries live. Returns
+        True when a fold happened. Followers receive the snapshot via
+        InstallSnapshot on their next AppendEntries only if they diverge
+        below the boundary; an up-to-date follower just keeps its own
+        (longer) log until it snapshots too."""
+        with self._lock:
+            ldr = (
+                self.nodes.get(self.leader_id)
+                if self.leader_id is not None
+                else None
+            )
+            if ldr is None or not ldr.up or ldr.won_term != ldr.term:
+                return False
+            return self._snapshot_locked(ldr, retain)
+
+    def _snapshot_locked(self, ldr: ControllerNode, retain: int) -> bool:
+        limit = ldr.commit_count - retain
+        # fold only entries the state machine has consumed: a snapshot
+        # claims its prefix is applied, so stop at the first un-applied
+        upto = ldr.snap_index
+        while upto < limit and upto in self._applied:
+            upto += 1
+        if upto <= ldr.snap_index:
+            return False
+        folded = _fold_commands(
+            ldr.snap_commands
+            + [e.command for e in ldr.entries(ldr.snap_index, upto)]
+        )
+        ldr.compact_to_snapshot(upto, folded)
+        self.snapshots_taken += 1
+        return True

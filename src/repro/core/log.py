@@ -8,10 +8,22 @@ Implements the semantics Kafka-ML relies on (paper §II, §V):
   consumers can re-read ranges — this is what lets Kafka-ML replay a
   training stream to a new deployment with a tens-of-bytes control message
   instead of re-sending the data;
-* **delete retention policy** with ``retention_bytes`` / ``retention_ms``
-  (paper §V lists exactly these two knobs; compact policy intentionally
-  not offered, as the paper argues delete is the right policy for ML
-  streams);
+* **retention policies**: ``delete`` with ``retention_bytes`` /
+  ``retention_ms`` (paper §V lists exactly these two knobs) and, since
+  storage engine v2 (DESIGN.md §11), ``compact`` for keyed topics — a
+  cleaner rewrites sealed segments keeping the latest record per key
+  (tombstones are empty-valued keyed records, removed after a grace
+  window), while surviving records keep their original offsets;
+* **per-segment sparse indexes**: offset/timestamp index entries every
+  ``index_interval_bytes`` (``offset_for_timestamp`` lookups) and an
+  aborted-transaction index (Kafka's ``.txnindex``) so read_committed's
+  abort prefilter touches only the segments a read actually spans;
+* **state snapshots**: each partition snapshots its producer/transaction
+  state at segment rolls and compaction horizons, so post-truncation
+  rebuilds restore the newest snapshot at or below the truncation point
+  and replay only the suffix — byte-identical to a full replay, and the
+  only correct rebuild on a compacted log (cleaned records no longer
+  replay);
 * message-set (batched) appends amortize per-record overhead — the paper's
   "message set abstraction";
 * zero-copy reads: records are returned as memoryviews into segment
@@ -101,6 +113,11 @@ class OutOfOrderSequence(RuntimeError):
 # for pipelined producers (Kafka keeps 5 batch metadata entries).
 _MAX_PRODUCER_RUNS = 8
 
+# Producer-state snapshots retained per partition (beyond the pinned
+# snapshot at the compaction point, which is load-bearing and never
+# evicted — see _Partition._trim_snapshots).
+_MAX_PRODUCER_SNAPSHOTS = 8
+
 # Per-record control/transaction flag values (the ``ctrls`` arrays):
 # 0 = plain record, 1 = transactional data record, 2 = COMMIT marker,
 # 3 = ABORT marker. Markers are control records: they occupy offsets and
@@ -166,6 +183,14 @@ class _ProducerState:
                 return first, first + n - 1
         return None
 
+    def clone(self) -> "_ProducerState":
+        """Deep copy for producer-state snapshots (runs are mutable)."""
+        c = _ProducerState(self.epoch)
+        c.last_seq = self.last_seq
+        c.last_ts = self.last_ts
+        c.runs = [list(r) for r in self.runs]
+        return c
+
 
 def default_partition(
     keys: Sequence[bytes | None] | None, nparts: int, now_ms: int
@@ -221,6 +246,22 @@ class LogConfig:
     retention_bytes: int | None = None
     retention_ms: int | None = None
     segment_bytes: int = 8 * 1024 * 1024  # roll segments at this size
+    # cleanup policy: "delete" evicts whole head segments by size/age;
+    # "compact" (keyed topics, DESIGN.md §11) rewrites sealed segments
+    # keeping the latest record per key — offsets stay stable, reads skip
+    # the holes. Size/age eviction is disabled under compact.
+    cleanup: str = "delete"
+    # compact only: how long a tombstone (empty value, non-None key)
+    # survives after it becomes the latest record for its key, measured
+    # in *stream time* (the max retained record timestamp below the
+    # compaction horizon) so every replica cleans identically
+    tombstone_retention_ms: int = 24 * 60 * 60 * 1000
+    # compact only: dirty (newly appended) bytes that trigger the inline
+    # cleaner on a bare log; None ⇒ one segment's worth
+    min_cleanable_bytes: int | None = None
+    # sparse index granularity: one offset/time index entry per this many
+    # payload bytes in a segment (Kafka's index.interval.bytes)
+    index_interval_bytes: int = 4096
     # replication: honored by repro.core.cluster.BrokerCluster; a bare
     # single-host StreamLog keeps these as bookkeeping only. None means
     # "backend default" (1 on a bare log; the cluster's configured defaults
@@ -261,9 +302,18 @@ class _Segment:
         "created_ms",
         "_spill_file",
         "logical_bytes",
+        "offsets",
+        "index_every",
+        "index_offsets",
+        "index_times",
+        "_index_next",
+        "max_ts",
+        "txn_index",
     )
 
-    def __init__(self, base_offset: int, created_ms: int):
+    def __init__(
+        self, base_offset: int, created_ms: int, index_every: int = 4096
+    ):
         self.base_offset = base_offset
         # the payload buffer over-allocates (doubling growth) and tracks the
         # written prefix in buf_len: appends are a single in-place slice
@@ -305,6 +355,25 @@ class _Segment:
         # retained payload bytes when the physical buffers can't shrink
         # (truncation inside a sealed mmap-backed segment); None = physical
         self.logical_bytes: int | None = None
+        # per-record logical offsets; None ⇒ contiguous from base_offset.
+        # Materialized the first time a compaction rewrite (or a replica
+        # fetch of compacted records) leaves holes in the offset sequence.
+        self.offsets: list[int] | None = None
+        # sparse offset/time index (DESIGN.md §11): one entry per
+        # ~index_every payload bytes. index_offsets holds (rel_record,
+        # byte_pos); index_times holds (timestamp_ms, rel_record), kept
+        # non-decreasing in timestamp (out-of-order stamps are skipped,
+        # Kafka's .timeindex rule).
+        self.index_every = index_every
+        self.index_offsets: list[tuple[int, int]] = []
+        self.index_times: list[tuple[int, int]] = []
+        self._index_next = index_every
+        self.max_ts = 0  # newest record timestamp (segment-skip key)
+        # aborted-transaction index (Kafka's .txnindex): (pid, first,
+        # marker) ranges overlapping this segment, stamped when an ABORT
+        # marker lands — read_committed's prefilter consults only the
+        # segments a read spans instead of the partition-wide abort list
+        self.txn_index: list[tuple[int, int, int]] = []
 
     @property
     def size_bytes(self) -> int:
@@ -314,7 +383,31 @@ class _Segment:
 
     @property
     def last_offset(self) -> int:
+        if self.offsets:
+            return self.offsets[-1]
         return self.base_offset + self.count - 1
+
+    @property
+    def next_offset(self) -> int:
+        return self.last_offset + 1
+
+    def off(self, rel: int) -> int:
+        """Logical offset of relative record ``rel``."""
+        if self.offsets is not None:
+            return self.offsets[rel]
+        return self.base_offset + rel
+
+    def rel_range(self, lo_off: int, hi_off: int) -> tuple[int, int]:
+        """Relative record window covering logical offsets
+        ``[lo_off, hi_off)`` — bisect on the offsets array when the
+        segment has holes, arithmetic when it is contiguous."""
+        if self.offsets is None:
+            lo = max(lo_off - self.base_offset, 0)
+            hi = max(min(hi_off - self.base_offset, self.count), lo)
+            return lo, hi
+        lo = bisect.bisect_left(self.offsets, lo_off)
+        hi = bisect.bisect_left(self.offsets, hi_off)
+        return lo, hi
 
     def append_batch(
         self,
@@ -322,16 +415,38 @@ class _Segment:
         keys: Sequence[bytes | None] | None,
         timestamp_ms: int | Sequence[int],
         prods: tuple[Sequence[int], Sequence[int], Sequence[int]] | None = None,
+        offsets: Sequence[int] | None = None,
     ) -> None:
         """Append one message set in bulk: one ``join`` into the shared
         buffer plus list extends, instead of a per-record Python loop —
         the hot path of every produce and every replica push.
 
         ``prods`` is per-record producer metadata ``(pids, epochs, seqs)``
-        (parallel sequences); None extends the non-idempotent sentinel."""
+        (parallel sequences); None extends the non-idempotent sentinel.
+        ``offsets`` assigns explicit (ascending) logical offsets — the
+        compaction rewrite / gapped-replica-fetch path; a contiguous run
+        starting at the segment's next offset stays on the dense layout."""
         n = len(values)
         if n == 0:
             return
+        if offsets is not None:
+            if (
+                self.offsets is None
+                and offsets[0] == self.next_offset
+                and offsets[-1] - offsets[0] + 1 == n
+            ):
+                offsets = None  # contiguous continuation: stay dense
+            elif self.offsets is None:
+                # first hole: materialize the dense prefix
+                self.offsets = list(
+                    range(self.base_offset, self.base_offset + self.count)
+                )
+        if self.offsets is not None:
+            if offsets is None:
+                start = self.next_offset
+                self.offsets.extend(range(start, start + n))
+            else:
+                self.offsets.extend(offsets)
         pos = self.buf_len
         lens = list(map(len, values))
         starts = list(itertools.accumulate(lens, initial=pos))
@@ -366,8 +481,26 @@ class _Segment:
                     kpos += len(k)
         if isinstance(timestamp_ms, int):
             self.timestamps.extend([timestamp_ms] * n)
+            if timestamp_ms > self.max_ts:
+                self.max_ts = timestamp_ms
         else:
             self.timestamps.extend(timestamp_ms)
+            m = max(timestamp_ms)
+            if m > self.max_ts:
+                self.max_ts = m
+        # sparse offset/time index entries: one per ~index_every payload
+        # bytes. Amortized — between crossings there is zero per-record
+        # work, and a crossing costs one bisect per entry, not a scan.
+        if starts and starts[-1] >= self._index_next:
+            ts_all = self.timestamps
+            while self._index_next <= starts[-1]:
+                i = bisect.bisect_left(starts, self._index_next)
+                rel = self.count + i
+                self.index_offsets.append((rel, starts[i]))
+                t = ts_all[rel]
+                if not self.index_times or t >= self.index_times[-1][0]:
+                    self.index_times.append((t, rel))
+                self._index_next = starts[i] + self.index_every
         ctrls = prods[3] if prods is not None and len(prods) > 3 else None
         if prods is not None:
             if self.pids is None:
@@ -403,7 +536,7 @@ class _Segment:
         return Record(
             topic=topic,
             partition=partition,
-            offset=self.base_offset + rel,
+            offset=self.off(rel),
             value=memoryview(self.buf)[start : start + length],
             key=key,
             timestamp_ms=self.timestamps[rel],
@@ -523,7 +656,9 @@ class _Partition:
         self.index = index
         self.cfg = cfg
         self.clock = clock
-        self.segments: list[_Segment] = [_Segment(0, clock())]
+        self.segments: list[_Segment] = [
+            _Segment(0, clock(), index_every=cfg.index_interval_bytes)
+        ]
         self.log_start_offset = 0  # first retained offset
         # pid -> dedup state; derived purely from the records in the log
         # (their embedded (pid, epoch, seq) metadata), kept incrementally
@@ -545,6 +680,20 @@ class _Partition:
         # (min last_ts + retention_ms, recomputed by each sweep): keeps
         # the expiry scan off the per-append hot path
         self._pid_deadline = 0
+        # producer-state snapshots (DESIGN.md §11): sorted list of
+        # (offset, producers, txn_open, aborted) — the state derived from
+        # records strictly below ``offset``. Taken at every segment roll
+        # and at every compaction horizon; _rebuild_producer_state
+        # restores the newest snapshot at or below the rebuild point and
+        # replays only the suffix.
+        self.snapshots: list[tuple] = []
+        # everything below this offset has been compacted (latest-per-key
+        # holds); the leader propagates it so followers clean identically
+        self.compact_point = 0
+        self._dirty_bytes = 0  # appended since the last cleaner pass
+        # _derive_state_at replays history against swapped-in state; the
+        # flag suppresses side effects (txn_index stamping) during it
+        self._derive_mode = False
         self.lock = threading.RLock()
 
     # ------------------------------------------------------------------ write
@@ -556,6 +705,8 @@ class _Partition:
         prods: tuple | None = None,
         producer: tuple[int, int, int] | None = None,
         txn: bool = False,
+        offsets: Sequence[int] | None = None,
+        seg_base: int | None = None,
     ) -> tuple[int, int]:
         """Append a message set; returns (first_offset, last_offset).
 
@@ -571,6 +722,14 @@ class _Partition:
         *checks* (fencing, dedup, gap detection) live in
         :meth:`idempotent_append` — replication never re-validates, leader
         order is law.
+
+        ``offsets`` (replication only) re-appends records at their
+        leader-assigned logical offsets — non-contiguous when the leader
+        compacted the fetched range; the segment then tracks explicit
+        per-record offsets and reads skip the holes. ``seg_base`` is the
+        source segment's base offset (replication only): a batch from a
+        segment beyond the local tail rolls a new local segment at that
+        base, keeping replica segment layouts convergent.
         """
         with self.lock:
             now = self.clock()
@@ -588,18 +747,51 @@ class _Partition:
                     [CTRL_TXN_DATA] * n if txn else None,
                 )
             seg = self.segments[-1]
-            if seg.size_bytes >= self.cfg.segment_bytes and seg.count > 0:
+            first_new = offsets[0] if offsets else None
+            # the source segment's base, when replicating: replica
+            # fetches never span leader segments, so a batch from a
+            # segment beyond the local tail IS a leader roll boundary —
+            # rolling with it keeps replica segment layouts (and thereby
+            # compact_to horizons, clamped to local bases) convergent
+            boundary = None
+            if seg_base is not None and seg_base > seg.last_offset:
+                boundary = seg_base
+            elif first_new is not None and first_new > seg.last_offset + 1:
+                # gapped batch jumping past the tail (compaction hole)
+                boundary = first_new
+            if seg.count == 0 and boundary is not None:
+                # empty active segment behind the boundary (a reset
+                # follower re-fetching a cleaned range): re-base it so
+                # the hole isn't charged to this segment's raw window
+                seg.base_offset = boundary
+            elif seg.count > 0 and (
+                seg.size_bytes >= self.cfg.segment_bytes
+                or boundary is not None
+            ):
                 if self.cfg.spill_dir is not None:  # seal -> mmap-backed file
                     os.makedirs(self.cfg.spill_dir, exist_ok=True)
                     seg.spill(os.path.join(
                         self.cfg.spill_dir,
                         f"{self.topic}-{self.index}-{seg.base_offset}.seg",
                     ))
-                seg = _Segment(seg.base_offset + seg.count, now)
+                new_base = boundary
+                if new_base is None:
+                    new_base = (
+                        first_new if first_new is not None
+                        else seg.last_offset + 1
+                    )
+                # the producer/txn state at a roll is exactly the state
+                # derived from records below the new segment: snapshot it,
+                # so rebuilds replay at most one segment's worth of suffix
+                self._take_snapshot_locked(new_base)
+                seg = _Segment(
+                    new_base, now, index_every=self.cfg.index_interval_bytes
+                )
                 self.segments.append(seg)
-            first = seg.base_offset + seg.count
+            first = offsets[0] if offsets else seg.next_offset
             seg.append_batch(
-                values, keys, now if timestamps is None else timestamps, prods
+                values, keys, now if timestamps is None else timestamps,
+                prods, offsets=offsets,
             )
             if producer is not None:
                 # one contiguous batch: a single run merge, off the
@@ -615,9 +807,18 @@ class _Partition:
                     self._open_txn(pid, pep, first)
             elif prods is not None:
                 self._note_producer_records(
-                    prods, first, now if timestamps is None else timestamps
+                    prods, first, now if timestamps is None else timestamps,
+                    offsets=offsets,
                 )
             self._enforce_retention(now)
+            if self.cfg.cleanup == "compact":
+                self._dirty_bytes += sum(map(len, values))
+                thresh = self.cfg.min_cleanable_bytes
+                if thresh is None:
+                    thresh = self.cfg.segment_bytes
+                if self._dirty_bytes >= thresh and len(self.segments) > 1:
+                    self._dirty_bytes = 0
+                    self._compact_locked(self.segments[-1].base_offset)
             return first, seg.last_offset
 
     # ------------------------------------------------------ producer state
@@ -651,63 +852,243 @@ class _Partition:
         prods: tuple,
         first_off: int,
         timestamps: Sequence[int] | int = 0,
+        offsets: Sequence[int] | None = None,
     ) -> None:
         """Replication path: fold per-record metadata into the table.
         Consecutive records merge into the same runs the source built, so
         replica tables converge on the leader's. Control flags replay the
         transaction state machine the same way: a txn-flagged record
-        opens its pid's transaction, a marker closes (or aborts) it."""
+        opens its pid's transaction, a marker closes (or aborts) it.
+        ``offsets`` carries explicit per-record offsets when the fetched
+        range had compaction holes (records are then not at
+        ``first_off + i``)."""
         pids, peps, pseqs = prods[0], prods[1], prods[2]
         ctrls = prods[3] if len(prods) > 3 else None
         scalar_ts = timestamps if isinstance(timestamps, int) else None
         for i, pid in enumerate(pids):
             if pid < 0:
                 continue
+            off = offsets[i] if offsets is not None else first_off + i
             ctrl = ctrls[i] if ctrls is not None else CTRL_NONE
             if ctrl >= CTRL_COMMIT:
                 self._close_txn(
-                    pid, peps[i], first_off + i, abort=ctrl == CTRL_ABORT
+                    pid, peps[i], off, abort=ctrl == CTRL_ABORT
                 )
                 continue
             ts = scalar_ts if scalar_ts is not None else timestamps[i]
             self._note_producer_run(
-                pid, peps[i], pseqs[i], pseqs[i], first_off + i, ts
+                pid, peps[i], pseqs[i], pseqs[i], off, ts
             )
             if ctrl == CTRL_TXN_DATA:
-                self._open_txn(pid, peps[i], first_off + i)
+                self._open_txn(pid, peps[i], off)
 
     def _rebuild_producer_state(self) -> None:
-        """Re-derive the dedup table — and the transaction state — from
-        the retained log (after ``truncate_to``): state for truncated
-        records must disappear — their batches are gone, so a retry must
-        re-append, not dedup against offsets that no longer hold them,
-        and a truncated marker must re-open the transaction it closed."""
-        self.producers = {}
-        self.txn_open = {}
-        self.aborted = []
+        """Re-derive the dedup table — and the transaction state — after
+        ``truncate_to``: state for truncated records must disappear —
+        their batches are gone, so a retry must re-append, not dedup
+        against offsets that no longer hold them, and a truncated marker
+        must re-open the transaction it closed.
+
+        Storage engine v2 (DESIGN.md §11): instead of replaying the full
+        retained log, restore the newest producer-state snapshot at or
+        below the new end and replay only the suffix — equivalent by
+        construction (a snapshot *is* the replay state at its offset),
+        and the only correct rebuild once compaction has physically
+        removed stamped records below the compaction point (the pinned
+        snapshot at ``compact_point`` covers them)."""
+        end = self.end_offset
+        # snapshots describing truncated-away state are no longer valid
+        self._drop_snapshots(lambda off: off > end)
+        start, self.producers, self.txn_open, self.aborted = (
+            self._state_from_snapshot(end)
+        )
         self._pid_deadline = 0  # rebuilt state may hold older timestamps
+        # re-derive the per-segment aborted-txn index alongside the state
         for seg in self.segments:
+            seg.txn_index.clear()
+        for ent in self.aborted:
+            self._stamp_txn_index(*ent)
+        self._replay_records(start, end)
+        # trim state below the log start exactly like incremental
+        # retention would have: a restored snapshot may predate evictions
+        self._expire_producers()
+
+    def _replay_records(self, start: int, stop: int) -> None:
+        """Replay producer/txn metadata of records in ``[start, stop)``
+        into the current state (the shared engine of rebuilds and
+        point-in-time derivations)."""
+        for seg, lo, hi in self._iter_spans(start, stop - start):
             pids = seg.pids
             if pids is None:
                 continue  # segment never saw a stamped record
-            base = seg.base_offset
             ctrls = seg.ctrls
-            for r in range(seg.count):
+            for r in range(lo, hi):
                 if pids[r] < 0:
                     continue
+                off = seg.off(r)
                 ctrl = ctrls[r] if ctrls is not None else CTRL_NONE
                 if ctrl >= CTRL_COMMIT:
                     self._close_txn(
-                        pids[r], seg.peps[r], base + r,
-                        abort=ctrl == CTRL_ABORT,
+                        pids[r], seg.peps[r], off, abort=ctrl == CTRL_ABORT
                     )
                     continue
                 self._note_producer_run(
                     pids[r], seg.peps[r], seg.pseqs[r], seg.pseqs[r],
-                    base + r, seg.timestamps[r],
+                    off, seg.timestamps[r],
                 )
                 if ctrl == CTRL_TXN_DATA:
-                    self._open_txn(pids[r], seg.peps[r], base + r)
+                    self._open_txn(pids[r], seg.peps[r], off)
+
+    # ------------------------------------------------- producer snapshots
+    def _snapshot_file(self, offset: int) -> str | None:
+        if self.cfg.spill_dir is None:
+            return None
+        return os.path.join(
+            self.cfg.spill_dir,
+            f"{self.topic}-{self.index}-{offset:020d}.snapshot",
+        )
+
+    def _take_snapshot_locked(self, offset: int) -> None:
+        """Snapshot the producer/transaction state as of ``offset`` (the
+        state derived from records strictly below it). Called at segment
+        rolls; compaction inserts interior snapshots via
+        :meth:`_snapshot_state_at`."""
+        snap = (
+            offset,
+            {pid: st.clone() for pid, st in self.producers.items()},
+            dict(self.txn_open),
+            list(self.aborted),
+        )
+        i = bisect.bisect_left([s[0] for s in self.snapshots], offset)
+        if i < len(self.snapshots) and self.snapshots[i][0] == offset:
+            self.snapshots[i] = snap
+        else:
+            self.snapshots.insert(i, snap)
+        self._write_snapshot_file(snap)
+        self._trim_snapshots()
+
+    def _write_snapshot_file(self, snap: tuple) -> None:
+        """Durable snapshot format (DESIGN.md §11) — best-effort JSON
+        sidecar next to the spilled segments; the in-memory copy is
+        authoritative for this in-process broker."""
+        path = self._snapshot_file(snap[0])
+        if path is None:
+            return
+        offset, producers, txn_open, aborted = snap
+        payload = {
+            "offset": offset,
+            "producers": {
+                str(pid): {
+                    "epoch": st.epoch,
+                    "last_seq": st.last_seq,
+                    "last_ts": st.last_ts,
+                    "runs": [list(r) for r in st.runs],
+                }
+                for pid, st in producers.items()
+            },
+            "txn_open": {
+                str(pid): list(v) for pid, v in txn_open.items()
+            },
+            "aborted": [list(a) for a in aborted],
+        }
+        try:
+            import json
+
+            os.makedirs(self.cfg.spill_dir, exist_ok=True)
+            with open(path, "w") as f:
+                json.dump(payload, f, sort_keys=True)
+        except OSError:
+            pass  # snapshot files are an optimization, never correctness
+
+    def _drop_snapshots(self, drop: Callable[[int], bool]) -> None:
+        kept = []
+        for snap in self.snapshots:
+            if not drop(snap[0]):
+                kept.append(snap)
+                continue
+            path = self._snapshot_file(snap[0])
+            if path is not None:
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+        self.snapshots = kept
+
+    def _trim_snapshots(self) -> None:
+        """Bound the snapshot list. Snapshots below the newest one at or
+        below the compaction point are unreachable (cluster truncation
+        never targets below the compact point — the horizon is capped at
+        the LSO ≤ HW, and every truncation target is ≥ the HW the
+        snapshot's replica had); the one AT the compaction point is
+        load-bearing (records below it no longer replay) and is never
+        evicted by the size cap."""
+        pin = None
+        for snap in reversed(self.snapshots):
+            if snap[0] <= self.compact_point:
+                pin = snap[0]
+                break
+        if pin is not None:
+            self._drop_snapshots(lambda off: off < pin)
+        while len(self.snapshots) > _MAX_PRODUCER_SNAPSHOTS:
+            victim = None
+            for snap in self.snapshots:
+                if snap[0] != pin:
+                    victim = snap[0]
+                    break
+            if victim is None:
+                break
+            self._drop_snapshots(lambda off: off == victim)
+
+    def _state_from_snapshot(self, upto: int) -> tuple[int, dict, dict, list]:
+        """Newest snapshot at or below ``upto`` as freshly cloned state:
+        ``(start_offset, producers, txn_open, aborted)``; empty state at
+        the log start when no snapshot qualifies."""
+        for snap in reversed(self.snapshots):
+            if snap[0] <= upto:
+                offset, producers, txn_open, aborted = snap
+                return (
+                    offset,
+                    {pid: st.clone() for pid, st in producers.items()},
+                    dict(txn_open),
+                    list(aborted),
+                )
+        return self.log_start_offset, {}, {}, []
+
+    def _derive_state_at(self, upto: int) -> tuple[dict, dict, list]:
+        """Producer/txn state as of ``upto`` (records strictly below it),
+        computed from the nearest snapshot plus suffix replay — without
+        disturbing the live state."""
+        saved = (
+            self.producers, self.txn_open, self.aborted, self._pid_deadline
+        )
+        self._derive_mode = True
+        try:
+            start, self.producers, self.txn_open, self.aborted = (
+                self._state_from_snapshot(upto)
+            )
+            self._replay_records(start, upto)
+            derived = (self.producers, self.txn_open, self.aborted)
+        finally:
+            self._derive_mode = False
+            (
+                self.producers, self.txn_open, self.aborted,
+                self._pid_deadline,
+            ) = saved
+        return derived
+
+    def _snapshot_state_at(self, offset: int) -> None:
+        """Ensure a snapshot exists at exactly ``offset`` — compaction
+        calls this for its horizon BEFORE cleaning, because the cleaned
+        records' producer stamps are what a later full replay would have
+        needed."""
+        for snap in self.snapshots:
+            if snap[0] == offset:
+                return
+        producers, txn_open, aborted = self._derive_state_at(offset)
+        snap = (offset, producers, txn_open, aborted)
+        i = bisect.bisect_left([s[0] for s in self.snapshots], offset)
+        self.snapshots.insert(i, snap)
+        self._write_snapshot_file(snap)
 
     # ------------------------------------------------------ transactions
     def _open_txn(self, pid: int, epoch: int, offset: int) -> None:
@@ -734,6 +1115,20 @@ class _Partition:
         self._pid_deadline = 0
         if abort:
             self.aborted.append((pid, cur[0], marker_off))
+            if not self._derive_mode:
+                self._stamp_txn_index(pid, cur[0], marker_off)
+
+    def _stamp_txn_index(self, pid: int, first: int, marker: int) -> None:
+        """Record an aborted range on every segment it overlaps (the
+        per-segment ``.txnindex``): read_committed's prefilter then
+        consults only the spanned segments, not the partition-wide list."""
+        ent = (pid, first, marker)
+        for si in range(self._segment_for(first), len(self.segments)):
+            seg = self.segments[si]
+            if seg.base_offset > marker:
+                break
+            if seg.last_offset >= first and ent not in seg.txn_index:
+                seg.txn_index.append(ent)
 
     def append_control(
         self, pid: int, epoch: int, *, abort: bool
@@ -820,12 +1215,13 @@ class _Partition:
         # roll can't be observed half-applied (the lock is reentrant, so
         # read paths that already hold it are unaffected)
         with self.lock:
-            seg = self.segments[-1]
-            return seg.base_offset + seg.count
+            return self.segments[-1].next_offset
 
     def _bounded_count(self, offset: int, max_records: int) -> int:
         """Validate ``offset`` against [log start, end]; return how many
-        records a read starting there may return."""
+        *raw* offsets a read starting there may cover. On a compacted
+        partition the window may contain holes, so the delivered record
+        count can be smaller."""
         if offset < self.log_start_offset:
             raise OffsetOutOfRange(
                 f"{self.topic}:{self.index} offset {offset} < log start "
@@ -839,21 +1235,21 @@ class _Partition:
         return min(max_records, end - offset)
 
     def _iter_spans(self, offset: int, n: int):
-        """Yield ``(segment, rel_start, rel_stop)`` spans covering records
-        ``[offset, offset + n)`` — the one segment walk shared by consumer
-        reads and replication fetches."""
-        si = self._segment_for(offset)
-        off = offset
-        remaining = n
-        while remaining > 0:
+        """Yield ``(segment, rel_start, rel_stop)`` spans covering the raw
+        offset window ``[offset, offset + n)`` — the one segment walk
+        shared by consumer reads, replication fetches, and state replay.
+        Compacted segments contribute only the records they still hold
+        (``rel_range`` bisects their explicit offsets array)."""
+        hi_off = offset + n
+        if n <= 0:
+            return
+        for si in range(self._segment_for(offset), len(self.segments)):
             seg = self.segments[si]
-            rel = off - seg.base_offset
-            take = min(remaining, seg.count - rel)
-            if take > 0:
-                yield seg, rel, rel + take
-            remaining -= take
-            off += take
-            si += 1
+            if seg.base_offset >= hi_off:
+                break
+            lo, hi = seg.rel_range(offset, hi_off)
+            if hi > lo:
+                yield seg, lo, hi
 
     def read(
         self, offset: int, max_records: int, isolation: str | None = None
@@ -863,14 +1259,26 @@ class _Partition:
         with self.lock:
             n = self._bounded_count(offset, max_records)
             spans = list(self._iter_spans(offset, n))
-            if any(seg.markers for seg, _, _ in spans):
+            expect = offset  # raw-contiguity check: a dropped or re-based
+            contiguous = True  # segment leaves a hole no span covers
+            for seg, lo, hi in spans:
+                if seg.off(lo) != expect:
+                    contiguous = False
+                    break
+                expect = seg.off(hi - 1) + 1
+            if not contiguous or any(
+                seg.markers or seg.offsets is not None
+                for seg, _, _ in spans
+            ):
                 # a control marker may sit in range — consumers never see
                 # control records at ANY isolation level (a raw reader
                 # handed marker bytes as a data record would crash on
                 # them); read_uncommitted still delivers not-yet-resolved
-                # and aborted transactional data. Marker-free spans (the
-                # overwhelming majority even on transactional topics)
-                # stay on the contiguous fast path below.
+                # and aborted transactional data. Compacted (gapped)
+                # segments also take this path: their records need
+                # explicit per-record offsets. Marker-free dense spans
+                # (the overwhelming majority) stay on the contiguous
+                # fast path below.
                 return self._read_filtered(
                     offset, n, spans, skip_aborted=False
                 )
@@ -922,15 +1330,24 @@ class _Partition:
         offsets: list[int] = []
         abort_ranges: dict[int, list[tuple[int, int]]] = {}
         if skip_aborted:
-            hi = offset + n
-            for pid, first, marker in self.aborted:
-                # only ranges overlapping the read window matter; the
-                # prefilter keeps the per-record check short on long
-                # partitions with many historical aborts. (A per-segment
-                # aborted-txn index — Kafka's .txnindex — is the
-                # follow-up for truly huge retained partitions.)
-                if first < hi and marker > offset:
-                    abort_ranges.setdefault(pid, []).append((first, marker))
+            hi_off = offset + n
+            # per-segment aborted-txn index (Kafka's .txnindex): only the
+            # segments this read spans are consulted, so the prefilter
+            # cost is bounded by the window — not by the partition's full
+            # abort history. A range spanning several segments is stamped
+            # on each; the ``seen`` set dedupes it.
+            seen: set[tuple[int, int, int]] = set()
+            for seg, _, _ in spans:
+                for ent in seg.txn_index:
+                    if (
+                        ent[1] < hi_off
+                        and ent[2] > offset
+                        and ent not in seen
+                    ):
+                        seen.add(ent)
+                        abort_ranges.setdefault(ent[0], []).append(
+                            (ent[1], ent[2])
+                        )
         for seg, lo, hi in spans:
             mv = memoryview(seg.buf)
             ctrls = seg.ctrls
@@ -939,14 +1356,14 @@ class _Partition:
                 if ctrl >= CTRL_COMMIT:
                     continue  # control marker: never delivered
                 if skip_aborted and ctrl == CTRL_TXN_DATA:
-                    off = seg.base_offset + r
+                    off = seg.off(r)
                     ab = abort_ranges.get(seg.pids[r])
                     if ab is not None and any(a <= off < b for a, b in ab):
                         continue  # aborted transaction's record
                 start = seg.starts[r]
                 values.append(mv[start : start + seg.lengths[r]])
                 timestamps.append(seg.timestamps[r])
-                offsets.append(seg.base_offset + r)
+                offsets.append(seg.off(r))
         return RecordBatch(
             topic=self.topic,
             partition=self.index,
@@ -956,6 +1373,25 @@ class _Partition:
             offsets=offsets,
             scanned=n,
         )
+
+    def offset_for_timestamp(self, ts_ms: int) -> int | None:
+        """First retained offset with timestamp >= ``ts_ms`` via the
+        sparse time index: segments whose ``max_ts`` is too old are
+        skipped whole; within a candidate segment the index entry just
+        below the target bounds a short forward scan."""
+        with self.lock:
+            for seg in self.segments:
+                if seg.count == 0 or seg.max_ts < ts_ms:
+                    continue
+                lo = 0
+                i = bisect.bisect_left(seg.index_times, (ts_ms,)) - 1
+                if i >= 0:
+                    lo = seg.index_times[i][1]
+                tss = seg.timestamps
+                for r in range(lo, seg.count):
+                    if tss[r] >= ts_ms:
+                        return seg.off(r)
+            return None
 
     def _segment_for(self, offset: int) -> int:
         bases = [s.base_offset for s in self.segments]
@@ -969,14 +1405,54 @@ class _Partition:
         list[bytes | None],
         list[int],
         tuple[list[int], list[int], list[int], list[int]] | None,
+        list[int] | None,
+        int,
+        int | None,
     ]:
-        """Replication fetch: materialized (values, keys, timestamps,
-        producer metadata) so a follower can re-append them verbatim to
-        its copy of the partition — including the (pid, epoch, seq)
-        stamps its dedup table is derived from, and the control flags its
-        transaction state is derived from."""
+        """Replication fetch: materialized ``(values, keys, timestamps,
+        producer metadata, offsets, next_offset, seg_base)`` so a follower can
+        re-append them verbatim to its copy of the partition — including
+        the (pid, epoch, seq) stamps its dedup table is derived from, and
+        the control flags its transaction state is derived from.
+
+        ``offsets`` is None for a dense window and the per-record logical
+        offsets when the window has compaction holes; ``next_offset`` is
+        the raw end of the covered window (the follower's next fetch
+        position — it can advance past a fully-compacted gap even when no
+        records were returned); ``seg_base`` the base offset of the
+        segment the window came from (None for a pure-hole window).
+
+        Like Kafka's fetch protocol, one response never spans segment
+        files: the window is capped at the end of the first spanned
+        segment. The follower rolls its own segments at the fetched
+        ``seg_base`` boundaries (see :meth:`append_batch`), so replica
+        segment layouts converge — which keeps ``compact_to`` horizons
+        (clamped to local segment bases) in step across replicas."""
         with self.lock:
             n = self._bounded_count(offset, max_records)
+            wbase: int | None = None
+            if n > 0:
+                i = self._segment_for(offset)
+                seg0 = self.segments[i]
+                if seg0.base_offset > offset:
+                    # fully-compacted hole before the first retained
+                    # segment: cover the hole only, so next_offset lands
+                    # exactly on that segment's base
+                    n = min(n, seg0.base_offset - offset)
+                elif seg0.last_offset < offset:
+                    # hole at this segment's raw tail: advance to the
+                    # next segment's base
+                    nxt = (
+                        self.segments[i + 1].base_offset
+                        if i + 1 < len(self.segments)
+                        else offset + n
+                    )
+                    n = min(n, nxt - offset)
+                elif seg0.last_offset < offset + n - 1:
+                    n = seg0.last_offset - offset + 1
+                    wbase = seg0.base_offset
+                else:
+                    wbase = seg0.base_offset
             values: list[bytes] = []
             keys: list[bytes | None] = []
             timestamps: list[int] = []
@@ -988,6 +1464,8 @@ class _Partition:
             # None unless some record in range is stamped, so followers of
             # purely non-idempotent partitions append lazily too
             stamped = any(seg.pids is not None for seg, _, _ in spans)
+            gapped = any(seg.offsets is not None for seg, _, _ in spans)
+            offs: list[int] | None = [] if gapped else None
             for seg, lo, hi in spans:
                 for r in range(lo, hi):
                     start = seg.starts[r]
@@ -998,6 +1476,8 @@ class _Partition:
                         None if klen < 0 else bytes(seg.key_buf[ks : ks + klen])
                     )
                     timestamps.append(seg.timestamps[r])
+                if offs is not None:
+                    offs.extend(seg.off(r) for r in range(lo, hi))
                 if not stamped:
                     continue
                 if seg.pids is None:
@@ -1015,6 +1495,7 @@ class _Partition:
             return (
                 values, keys, timestamps,
                 (pids, peps, pseqs, ctrls) if stamped else None,
+                offs, offset + n, wbase,
             )
 
     def reset_to(self, offset: int) -> int:
@@ -1024,7 +1505,9 @@ class _Partition:
         with self.lock:
             for s in self.segments:
                 s.drop_spill()
-            self.segments = [_Segment(offset, self.clock())]
+            self.segments = [
+                _Segment(offset, self.clock(), index_every=self.cfg.index_interval_bytes)
+            ]
             self.log_start_offset = offset
             # the log is empty: dedup and transaction state rebuild as
             # records re-fetch (replica_append carries their metadata)
@@ -1032,12 +1515,17 @@ class _Partition:
             self.txn_open = {}
             self.aborted = []
             self._pid_deadline = 0
+            self._drop_snapshots(lambda _off: True)
+            self.compact_point = 0
+            self._dirty_bytes = 0
             return offset
 
     def truncate_to(self, offset: int) -> int:
         """Discard every record at ``offset`` and beyond (post-failover log
         reconciliation: a deposed leader truncates to the new leader's end
-        before re-fetching). Returns the new end offset."""
+        before re-fetching). Returns the new end offset — which on a
+        compacted partition may sit below ``offset`` when the records just
+        under the truncation point were compacted away."""
         with self.lock:
             if offset >= self.end_offset:
                 return self.end_offset
@@ -1048,11 +1536,19 @@ class _Partition:
             while self.segments and self.segments[-1].base_offset >= offset:
                 self.segments.pop().drop_spill()
             if not self.segments:
-                self.segments = [_Segment(offset, self.clock())]
+                self.segments = [
+                    _Segment(
+                        offset, self.clock(),
+                        index_every=self.cfg.index_interval_bytes,
+                    )
+                ]
                 self._rebuild_producer_state()
                 return offset
             seg = self.segments[-1]
-            rel = offset - seg.base_offset
+            if seg.offsets is not None:
+                rel = bisect.bisect_left(seg.offsets, offset)
+            else:
+                rel = offset - seg.base_offset
             if rel < seg.count:
                 if isinstance(seg.buf, bytearray):
                     # drop the truncated records' payload too, or it stays
@@ -1083,21 +1579,209 @@ class _Partition:
                         1 for x in seg.ctrls[rel:] if x >= CTRL_COMMIT
                     )
                     del seg.ctrls[rel:]
+                if seg.offsets is not None:
+                    del seg.offsets[rel:]
+                # the sparse indexes cover only retained records; the next
+                # index entry re-arms off the last survivor's byte position
+                seg.index_offsets = [e for e in seg.index_offsets if e[0] < rel]
+                seg.index_times = [e for e in seg.index_times if e[1] < rel]
+                seg._index_next = (
+                    seg.index_offsets[-1][1] + seg.index_every
+                    if seg.index_offsets
+                    else seg.index_every
+                )
+                seg.max_ts = max(seg.timestamps[:rel], default=0)
                 seg.count = rel
             if seg._spill_file is not None:
                 # sealed/spilled segments are read-only maps — appendable
                 # writes need a fresh heap-backed active segment
-                self.segments.append(_Segment(offset, self.clock()))
+                self.segments.append(
+                    _Segment(
+                        offset, self.clock(),
+                        index_every=self.cfg.index_interval_bytes,
+                    )
+                )
             # dedup state for the truncated suffix must not survive it: a
             # deposed leader that rejoins (leader-epoch reconciliation)
             # re-derives the table from what the log still holds, so its
             # table converges with the new leader's as it re-fetches
             self._rebuild_producer_state()
-            return offset
+            return self.end_offset
+
+    # -------------------------------------------------------------- compaction
+    def compact(self, horizon: int | None = None) -> dict:
+        """Run the cleaner up to ``horizon`` (default: everything below
+        the active segment). Returns the cleaner stats dict."""
+        with self.lock:
+            if horizon is None:
+                horizon = self.segments[-1].base_offset
+            return self._compact_locked(horizon)
+
+    def compact_to(self, horizon: int) -> dict:
+        """Follower-side cleaning: apply the leader's compact point. The
+        keep rule is a pure function of (retained records, horizon,
+        config), so replicas with the same log prefix converge on the
+        same surviving records — idempotent and monotone (a lower or
+        repeated horizon is a no-op)."""
+        with self.lock:
+            return self._compact_locked(horizon)
+
+    def _compact_locked(self, horizon: int) -> dict:
+        """One cleaner pass: rewrite every sealed segment wholly below
+        ``horizon`` keeping only (a) keyless records and control markers,
+        (b) the newest record of each key, (c) unexpired tombstones.
+        Logical offsets are preserved (the rewritten segments carry
+        explicit ``offsets`` arrays with holes); the producer/txn state
+        the removed records would have replayed into is pinned by a
+        snapshot at the horizon first."""
+        stats = {
+            "horizon": self.compact_point,
+            "removed_records": 0,
+            "removed_bytes": 0,
+            "rewritten_segments": 0,
+        }
+        if self.cfg.cleanup != "compact" or len(self.segments) < 2:
+            return stats
+        # never clean unstable records (their txn may abort) nor the
+        # active segment; then clamp down to a segment boundary so the
+        # latest-per-key guarantee below the compact point is exact
+        horizon = min(
+            horizon, self.last_stable_offset(), self.segments[-1].base_offset
+        )
+        bound = self.log_start_offset
+        for seg in self.segments:
+            if seg.base_offset <= horizon:
+                bound = seg.base_offset
+            else:
+                break
+        horizon = bound
+        if horizon <= self.compact_point:
+            return stats
+        # the cleaned records' producer stamps must survive their removal:
+        # pin the replay state at the horizon before touching anything
+        self._snapshot_state_at(horizon)
+        # pass 1: newest offset per key below the horizon, and the stream
+        # clock (newest record timestamp) the tombstone grace runs on —
+        # both derived from replicated record data only, so every replica
+        # computes the same keep set
+        latest: dict[bytes, int] = {}
+        stream_ts = 0
+        for seg, lo, hi in self._iter_spans(
+            self.log_start_offset, horizon - self.log_start_offset
+        ):
+            kb = seg.key_buf
+            kls = seg.key_lengths
+            kss = seg.key_starts
+            tss = seg.timestamps
+            for r in range(lo, hi):
+                if tss[r] > stream_ts:
+                    stream_ts = tss[r]
+                klen = kls[r]
+                if klen < 0:
+                    continue
+                ks = kss[r]
+                latest[bytes(kb[ks : ks + klen])] = seg.off(r)
+        grace = self.cfg.tombstone_retention_ms
+        # pass 2: rewrite the segments below the horizon
+        out: list[_Segment] = []
+        for seg in self.segments:
+            if seg.base_offset >= horizon:
+                out.append(seg)
+                continue
+            keep: list[int] = []
+            drop_bytes = 0
+            kls = seg.key_lengths
+            kss = seg.key_starts
+            lens = seg.lengths
+            for r in range(seg.count):
+                klen = kls[r]
+                if klen < 0:
+                    keep.append(r)  # keyless record or control marker
+                    continue
+                ks = kss[r]
+                key = bytes(seg.key_buf[ks : ks + klen])
+                if latest.get(key) != seg.off(r):
+                    drop_bytes += lens[r] + klen  # superseded
+                    continue
+                if lens[r] == 0 and stream_ts - seg.timestamps[r] > grace:
+                    drop_bytes += klen  # tombstone past its grace window
+                    continue
+                keep.append(r)
+            if len(keep) == seg.count:
+                out.append(seg)
+                continue
+            stats["removed_records"] += seg.count - len(keep)
+            stats["removed_bytes"] += drop_bytes
+            stats["rewritten_segments"] += 1
+            spill_path = (
+                seg._spill_file[1] if seg._spill_file is not None else None
+            )
+            new = self._rewrite_segment(seg, keep)
+            seg.drop_spill()
+            if new.count == 0:
+                continue  # a fully-compacted segment disappears
+            if spill_path is not None:
+                try:
+                    new.spill(spill_path)
+                except OSError:
+                    pass  # stays heap-backed; correctness is unaffected
+            out.append(new)
+        self.segments = out
+        self.compact_point = horizon
+        stats["horizon"] = horizon
+        self._trim_snapshots()
+        return stats
+
+    def _rewrite_segment(self, seg: _Segment, keep: list[int]) -> _Segment:
+        """Copy the ``keep`` records (by relative index) into a fresh
+        segment at the same base offset, with explicit logical offsets.
+        The old segment — and any zero-copy views pinning its buffer —
+        is left untouched; readers that grabbed views before the swap
+        keep reading valid (pre-compaction) bytes."""
+        new = _Segment(
+            seg.base_offset, seg.created_ms, index_every=seg.index_every
+        )
+        if keep:
+            mv = memoryview(seg.buf)
+            values = [
+                bytes(mv[seg.starts[r] : seg.starts[r] + seg.lengths[r]])
+                for r in keep
+            ]
+            keys = [
+                None
+                if seg.key_lengths[r] < 0
+                else bytes(
+                    seg.key_buf[
+                        seg.key_starts[r]
+                        : seg.key_starts[r] + seg.key_lengths[r]
+                    ]
+                )
+                for r in keep
+            ]
+            ts = [seg.timestamps[r] for r in keep]
+            offs = [seg.off(r) for r in keep]
+            prods = None
+            if seg.pids is not None:
+                prods = (
+                    [seg.pids[r] for r in keep],
+                    [seg.peps[r] for r in keep],
+                    [seg.pseqs[r] for r in keep],
+                    [seg.ctrls[r] for r in keep]
+                    if seg.ctrls is not None
+                    else None,
+                )
+            new.append_batch(values, keys, ts, prods, offsets=offs)
+        new.txn_index = list(seg.txn_index)
+        return new
 
     # -------------------------------------------------------------- retention
     def _enforce_retention(self, now_ms: int) -> None:
         cfg = self.cfg
+        if cfg.cleanup == "compact":
+            # compacted topics never delete by age or size — the cleaner
+            # bounds growth by rewriting history to latest-per-key instead
+            # (Kafka's cleanup.policy=compact)
+            return
         evicted = False
         # never evict the active (last) segment
         while len(self.segments) > 1:
@@ -1124,6 +1808,9 @@ class _Partition:
             evicted = True
         if evicted:
             self._expire_producers()
+            # snapshots strictly below the log start describe evicted
+            # history no rebuild will ever ask for
+            self._drop_snapshots(lambda off: off < self.log_start_offset)
         if (
             cfg.retention_ms is not None
             and self.producers
@@ -1354,7 +2041,9 @@ class StreamLog:
 
     def read_one(self, topic: str, partition: int, offset: int) -> Record:
         """Point read of a single record, key included (the metadata-log
-        replay path: a controller deserializes one committed command)."""
+        replay path: a controller deserializes one committed command).
+        Raises :class:`OffsetOutOfRange` when ``offset`` is past the end
+        or was compacted away."""
         part = self._partition(topic, partition)
         with part.lock:
             if part._bounded_count(offset, 1) < 1:
@@ -1362,7 +2051,31 @@ class StreamLog:
                     f"{topic}:{partition} offset {offset} is past the end"
                 )
             seg = part.segments[part._segment_for(offset)]
-            return seg.record(topic, partition, offset - seg.base_offset)
+            if seg.offsets is not None:
+                rel = bisect.bisect_left(seg.offsets, offset)
+                if rel >= seg.count or seg.offsets[rel] != offset:
+                    raise OffsetOutOfRange(
+                        f"{topic}:{partition} offset {offset} compacted away"
+                    )
+            else:
+                rel = offset - seg.base_offset
+                if rel < 0 or rel >= seg.count:
+                    raise OffsetOutOfRange(
+                        f"{topic}:{partition} offset {offset} compacted away"
+                    )
+            return seg.record(topic, partition, rel)
+
+    def offset_for_timestamp(
+        self, topic: str, partition: int, ts_ms: int
+    ) -> int | None:
+        """First retained offset whose record timestamp is >= ``ts_ms``
+        (Kafka's ListOffsets-by-timestamp), answered from the sparse time
+        index: whole segments are skipped by their ``max_ts``, then the
+        per-segment index bisects to a nearby record and a short forward
+        scan finishes. Like Kafka's ``.timeindex``, out-of-order
+        timestamps BEFORE the indexed position are not revisited. None
+        when no retained record is that new."""
+        return self._partition(topic, partition).offset_for_timestamp(ts_ms)
 
     def read_range(
         self, topic: str, partition: int, offset: int, length: int
@@ -1417,7 +2130,17 @@ class StreamLog:
         list[bytes | None],
         list[int],
         tuple[list[int], list[int], list[int], list[int]] | None,
+        list[int] | None,
+        int,
+        int | None,
     ]:
+        """Fetch raw records for replication: ``(values, keys,
+        timestamps, prods, offsets, next_offset, seg_base)``. ``offsets``
+        is None for a dense window; ``next_offset`` always advances past
+        the covered window, including fully-compacted gaps; ``seg_base``
+        is the source segment's base (one response never spans segment
+        files — feed it back to :meth:`replica_append` so the replica
+        rolls its segments on the leader's boundaries)."""
         return self._partition(topic, partition).fetch_raw(offset, max_records)
 
     def replica_append(
@@ -1430,6 +2153,8 @@ class StreamLog:
         prods: tuple | None = None,
         producer: tuple[int, int, int] | None = None,
         txn: bool = False,
+        offsets: Sequence[int] | None = None,
+        seg_base: int | None = None,
     ) -> tuple[int, int]:
         """Append records with explicit timestamps (scalar or per-record).
 
@@ -1444,17 +2169,23 @@ class StreamLog:
         (fetched via :meth:`replica_fetch`) or ``producer`` batch-level
         (the acks=all direct ISR push, one run-merge instead of a
         per-record loop). Either keeps the follower's dedup table in step
-        with the leader's, so exactly-once survives failover."""
+        with the leader's, so exactly-once survives failover.
+
+        ``offsets`` re-appends the records at their leader-assigned
+        logical offsets — required when the fetched range had compaction
+        holes — and ``seg_base`` rolls local segments on the leader's
+        boundaries (both see :meth:`replica_fetch`)."""
         m = self.metrics
         if m is None or not m.enabled:
             return self._partition(topic, partition).append_batch(
                 values, keys, timestamps, prods=prods, producer=producer,
-                txn=txn,
+                txn=txn, offsets=offsets, seg_base=seg_base,
             )
         _, h_app, c_app, _, _ = self._hot_metrics(m)
         t0 = time.perf_counter()
         out = self._partition(topic, partition).append_batch(
-            values, keys, timestamps, prods=prods, producer=producer, txn=txn
+            values, keys, timestamps, prods=prods, producer=producer,
+            txn=txn, offsets=offsets, seg_base=seg_base,
         )
         h_app.record(time.perf_counter() - t0)
         c_app.inc(len(values))
@@ -1520,6 +2251,8 @@ class StreamLog:
             "retained_records": 0,
             "producer_state_entries": 0,
             "open_txns": 0,
+            "producer_snapshots": 0,
+            "index_entries": 0,
         }
         with self._lock:
             parts = [p for ps in self._topics.values() for p in ps]
@@ -1533,6 +2266,11 @@ class StreamLog:
                 )
                 out["producer_state_entries"] += len(part.producers)
                 out["open_txns"] += len(part.txn_open)
+                out["producer_snapshots"] += len(part.snapshots)
+                out["index_entries"] += sum(
+                    len(s.index_offsets) + len(s.index_times)
+                    for s in part.segments
+                )
         return out
 
     def open_txns(self, topic: str, partition: int) -> dict[int, int]:
@@ -1560,10 +2298,47 @@ class StreamLog:
                 for pid, st in part.producers.items()
             }
 
+    # ------------------------------------------------------------- compaction
+    def compact(
+        self, topic: str, partition: int, horizon: int | None = None
+    ) -> dict:
+        """Run the log cleaner on one partition (no-op unless its topic
+        was created with ``cleanup="compact"``). Returns cleaner stats:
+        ``{"horizon", "removed_records", "removed_bytes",
+        "rewritten_segments"}``."""
+        return self._partition(topic, partition).compact(horizon)
+
+    def compact_to(self, topic: str, partition: int, horizon: int) -> dict:
+        """Apply a leader's compact point on a replica (deterministic —
+        see :meth:`_Partition.compact_to`)."""
+        return self._partition(topic, partition).compact_to(horizon)
+
+    def compact_point(self, topic: str, partition: int) -> int:
+        """Everything below this offset is compacted (latest-per-key)."""
+        return self._partition(topic, partition).compact_point
+
+    def producer_snapshots(self, topic: str, partition: int) -> list[int]:
+        """Offsets of the retained producer-state snapshots (test hook)."""
+        part = self._partition(topic, partition)
+        with part.lock:
+            return [s[0] for s in part.snapshots]
+
+    def txn_index(
+        self, topic: str, partition: int
+    ) -> list[list[tuple[int, int, int]]]:
+        """Per-segment aborted-transaction index contents (test hook)."""
+        part = self._partition(topic, partition)
+        with part.lock:
+            return [list(seg.txn_index) for seg in part.segments]
+
     def truncate_to(self, topic: str, partition: int, offset: int) -> int:
+        """Discard records at ``offset`` and beyond; returns the real new
+        end offset (below ``offset`` when the tail was compacted)."""
         return self._partition(topic, partition).truncate_to(offset)
 
     def reset_to(self, topic: str, partition: int, offset: int) -> int:
+        """Restart the partition empty at ``offset`` (replica catch-up
+        from below the leader's log start)."""
         return self._partition(topic, partition).reset_to(offset)
 
     def size_bytes(self, topic: str, partition: int | None = None) -> int:

@@ -184,6 +184,49 @@ def test_missing_observability_section_fails_schema():
     assert any("observability['pairs']" in f for f in failures)
 
 
+def test_storage_recovery_regression_fails_gate():
+    gate = load_gate()
+    results = load_results()
+    # doctor every recorded pair to a snapshot restore barely 1.2x a
+    # full replay: far below the 2x floor
+    for p in results["storage"]["recovery"]["pairs"]:
+        p["snapshot_s"] = p["replay_s"] / 1.2
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("restart recovery" in f for f in failures)
+    # the stored speedup is ignored: doctoring it alone changes nothing
+    results = load_results()
+    results["storage"]["recovery"]["speedup"] = 1.0
+    assert gate.check(results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE) == []
+    # a single outlier pair does not fail the median-based gate
+    results["storage"]["recovery"]["pairs"][0]["snapshot_s"] *= 1000.0
+    assert gate.check(results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE) == []
+
+
+def test_missing_storage_section_fails_schema():
+    gate = load_gate()
+    results = load_results()
+    del results["storage"]
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("missing top-level section 'storage'" in f for f in failures)
+    assert any("recovery" in f for f in failures)
+    assert any("txnindex" in f for f in failures)
+    # empty/invalid pair lists are schema failures, not silent passes —
+    # the txnindex pairs are schema-checked even though only recovery
+    # carries a regression floor
+    results = load_results()
+    results["storage"]["recovery"]["pairs"] = []
+    results["storage"]["txnindex"]["pairs"] = [{"fullscan_us": 0}]
+    failures = gate.check(
+        results, gate.PR2_BASELINE_MSGS_PER_S, gate.TOLERANCE
+    )
+    assert any("recovery']['pairs']" in f for f in failures)
+    assert any("txnindex']['pairs']" in f for f in failures)
+
+
 def test_unreadable_file_fails_cli(tmp_path):
     gate = load_gate()
     assert gate.main([str(tmp_path / "missing.json")]) == 1

@@ -180,9 +180,10 @@ class TestLogProducerState:
 
         def sync():
             end = follower.end_offset("t", 0)
-            vals, keys, ts, prods = leader.replica_fetch("t", 0, end, 1024)
+            vals, keys, ts, prods, offs, _, sb = leader.replica_fetch("t", 0, end, 1024)
             if vals:
-                follower.replica_append("t", 0, vals, keys, ts, prods=prods)
+                follower.replica_append("t", 0, vals, keys, ts, prods=prods,
+                                        offsets=offs, seg_base=sb)
 
         sync()
         t[0] = 0.5  # within retention: both replicas still dedup pid 5

@@ -130,8 +130,9 @@ class TestLogTransactions:
         log.producer_append("t", 0, [b"b"], None, 0, 1, 0, 1, txn=True)
         replica = StreamLog()
         replica.create_topic("t", LogConfig(num_partitions=1))
-        vals, keys, ts, prods = log.replica_fetch("t", 0, 0, 100)
-        replica.replica_append("t", 0, vals, keys, ts, prods=prods)
+        vals, keys, ts, prods, offs, _, sb = log.replica_fetch("t", 0, 0, 100)
+        replica.replica_append("t", 0, vals, keys, ts, prods=prods,
+                               offsets=offs, seg_base=sb)
         assert replica.aborted_ranges("t", 0) == log.aborted_ranges("t", 0)
         assert replica.open_txns("t", 0) == log.open_txns("t", 0) == {1: 2}
         assert replica.last_stable_offset("t", 0) == 2
