@@ -19,6 +19,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== syntax gate (compileall) =="
 python -m compileall -q src tests benchmarks examples
 
+# static lock-hierarchy analyzer (DESIGN.md §12): exits nonzero on any
+# unjustified lock-order / blocking-under-lock / unbalanced-acquire /
+# silent-except finding, and on stale or justification-less allowlist
+# entries (src/repro/analysis/lockcheck_allowlist.py)
+echo "== lockcheck (static lock-hierarchy gate) =="
+python -m repro.analysis.lockcheck src/repro
+
 # -p no:cacheprovider: no .pytest_cache/ bytecode-adjacent artifacts in the tree
 # --durations=15: name the slowest tests, so fast-tier creep is visible in
 # every CI log before it trips the budget below
@@ -43,4 +50,17 @@ QUICKSTART_TIMEOUT_S="${QUICKSTART_TIMEOUT_S:-120}" python examples/quickstart.p
 if [ "$1" = "--full" ]; then
     echo "== full tier (slow system tests + chaos suite) =="
     python -m pytest -q -m "slow" -p no:cacheprovider
+
+    # runtime lock-order witness (DESIGN.md §12): re-run the fast tier
+    # and the chaos suite with every lock witnessed; the session fixture
+    # in tests/conftest.py fails either run on any rank violation or
+    # observed-graph cycle, and dumps the observed acquisition-order
+    # graph as JSON (uploaded as a nightly CI artifact)
+    echo "== lock-order witness tier (fast tier, REPRO_LOCK_WITNESS=1) =="
+    REPRO_LOCK_WITNESS=1 REPRO_LOCK_GRAPH="lock_order_graph_fast.json" \
+        python -m pytest -q -m "not slow" -p no:cacheprovider
+    echo "== lock-order witness tier (chaos suite, REPRO_LOCK_WITNESS=1) =="
+    REPRO_LOCK_WITNESS=1 REPRO_LOCK_GRAPH="lock_order_graph_chaos.json" \
+        python -m pytest -q -p no:cacheprovider tests/test_cluster_chaos.py \
+        tests/test_transactions.py
 fi

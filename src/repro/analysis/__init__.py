@@ -1,0 +1,17 @@
+"""Concurrency-correctness toolkit (DESIGN.md §12).
+
+Two layers over the same declared lock-rank table (:mod:`.ranks`):
+
+* :mod:`.lockcheck` — a static AST pass over ``src/repro`` that builds
+  the may-acquire-while-holding graph from ``with``-block nesting plus
+  intra-module call edges and checks it against the rank table; also
+  flags unbalanced raw ``.acquire()`` calls, blocking calls made while
+  statically holding a metadata/partition lock, and silent
+  ``except: pass`` handlers in daemon loops. CI gate:
+  ``python -m repro.analysis.lockcheck src/repro``.
+* :mod:`.witness` — a lockdep-style runtime witness: a drop-in lock
+  wrapper that asserts rank ordering per-thread at acquire time and
+  accumulates the *observed* acquisition-order graph so teardown cycle
+  detection reports potential deadlocks that never manifested. Enabled
+  for the whole test suite via ``REPRO_LOCK_WITNESS=1``.
+"""

@@ -1,0 +1,608 @@
+"""Static lock-hierarchy analyzer (DESIGN.md §12, layer 1).
+
+An AST pass over a source tree (normally ``src/repro``) that:
+
+* discovers lock objects — ``threading.Lock/RLock/Condition`` attribute
+  assignments and :func:`repro.analysis.witness.make_lock/make_rlock`
+  calls — and resolves each to a lock *class* in the declared rank table
+  (:mod:`repro.analysis.ranks`); a lock that resolves to nothing is
+  itself a finding, so the table cannot silently rot;
+* builds the may-acquire-while-holding graph from ``with``-block
+  nesting plus intra-module call edges (``self.method()`` and local
+  function calls, closed transitively) and checks every edge against
+  the rank table: acquiring a strictly lower rank while holding a
+  higher one, or acquiring anything while holding a leaf, is a finding;
+* flags raw ``.acquire()`` calls with no same-receiver ``.release()``
+  in a ``finally`` block;
+* flags blocking calls (``time.sleep``, ``Thread.join``, ``Event.wait``,
+  ``controller.submit``, network-ish I/O) made while statically holding
+  a metadata or partition lock;
+* flags silent broad ``except: pass`` handlers inside daemon loops.
+
+Findings carry stable ids (``kind:path:qualname:detail`` — no line
+numbers, so the allowlist survives unrelated edits). Intentional
+findings live in :mod:`repro.analysis.lockcheck_allowlist`, every entry
+with a one-line justification; entries that match nothing in a scanned
+tree they apply to are *stale* and fail the gate, so the allowlist can
+only shrink unless a justified entry is added alongside new code.
+
+CI gate::
+
+    python -m repro.analysis.lockcheck src/repro
+
+exits 0 on a clean (or fully justified) tree, 1 on findings, 2 on a
+malformed allowlist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import fnmatch
+import json
+import os
+import sys
+from dataclasses import dataclass, field
+
+from repro.analysis.ranks import LEAF, RANKS, ALLOWED_EDGES, classify_attr
+
+# lock classes whose statically-held sections must not make blocking calls
+_NO_BLOCK_UNDER = frozenset({"metadata", "partition"})
+
+_LOCK_CTORS = frozenset({"Lock", "RLock", "Condition"})
+_WITNESS_CTORS = frozenset({"make_lock", "make_rlock"})
+
+
+@dataclass
+class Finding:
+    kind: str
+    path: str  # posix relpath from the scan root
+    qualname: str
+    detail: str
+    lineno: int
+    message: str
+
+    @property
+    def id(self) -> str:
+        return f"{self.kind}:{self.path}:{self.qualname}:{self.detail}"
+
+
+@dataclass
+class _FuncInfo:
+    qualname: str
+    class_name: str | None
+    node: ast.AST
+    acquires: set[str] = field(default_factory=set)  # direct lock classes
+    blocking: set[str] = field(default_factory=set)  # direct blocking descs
+    calls: set[str] = field(default_factory=set)  # local callee qualnames
+    # transitive closures (filled by _close)
+    may_acquire: set[str] = field(default_factory=set)
+    may_block: set[str] = field(default_factory=set)
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted repr of an expression (for receivers)."""
+    try:
+        return ast.unparse(node)
+    except Exception:  # pragma: no cover - unparse is total on exprs
+        return "<expr>"
+
+
+def _recv_attr(expr: ast.AST) -> tuple[str | None, str | None]:
+    """(receiver repr, attribute) of an Attribute/Subscript-ish expr."""
+    if isinstance(expr, ast.Subscript):
+        expr = expr.value
+    if isinstance(expr, ast.Attribute):
+        return _dotted(expr.value), expr.attr
+    return None, None
+
+
+class _ModuleScan:
+    """One module's lock surface: functions, lock sites, findings."""
+
+    def __init__(self, relpath: str, tree: ast.Module):
+        self.relpath = relpath
+        self.basename = os.path.basename(relpath)
+        self.tree = tree
+        self.funcs: dict[str, _FuncInfo] = {}
+        self.findings: list[Finding] = []
+        self.parents: dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+
+    # ---------------------------------------------------------- resolution
+    def _classify(self, cls: str | None, expr: ast.AST,
+                  aliases: dict[str, str]) -> str | None:
+        """Lock class of a with/acquire receiver expression, or None."""
+        if isinstance(expr, ast.Name):
+            return aliases.get(expr.id)
+        recv, attr = _recv_attr(expr)
+        if attr is None:
+            # with self._txn_locks.setdefault(...) / dict.get(...) forms
+            if isinstance(expr, ast.Call):
+                recv, attr = _recv_attr(expr.func)
+                if attr in ("setdefault", "get") and recv is not None:
+                    _, lock_attr = _recv_attr(expr.func.value)
+                    if lock_attr is not None:
+                        return classify_attr(
+                            self.basename, cls if recv and
+                            recv.startswith("self.") else None, lock_attr)
+            return None
+        use_cls = cls if recv == "self" else None
+        return classify_attr(self.basename, use_cls, attr)
+
+    def _lock_aliases(self, fn: ast.AST, cls: str | None) -> dict[str, str]:
+        """name -> lock class, for locals assigned from known lock attrs
+        (``lock = self._txn_locks.setdefault(pid, ...)``)."""
+        out: dict[str, str] = {}
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            got = self._classify(cls, node.value, {})
+            if got is None and isinstance(node.value, ast.Attribute):
+                got = self._classify(cls, node.value, {})
+            if got is not None:
+                out[node.targets[0].id] = got
+        return out
+
+    # ---------------------------------------------------------- discovery
+    def collect(self) -> None:
+        self._collect_funcs(self.tree, prefix="", class_name=None)
+        self._collect_lock_ctors()
+
+    def _collect_funcs(self, node: ast.AST, prefix: str,
+                       class_name: str | None) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                self._collect_funcs(child, f"{prefix}{child.name}.",
+                                    class_name=child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                self.funcs[q] = _FuncInfo(q, class_name, child)
+                # nested defs are separate analysis units (callbacks run
+                # with an empty held stack), resolvable by local name
+                self._collect_funcs(child, f"{q}.", class_name=class_name)
+
+    def _collect_lock_ctors(self) -> None:
+        """Every lock construction must resolve to a ranked class."""
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            is_threading = (isinstance(f, ast.Attribute)
+                            and isinstance(f.value, ast.Name)
+                            and f.value.id == "threading"
+                            and f.attr in _LOCK_CTORS)
+            is_witness = ((isinstance(f, ast.Name) and f.id in _WITNESS_CTORS)
+                          or (isinstance(f, ast.Attribute)
+                              and f.attr in _WITNESS_CTORS))
+            if is_witness:
+                q = self._enclosing_qualname(node)
+                if node.args and isinstance(node.args[0], ast.Constant) \
+                        and isinstance(node.args[0].value, str):
+                    if node.args[0].value not in RANKS:
+                        self._add("unknown-lock", q,
+                                  f"class({node.args[0].value})", node.lineno,
+                                  f"lock class {node.args[0].value!r} is not "
+                                  f"in the rank table (repro.analysis.ranks)")
+                else:
+                    self._add("unknown-lock", q, "class(dynamic)", node.lineno,
+                              "make_lock/make_rlock must take a literal "
+                              "lock-class string")
+                continue
+            if not is_threading:
+                continue
+            attr = self._ctor_target_attr(node)
+            q = self._enclosing_qualname(node)
+            cls = self._enclosing_class(node)
+            if attr is None or classify_attr(self.basename, cls, attr) is None:
+                self._add(
+                    "unknown-lock", q, f"attr({attr or '?'})", node.lineno,
+                    f"threading.{f.attr}() at {self.relpath}:{node.lineno} "
+                    f"does not resolve to a class in the rank table — add a "
+                    f"SITE_TABLE entry or construct it via witness.make_lock")
+
+    def _ctor_target_attr(self, call: ast.Call) -> str | None:
+        node: ast.AST = call
+        while node in self.parents:
+            parent = self.parents[node]
+            if isinstance(parent, ast.Assign):
+                for t in parent.targets:
+                    _, attr = _recv_attr(t)
+                    if attr is not None:
+                        return attr
+                    if isinstance(t, ast.Name):
+                        return t.id
+                return None
+            if isinstance(parent, ast.Call):
+                recv, attr = _recv_attr(parent.func)
+                if attr in ("setdefault", "get") and recv is not None:
+                    _, lock_attr = _recv_attr(parent.func.value)
+                    return lock_attr
+            if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef, ast.Module)):
+                return None
+            node = parent
+        return None
+
+    def _enclosing_qualname(self, node: ast.AST) -> str:
+        names: list[str] = []
+        while node in self.parents:
+            node = self.parents[node]
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                names.append(node.name)
+        return ".".join(reversed(names)) or "<module>"
+
+    def _enclosing_class(self, node: ast.AST) -> str | None:
+        while node in self.parents:
+            node = self.parents[node]
+            if isinstance(node, ast.ClassDef):
+                return node.name
+        return None
+
+    # ----------------------------------------------------------- summaries
+    def summarize(self) -> None:
+        for info in self.funcs.values():
+            aliases = self._lock_aliases(info.node, info.class_name)
+            for node in self._own_nodes(info.node):
+                if isinstance(node, (ast.With, ast.AsyncWith)):
+                    for item in node.items:
+                        got = self._classify(info.class_name,
+                                             item.context_expr, aliases)
+                        if got is not None:
+                            info.acquires.add(got)
+                elif isinstance(node, ast.Call):
+                    desc = self._blocking_desc(node)
+                    if desc is not None:
+                        info.blocking.add(desc)
+                    callee = self._resolve_call(node, info)
+                    if callee is not None:
+                        info.calls.add(callee)
+
+    def _own_nodes(self, fn: ast.AST):
+        """Walk a function body without descending into nested defs."""
+        stack = list(ast.iter_child_nodes(fn))
+        while stack:
+            node = stack.pop()
+            yield node
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _resolve_call(self, call: ast.Call, info: _FuncInfo) -> str | None:
+        f = call.func
+        if isinstance(f, ast.Name):
+            # nested def in this function, else a module-level function
+            nested = f"{info.qualname}.{f.id}"
+            if nested in self.funcs:
+                return nested
+            if f.id in self.funcs:
+                return f.id
+            return None
+        if (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
+                and f.value.id == "self" and info.class_name is not None):
+            q = f"{info.class_name}.{f.attr}"
+            return q if q in self.funcs else None
+        return None
+
+    def _blocking_desc(self, call: ast.Call) -> str | None:
+        f = call.func
+        if not isinstance(f, ast.Attribute):
+            return None
+        recv = _dotted(f.value)
+        low = recv.lower()
+        if f.attr == "sleep" and recv == "time":
+            return "time.sleep"
+        if f.attr == "submit" and "controller" in low:
+            return "controller.submit"
+        if f.attr == "join" and "thread" in low:
+            return "thread.join"
+        if f.attr == "wait" and ("stop" in low or "event" in low):
+            return "event.wait"
+        if f.attr in ("result", "shutdown") and ("pool" in low or "fut" in low
+                                                or "executor" in low):
+            return f"executor.{f.attr}"
+        root = recv.split(".", 1)[0].split("(", 1)[0]
+        if root in ("socket", "requests", "urllib", "http", "subprocess"):
+            return f"{root}.{f.attr}"
+        return None
+
+    # ------------------------------------------------------------- closure
+    def _close(self) -> None:
+        for info in self.funcs.values():
+            info.may_acquire = set(info.acquires)
+            info.may_block = set(info.blocking)
+        changed = True
+        while changed:
+            changed = False
+            for info in self.funcs.values():
+                for callee in info.calls:
+                    c = self.funcs[callee]
+                    if not c.may_acquire <= info.may_acquire:
+                        info.may_acquire |= c.may_acquire
+                        changed = True
+                    if not c.may_block <= info.may_block:
+                        info.may_block |= c.may_block
+                        changed = True
+
+    # -------------------------------------------------------------- checks
+    def check(self) -> None:
+        self.summarize()
+        self._close()
+        for info in self.funcs.values():
+            aliases = self._lock_aliases(info.node, info.class_name)
+            self._walk_held(info, list(ast.iter_child_nodes(info.node)),
+                            held=[], aliases=aliases)
+            self._check_acquire_release(info)
+            self._check_silent_except(info)
+
+    def _walk_held(self, info: _FuncInfo, nodes: list[ast.AST],
+                   held: list[str], aliases: dict[str, str]) -> None:
+        for node in nodes:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                got: list[str] = []
+                for item in node.items:
+                    c = self._classify(info.class_name, item.context_expr,
+                                       aliases)
+                    if c is None:
+                        _, attr = _recv_attr(item.context_expr)
+                        if attr is not None and "lock" in attr.lower():
+                            self._add("unknown-lock", info.qualname,
+                                      f"with({attr})", node.lineno,
+                                      f"`with {_dotted(item.context_expr)}:` "
+                                      f"does not resolve to a ranked lock")
+                        continue
+                    self._check_order(info, held, c, node.lineno, via=None)
+                    got.append(c)
+                self._walk_held(info, list(ast.iter_child_nodes(node)),
+                                held + got, aliases)
+                continue
+            if isinstance(node, ast.Call):
+                desc = self._blocking_desc(node)
+                if desc is not None:
+                    self._check_blocking(info, held, desc, node.lineno,
+                                         via=None)
+                callee = self._resolve_call(node, info)
+                if callee is not None and held:
+                    c = self.funcs[callee]
+                    for cls in sorted(c.may_acquire):
+                        self._check_order(info, held, cls, node.lineno,
+                                          via=callee)
+                    for desc in sorted(c.may_block):
+                        self._check_blocking(info, held, desc, node.lineno,
+                                             via=callee)
+            self._walk_held(info, list(ast.iter_child_nodes(node)), held,
+                            aliases)
+
+    def _check_order(self, info: _FuncInfo, held: list[str], cls: str,
+                     lineno: int, via: str | None) -> None:
+        for h in held:
+            if (h, cls) in ALLOWED_EDGES:
+                continue
+            suffix = f" (via {via})" if via else ""
+            if h in LEAF:
+                self._add("lock-order", info.qualname,
+                          f"leaf({h})->{cls}", lineno,
+                          f"acquires {cls!r} while holding leaf lock "
+                          f"{h!r}{suffix}")
+            elif h != cls and RANKS[cls] < RANKS[h]:
+                self._add("lock-order", info.qualname, f"{h}->{cls}", lineno,
+                          f"acquires {cls!r} (rank {RANKS[cls]}) while "
+                          f"holding {h!r} (rank {RANKS[h]}){suffix} — "
+                          f"inverts the declared hierarchy")
+
+    def _check_blocking(self, info: _FuncInfo, held: list[str], desc: str,
+                        lineno: int, via: str | None) -> None:
+        bad = [h for h in held if h in _NO_BLOCK_UNDER]
+        if not bad:
+            return
+        suffix = f" (via {via})" if via else ""
+        self._add("blocking-under-lock", info.qualname,
+                  f"{bad[-1]}->{desc}", lineno,
+                  f"blocking call {desc} while holding {bad[-1]!r} "
+                  f"lock{suffix}")
+
+    def _check_acquire_release(self, info: _FuncInfo) -> None:
+        acquires: dict[str, int] = {}
+        released_in_finally: set[str] = set()
+        for node in self._own_nodes(info.node):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            recv = _dotted(node.func.value)
+            locky = "lock" in recv.lower() or "lock" in node.func.attr.lower()
+            if node.func.attr == "acquire" and locky:
+                acquires[recv] = node.lineno
+            elif node.func.attr == "release" and locky:
+                if self._in_finally(node):
+                    released_in_finally.add(recv)
+        for recv, lineno in acquires.items():
+            if recv not in released_in_finally:
+                self._add(
+                    "unbalanced-acquire", info.qualname,
+                    f"acquire({recv})", lineno,
+                    f"raw {recv}.acquire() with no {recv}.release() in a "
+                    f"finally block — an exception leaks the lock (use "
+                    f"`with`)")
+
+    def _in_finally(self, node: ast.AST) -> bool:
+        child = node
+        while child in self.parents:
+            parent = self.parents[child]
+            if isinstance(parent, (ast.Try, getattr(ast, "TryStar", ast.Try))):
+                if any(child is n or self._contains(n, child)
+                       for n in parent.finalbody):
+                    return True
+            if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return False
+            child = parent
+        return False
+
+    @staticmethod
+    def _contains(tree: ast.AST, node: ast.AST) -> bool:
+        return any(n is node for n in ast.walk(tree))
+
+    def _check_silent_except(self, info: _FuncInfo) -> None:
+        for node in self._own_nodes(info.node):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not (len(node.body) == 1 and isinstance(node.body[0], ast.Pass)):
+                continue
+            if not self._is_broad(node.type):
+                continue
+            if not self._in_while(node, info.node):
+                continue
+            name = _dotted(node.type) if node.type is not None else "bare"
+            self._add("silent-except", info.qualname,
+                      f"except({name})", node.lineno,
+                      f"silent `except {name}: pass` inside a daemon loop — "
+                      f"count it (daemon_errors metric) or narrow it")
+
+    @staticmethod
+    def _is_broad(t: ast.AST | None) -> bool:
+        if t is None:
+            return True
+        names = []
+        for n in ([t.elts] if isinstance(t, ast.Tuple) else [[t]])[0]:
+            if isinstance(n, ast.Name):
+                names.append(n.id)
+        return any(n in ("Exception", "BaseException") for n in names)
+
+    def _in_while(self, node: ast.AST, fn: ast.AST) -> bool:
+        child = node
+        while child in self.parents:
+            parent = self.parents[child]
+            if isinstance(parent, ast.While):
+                return True
+            if parent is fn:
+                return False
+            child = parent
+        return False
+
+    def _add(self, kind: str, qualname: str, detail: str, lineno: int,
+             message: str) -> None:
+        f = Finding(kind, self.relpath, qualname, detail, lineno, message)
+        if all(f.id != g.id for g in self.findings):
+            self.findings.append(f)
+
+
+# ----------------------------------------------------------------- driver
+def scan_paths(paths: list[str]) -> tuple[list[Finding], list[str]]:
+    """Analyze every .py file under ``paths``. Returns (findings,
+    scanned relpaths). The analysis package itself is exempt (the
+    witness legitimately builds raw locks)."""
+    files: list[tuple[str, str]] = []  # (abspath, relpath)
+    for path in paths:
+        path = os.path.abspath(path)
+        if os.path.isfile(path):
+            files.append((path, os.path.basename(path)))
+            continue
+        for dirpath, dirnames, filenames in os.walk(path):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                full = os.path.join(dirpath, fn)
+                rel = os.path.relpath(full, path).replace(os.sep, "/")
+                files.append((full, rel))
+    findings: list[Finding] = []
+    scanned: list[str] = []
+    for full, rel in files:
+        if "analysis/" in rel.replace(os.sep, "/") or \
+                os.path.basename(os.path.dirname(full)) == "analysis":
+            continue
+        scanned.append(rel)
+        with open(full, "r", encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=full)
+        scan = _ModuleScan(rel, tree)
+        scan.collect()
+        scan.check()
+        findings.extend(scan.findings)
+    return findings, scanned
+
+
+def apply_allowlist(
+    findings: list[Finding],
+    allowlist: list[tuple[str, str]],
+    scanned: list[str],
+) -> tuple[list[Finding], list[Finding], list[str], list[str]]:
+    """Split findings into (reported, suppressed); also return stale
+    entry patterns (matched nothing although their file glob applies to
+    a scanned path) and malformed entries (empty justification)."""
+    malformed = [p for p, j in allowlist if not (j or "").strip()]
+    suppressed: list[Finding] = []
+    reported: list[Finding] = []
+    hit: set[str] = set()
+    for f in findings:
+        pat = next((p for p, _ in allowlist if fnmatch.fnmatch(f.id, p)), None)
+        if pat is not None:
+            hit.add(pat)
+            suppressed.append(f)
+        else:
+            reported.append(f)
+    stale = []
+    for p, _ in allowlist:
+        if p in hit:
+            continue
+        parts = p.split(":")
+        fglob = parts[1] if len(parts) > 1 else "*"
+        if any(fnmatch.fnmatch(rel, fglob) for rel in scanned):
+            stale.append(p)
+    return reported, suppressed, stale, malformed
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.lockcheck",
+        description="static lock-hierarchy analyzer (DESIGN.md §12)")
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--no-allowlist", action="store_true",
+                    help="ignore the checked-in allowlist (fixture runs)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="also write the full report as JSON to this path")
+    args = ap.parse_args(argv)
+
+    findings, scanned = scan_paths(args.paths)
+    if args.no_allowlist:
+        allowlist: list[tuple[str, str]] = []
+    else:
+        from repro.analysis.lockcheck_allowlist import ALLOWLIST
+        allowlist = list(ALLOWLIST)
+    reported, suppressed, stale, malformed = apply_allowlist(
+        findings, allowlist, scanned)
+
+    if malformed:
+        for p in malformed:
+            print(f"MALFORMED allowlist entry (empty justification): {p}")
+        return 2
+
+    for f in sorted(reported, key=lambda f: f.id):
+        print(f"{f.path}:{f.lineno}: [{f.kind}] {f.message}")
+        print(f"    id: {f.id}")
+    for p in stale:
+        print(f"STALE allowlist entry (matches nothing): {p}")
+
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            json.dump({
+                "reported": [vars(f) | {"id": f.id} for f in reported],
+                "suppressed": [vars(f) | {"id": f.id} for f in suppressed],
+                "stale": stale,
+            }, fh, indent=2, sort_keys=True)
+
+    n_files = len(scanned)
+    print(f"lockcheck: {n_files} files, {len(findings)} findings "
+          f"({len(suppressed)} allowlisted, {len(reported)} reported, "
+          f"{len(stale)} stale allowlist entries)")
+    return 1 if (reported or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

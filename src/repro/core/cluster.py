@@ -106,6 +106,7 @@ import weakref
 from dataclasses import asdict, dataclass, replace
 from typing import Callable, Iterator, Sequence
 
+from repro.analysis.witness import make_lock, make_rlock
 from repro.core.controller import (
     ClusterError,
     ControllerUnavailable,
@@ -308,7 +309,8 @@ class _PartitionCtl:
         self.epoch_starts: dict[int, int] = {0: 0}
         # last epoch each replica fully caught up in
         self.synced_epoch: dict[int, int] = {b: 0 for b in replicas}
-        self.lock = lock if lock is not None else threading.RLock()
+        self.lock = lock if lock is not None else make_rlock(
+            "partition", name=f"partition:{topic}:{partition}")
         # lazily bound per-partition metric handles (produce / replication
         # / fetch record counters): the hot path must not pay a series-key
         # format + registry lookup per batch (DESIGN §9 overhead budget)
@@ -413,7 +415,10 @@ class ReplicationService:
                 try:
                     cluster.controller_tick()
                 except (ClusterError, ControllerUnavailable):
-                    pass  # no controller quorum yet — next sweep retries
+                    # no controller quorum yet — next sweep retries
+                    cluster.metrics.counter(
+                        "daemon_retries_total", daemon="replication"
+                    ).inc()
             for j, (topic, p) in enumerate(cluster.partition_ids()):
                 if j % self.workers != idx:
                     continue
@@ -422,8 +427,15 @@ class ReplicationService:
                 try:
                     cluster.replicate_partition(topic, p)
                 except (ClusterError, ControllerUnavailable, KeyError, IndexError):
-                    continue  # offline/deleted partition — next pass retries
+                    # offline/deleted partition — next pass retries
+                    cluster.metrics.counter(
+                        "daemon_retries_total", daemon="replication"
+                    ).inc()
+                    continue
                 except BaseException as e:  # pragma: no cover - diagnostics
+                    cluster.metrics.counter(
+                        "daemon_errors_total", daemon="replication"
+                    ).inc()
                     if len(self.errors) < 16:
                         self.errors.append(e)
             if idx == 0:
@@ -508,8 +520,14 @@ class MetricsReporter:
                 cluster.publish_metrics()
                 self.published += 1
             except (ClusterError, ControllerUnavailable):
-                pass  # quorum/election window — next interval retries
+                # quorum/election window — next interval retries
+                cluster.metrics.counter(
+                    "daemon_retries_total", daemon="metrics-reporter"
+                ).inc()
             except BaseException as e:  # pragma: no cover - diagnostics
+                cluster.metrics.counter(
+                    "daemon_errors_total", daemon="metrics-reporter"
+                ).inc()
                 if len(self.errors) < 16:
                     self.errors.append(e)
             del cluster  # don't pin the cluster across the sleep
@@ -631,8 +649,11 @@ class BrokerCluster:
         # topology lock: topic create/delete, broker up/down, offset store.
         # Data-plane work runs under per-partition ctl locks instead; in
         # legacy mode every ctl shares _data_lock, restoring one-big-lock.
-        self._meta_lock = threading.RLock()
-        self._data_lock = threading.RLock() if legacy_global_lock else None
+        self._meta_lock = make_rlock("metadata")
+        self._data_lock = (
+            make_rlock("partition", name="partition:legacy-global")
+            if legacy_global_lock else None
+        )
         self._services: list[ReplicationService] = []
         self._reporters: list[MetricsReporter] = []
         # the replicated control plane: every topology mutation below goes
@@ -1014,7 +1035,8 @@ class BrokerCluster:
         state snapshot happens inside it, so a finisher that lost the
         race observes the completed (or successor) state and backs off."""
         with self._meta_lock:
-            lock = self._txn_locks.setdefault(pid, threading.Lock())
+            lock = self._txn_locks.setdefault(
+                pid, make_lock("txn", name=f"txn:{pid}"))
         with lock:
             with self._meta_lock:
                 st = self._txns.get(pid)

@@ -36,11 +36,11 @@ relies on exactly that.
 
 from __future__ import annotations
 
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
+from repro.analysis.witness import make_rlock
 from repro.core.cluster import ClusterError
 from repro.core.log import (
     OffsetOutOfRange,
@@ -112,7 +112,7 @@ class ConsumerGroup:
         self._assignment: dict[str, list[TopicPartition]] = {}
         self.generation = 0
         self.rebalances = 0
-        self._lock = threading.RLock()
+        self._lock = make_rlock("group", name=f"group:{group_id}")
 
     # ------------------------------------------------------------ membership
     def _partitions(self) -> list[TopicPartition]:

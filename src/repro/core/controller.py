@@ -64,6 +64,7 @@ import time
 from dataclasses import asdict, dataclass
 from typing import Callable, Iterator
 
+from repro.analysis.witness import make_rlock
 from repro.core.log import METADATA_TOPIC, LogConfig, StreamLog
 
 __all__ = [
@@ -247,7 +248,9 @@ class ControllerNode:
         # divergent same-term log at peers (it could truncate committed
         # entries, since conflict detection is by term)
         self.won_term = -1
-        self.log = StreamLog(clock=clock)
+        # appended to while the controller lock is held → distinct lock
+        # class nested strictly inside "controller" (repro.analysis.ranks)
+        self.log = StreamLog(clock=clock, lock_class="ctl-log")
         self.log.create_topic(METADATA_TOPIC, LogConfig(num_partitions=1))
         self._terms: list[int] = []  # term of live entry i - snap_index
         self.commit_count = 0  # entries [0, commit_count) are committed
@@ -402,7 +405,7 @@ class QuorumController:
         self.observed_reads = 0  # reads served by the observed leader alone
         self.probe_reads = 0  # reads that fell back to probing every node
         self._applied: set[int] = set()  # entry indexes handed to the SM
-        self._lock = threading.RLock()
+        self._lock = make_rlock("controller")
         # test hook: crash the leader mid-commit ("append": before any
         # replication; "replicate": after reaching exactly one follower)
         self.crash_leader_after: str | None = None

@@ -65,6 +65,8 @@ from typing import Callable, Iterator, Protocol, Sequence
 
 import numpy as np
 
+from repro.analysis.witness import make_rlock
+
 __all__ = [
     "METADATA_TOPIC",
     "LogConfig",
@@ -651,7 +653,8 @@ class RecordBatch:
 
 
 class _Partition:
-    def __init__(self, topic: str, index: int, cfg: LogConfig, clock: Callable[[], int]):
+    def __init__(self, topic: str, index: int, cfg: LogConfig, clock: Callable[[], int],
+                 lock_class: str = "log-part"):
         self.topic = topic
         self.index = index
         self.cfg = cfg
@@ -694,7 +697,7 @@ class _Partition:
         # _derive_state_at replays history against swapped-in state; the
         # flag suppresses side effects (txn_index stamping) during it
         self._derive_mode = False
-        self.lock = threading.RLock()
+        self.lock = make_rlock(lock_class, name=f"{lock_class}:{topic}:{index}")
 
     # ------------------------------------------------------------------ write
     def append_batch(
@@ -1891,10 +1894,15 @@ class StreamLog:
     ``__consumer_offsets``) used by :mod:`repro.core.consumer`.
     """
 
-    def __init__(self, clock: Callable[[], float] | None = None):
+    def __init__(self, clock: Callable[[], float] | None = None,
+                 lock_class: str = "log"):
         self._topics: dict[str, list[_Partition]] = {}
         self._configs: dict[str, LogConfig] = {}
-        self._lock = threading.RLock()
+        # the controller's internal metadata log nests inside the
+        # controller lock, so it carries a distinct lock class
+        # ("ctl-log") ranked above it — see repro.analysis.ranks
+        self._lock_class = lock_class
+        self._lock = make_rlock(lock_class, name=f"{lock_class}@{id(self):x}")
         self._clock = clock or time.time
         # consumer group -> TopicPartition -> committed offset
         self._committed: dict[str, dict[TopicPartition, int]] = {}
@@ -1933,7 +1941,8 @@ class StreamLog:
             cfg = cfg or LogConfig()
             self._configs[name] = cfg
             self._topics[name] = [
-                _Partition(name, i, cfg, self._now_ms)
+                _Partition(name, i, cfg, self._now_ms,
+                           lock_class=self._lock_class + "-part")
                 for i in range(cfg.num_partitions)
             ]
 

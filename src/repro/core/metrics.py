@@ -27,10 +27,11 @@ from __future__ import annotations
 
 import json
 import math
-import threading
 import time
 from collections import deque
 from typing import Any, Callable, Iterable
+
+from repro.analysis.witness import make_lock
 
 __all__ = [
     "Counter",
@@ -39,6 +40,7 @@ __all__ = [
     "MetricsRegistry",
     "Span",
     "METRICS_TOPIC",
+    "default_registry",
     "series_key",
 ]
 
@@ -66,7 +68,7 @@ class Counter:
 
     def __init__(self, key: str):
         self.key = key
-        self._lock = threading.Lock()
+        self._lock = make_lock("metrics", name=f"metrics:{key}")
         self._value = 0
 
     def inc(self, n: int = 1) -> None:
@@ -86,7 +88,7 @@ class Gauge:
 
     def __init__(self, key: str):
         self.key = key
-        self._lock = threading.Lock()
+        self._lock = make_lock("metrics", name=f"metrics:{key}")
         self._value = 0.0
 
     def set(self, value: float) -> None:
@@ -126,7 +128,7 @@ class Histogram:
 
     def __init__(self, key: str, sample: int = 1):
         self.key = key
-        self._lock = threading.Lock()
+        self._lock = make_lock("metrics", name=f"metrics:{key}")
         self._counts = [0] * len(_BUCKETS)
         self._count = 0
         self._sum = 0.0
@@ -321,7 +323,9 @@ class MetricsRegistry:
 
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
-        self._lock = threading.Lock()
+        # snapshot() reads series values (their leaf locks) under this,
+        # hence the distinct just-below-leaf class (repro.analysis.ranks)
+        self._lock = make_lock("metrics-registry")
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
         self._histograms: dict[str, Histogram] = {}
@@ -495,3 +499,16 @@ def _fmt(v: float) -> str:
     if isinstance(v, float) and v.is_integer():
         return str(int(v))
     return repr(v)
+
+
+# Process-wide registry for components that have no cluster to hang a
+# registry off (data-pipeline daemons: prefetch workers, device_feed).
+# Cluster-scoped series stay on the cluster's own registry.
+_default_registry: MetricsRegistry | None = None
+
+
+def default_registry() -> MetricsRegistry:
+    global _default_registry
+    if _default_registry is None:
+        _default_registry = MetricsRegistry()
+    return _default_registry

@@ -17,12 +17,13 @@ from __future__ import annotations
 import itertools
 import json
 import os
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping
 
 import numpy as np
+
+from repro.analysis.witness import make_rlock
 
 __all__ = [
     "Configuration",
@@ -95,7 +96,7 @@ class Registry:
     """Thread-safe in-memory store with JSON snapshot persistence."""
 
     def __init__(self, snapshot_dir: str | None = None):
-        self._lock = threading.RLock()
+        self._lock = make_rlock("registry")
         self._models: dict[str, ModelSpec] = {}
         self._configs: dict[str, Configuration] = {}
         self._deployments: dict[str, Deployment] = {}

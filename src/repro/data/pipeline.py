@@ -78,6 +78,7 @@ from repro.core.cluster import (
 )
 from repro.core.control import ControlMessage, StreamRange, send_control
 from repro.core.log import LogConfig, StreamBackend, TopicPartition
+from repro.core.metrics import default_registry
 from repro.data.formats import AvroCodec, RawCodec, codec_from_control
 
 __all__ = [
@@ -136,14 +137,22 @@ class PrefetchIterator:
 
     _DONE = object()
 
-    def __init__(self, it: Iterator[Any], depth: int = 2):
+    def __init__(self, it: Iterator[Any], depth: int = 2,
+                 name: str = "prefetch"):
         self._queue: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
         self._errbox: list[BaseException] = []
         self._finished = False
+        self._closed = False
+        # source failures re-raise at the consumer, but are also counted
+        # (daemon_errors{daemon=...}) so chaos runs can assert zero
+        # unexpected background errors without re-driving every stream
+        errors = default_registry().counter("daemon_errors_total", daemon=name)
         self._thread = threading.Thread(
             target=self._pump,
-            args=(iter(it), self._queue, self._stop, self._errbox, self._DONE),
+            args=(iter(it), self._queue, self._stop, self._errbox, self._DONE,
+                  errors),
+            name=f"prefetch:{name}",
             daemon=True,
         )
         self._thread.start()
@@ -155,6 +164,7 @@ class PrefetchIterator:
         stop: threading.Event,
         errbox: list[BaseException],
         done: Any,
+        errors: Any,
     ) -> None:
         def put(item: Any) -> bool:
             while not stop.is_set():
@@ -170,6 +180,7 @@ class PrefetchIterator:
                 if not put(item):
                     return
         except BaseException as e:  # propagated to the consumer
+            errors.inc()
             errbox.append(e)
         put(done)
 
@@ -199,8 +210,14 @@ class PrefetchIterator:
                     raise self._errbox.pop()
         raise StopIteration
 
-    def close(self) -> None:
-        """Stop the worker and release the queue (idempotent)."""
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop the worker deterministically (idempotent): signal stop,
+        unblock a worker stuck on a full queue, and join with a timeout
+        — after close() returns no pump thread of this iterator is
+        running (or it is reported leaked by the witness teardown)."""
+        if self._closed:
+            return
+        self._closed = True
         self._stop.set()
         self._finished = True
         while True:  # unblock a worker stuck on put()
@@ -208,21 +225,22 @@ class PrefetchIterator:
                 self._queue.get_nowait()
             except queue.Empty:
                 break
-        self._thread.join(timeout=5.0)
+        self._thread.join(timeout)
 
-    def __del__(self):  # abandoned without close(): stop the pump
+    def __del__(self):  # abandoned without close(): full deterministic stop
         try:
-            self._stop.set()
+            self.close(timeout=1.0)
         except Exception:
             pass
 
 
-def prefetch_iter(it: Iterator[Any], depth: int) -> Iterator[Any]:
+def prefetch_iter(it: Iterator[Any], depth: int,
+                  name: str = "prefetch") -> Iterator[Any]:
     """Wrap ``it`` with a bounded background prefetch; ``depth <= 0`` is
     a no-op passthrough (fully synchronous iteration)."""
     if depth <= 0:
         return iter(it)
-    return PrefetchIterator(it, depth)
+    return PrefetchIterator(it, depth, name=name)
 
 
 # --------------------------------------------------------------------- ingest
@@ -688,6 +706,7 @@ class StreamingBatchIterator:
         self.prefetch = prefetch
         self._ranges = _window_ranges(msg.ranges, start, count)
         self._skip = 0
+        self._prefetchers: list[PrefetchIterator] = []
 
     def steps_per_epoch(self) -> int:
         return self.n // self.batch_size
@@ -771,7 +790,27 @@ class StreamingBatchIterator:
             epoch += 1
 
     def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
-        return prefetch_iter(self._batches(), self.prefetch)
+        it = prefetch_iter(self._batches(), self.prefetch, name="stream-batch")
+        if isinstance(it, PrefetchIterator):
+            # deterministic shutdown: close() (or GC of this iterator)
+            # joins every pump thread this object spawned, so witness
+            # teardown never sees leaked prefetch workers
+            self._prefetchers = [p for p in self._prefetchers
+                                 if p._thread.is_alive()]
+            self._prefetchers.append(it)
+        return it
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop any background prefetch workers spawned by iteration."""
+        prefetchers, self._prefetchers = self._prefetchers, []
+        for p in prefetchers:
+            p.close(timeout)
+
+    def __del__(self):
+        try:
+            self.close(timeout=1.0)
+        except Exception:
+            pass
 
 
 # -------------------------------------------------------------- BatchIterator
@@ -806,6 +845,7 @@ class BatchIterator:
         prefetch: int = 0,
     ):
         self._stream: StreamingBatchIterator | None = None
+        self._prefetchers: list[PrefetchIterator] = []
         if isinstance(arrays, StreamingBatchIterator):
             if shuffle:
                 raise ValueError(
@@ -854,7 +894,26 @@ class BatchIterator:
     def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         if self._stream is not None:
             return iter(self._stream)
-        return prefetch_iter(self._epochs(), self.prefetch)
+        it = prefetch_iter(self._epochs(), self.prefetch, name="batch")
+        if isinstance(it, PrefetchIterator):
+            self._prefetchers = [p for p in self._prefetchers
+                                 if p._thread.is_alive()]
+            self._prefetchers.append(it)
+        return it
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop background prefetch workers (and a delegated stream's)."""
+        prefetchers, self._prefetchers = self._prefetchers, []
+        for p in prefetchers:
+            p.close(timeout)
+        if self._stream is not None:
+            self._stream.close(timeout)
+
+    def __del__(self):
+        try:
+            self.close(timeout=1.0)
+        except Exception:
+            pass
 
     def steps_per_epoch(self) -> int:
         return self.n // self.batch_size
@@ -890,7 +949,7 @@ class ShardedFeeder:
         self, it: Iterator[Mapping[str, np.ndarray]]
     ) -> Iterator[dict[str, jax.Array]]:
         placed = (self.place(b) for b in it)
-        stream = prefetch_iter(placed, self.prefetch)
+        stream = prefetch_iter(placed, self.prefetch, name="sharded-feeder")
         try:
             yield from stream
         finally:
@@ -929,4 +988,4 @@ def device_feed(
             return {k: jax.device_put(v) for k, v in b.items()}
         return {k: jax.device_put(v, sharding) for k, v in b.items()}
 
-    return prefetch_iter((place(b) for b in it), depth)
+    return prefetch_iter((place(b) for b in it), depth, name="device_feed")

@@ -4,10 +4,17 @@ Six test modules use hypothesis property tests as a *supplement* to their
 unit tests. When hypothesis is not installed we must not lose the unit
 tests to a collection error, so this conftest installs a stub module that
 makes ``@given(...)`` tests skip cleanly and leaves everything else alone.
+
+With ``REPRO_LOCK_WITNESS=1`` (nightly CI) every lock the suite
+constructs is witnessed (repro.analysis.witness) and a session-scoped
+fixture fails the run on any recorded rank violation or observed-graph
+cycle; ``REPRO_LOCK_GRAPH=<path>`` additionally dumps the observed
+lock-order graph as JSON (the CI artifact).
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import types
 
@@ -68,3 +75,31 @@ def _install_hypothesis_stub() -> None:
 
 
 _install_hypothesis_stub()
+
+
+if os.environ.get("REPRO_LOCK_WITNESS", "") not in ("", "0"):
+
+    @pytest.fixture(scope="session", autouse=True)
+    def _lock_witness_gate():
+        """Fail the session on lock-rank violations or observed-graph
+        cycles accumulated by the runtime witness (DESIGN.md §12)."""
+        from repro.analysis.witness import global_witness
+
+        yield
+        w = global_witness()
+        report = w.report()
+        path = os.environ.get("REPRO_LOCK_GRAPH")
+        if path:
+            w.dump(path)
+        problems = []
+        if report["violations"]:
+            problems.append(
+                "lock-order violations:\n  "
+                + "\n  ".join(v["detail"] for v in report["violations"])
+            )
+        if report["cycles"]:
+            problems.append(
+                "observed lock-order graph cycles:\n  "
+                + "\n  ".join(" -> ".join(c) for c in report["cycles"])
+            )
+        assert not problems, "\n".join(problems)

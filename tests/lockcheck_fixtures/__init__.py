@@ -1,0 +1,8 @@
+"""Seeded true-positive fixtures for the concurrency toolkit tests.
+
+Each module contains one deliberate violation that BOTH enforcement
+layers must catch: the static analyzer when pointed at the file, and
+the runtime witness when the class runs with witnessed locks injected.
+They are never imported by production code and never scanned by the CI
+gate (which targets ``src/repro``).
+"""

@@ -1,0 +1,17 @@
+"""Deliberate lock-order inversion: partition (rank 10) held while
+acquiring metadata (rank 0)."""
+
+from __future__ import annotations
+
+import threading
+
+
+class InvertedLocker:
+    def __init__(self, partition_lock=None, metadata_lock=None):
+        self._partition_lock = partition_lock or threading.RLock()
+        self._metadata_lock = metadata_lock or threading.RLock()
+
+    def invert(self) -> bool:
+        with self._partition_lock:
+            with self._metadata_lock:  # inversion: 0 acquired under 10
+                return True

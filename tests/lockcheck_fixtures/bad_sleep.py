@@ -1,0 +1,16 @@
+"""Deliberate blocking call (``time.sleep``) while holding a metadata
+lock — stalls every thread queueing on it."""
+
+from __future__ import annotations
+
+import threading
+import time
+
+
+class SleepyLocker:
+    def __init__(self, metadata_lock=None):
+        self._metadata_lock = metadata_lock or threading.Lock()
+
+    def slow_update(self, duration: float = 0.05) -> None:
+        with self._metadata_lock:
+            time.sleep(duration)

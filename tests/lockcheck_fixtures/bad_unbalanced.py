@@ -1,0 +1,17 @@
+"""Deliberate unbalanced raw ``.acquire()``: an exception between
+acquire and release leaks the lock (no ``finally``)."""
+
+from __future__ import annotations
+
+import threading
+
+
+class LeakyLocker:
+    def __init__(self, log_lock=None):
+        self._log_lock = log_lock or threading.Lock()
+
+    def leak_on_error(self, records) -> int:
+        self._log_lock.acquire()
+        total = sum(records)  # a TypeError here leaks the lock
+        self._log_lock.release()
+        return total

@@ -452,6 +452,57 @@ class TestPrefetch:
         for a, b in zip(plain, pre):
             np.testing.assert_array_equal(a, b)
 
+    def test_batch_iterator_close_joins_prefetch_workers(self):
+        """Deterministic shutdown: abandoning a prefetched BatchIterator
+        mid-epoch and calling close() leaves no pump thread running."""
+        arrays = {"x": np.arange(1000)}
+        bi = BatchIterator(arrays, 10, epochs=None, prefetch=2)
+        it = iter(bi)
+        assert isinstance(it, PrefetchIterator)
+        next(it)
+        bi.close()
+        assert not it._thread.is_alive()
+        assert bi._prefetchers == []
+
+    def test_prefetch_source_failure_counted_in_daemon_errors(self):
+        from repro.core.metrics import default_registry
+
+        reg = default_registry()
+        before = reg.counter_value("daemon_errors_total", daemon="boom-src")
+
+        def gen():
+            yield 1
+            raise ValueError("boom")
+
+        it = PrefetchIterator(gen(), depth=2, name="boom-src")
+        with pytest.raises(ValueError, match="boom"):
+            list(it)
+        after = reg.counter_value("daemon_errors_total", daemon="boom-src")
+        assert after == before + 1
+
+
+class TestDaemonErrorCounters:
+    def test_replication_daemon_counts_quorum_window_retries(self):
+        """A controller-quorum outage under the daemon is an *expected*
+        retry (daemon_retries), never an unexpected daemon_errors."""
+        c = make_cluster(parts=2)
+
+        def retries():
+            return c.metrics.counter_value(
+                "daemon_retries_total", daemon="replication")
+
+        assert retries() == 0
+        # lose quorum (kill 2 of 3 nodes), then crash a partition leader
+        # undetected: the daemon's election attempt hits
+        # ControllerUnavailable every pass until quorum returns
+        for nid in sorted(c.controller.nodes)[:2]:
+            c.controller.kill_node(nid)
+        c.kill_broker(0, defer_election=True)
+        with c.start_replication(interval_s=0.005):
+            wait_until(lambda: retries() > 0, msg="daemon retry counter")
+        assert c.metrics.counter_value(
+            "daemon_errors_total", daemon="replication") == 0
+
 
 # ------------------------------------------------------------ serving layer
 def _fabricated_result(reg):

@@ -1,0 +1,290 @@
+"""Concurrency-correctness toolkit tests (DESIGN.md §12).
+
+Covers both layers against the seeded true-positive fixtures in
+``tests/lockcheck_fixtures/`` (each must be caught by the static pass
+AND the runtime witness), pins the clean-tree zero-findings gate, and
+exercises allowlist hygiene so the gate cannot silently rot.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lockcheck
+from repro.analysis.lockcheck import Finding, apply_allowlist, scan_paths
+from repro.analysis.lockcheck_allowlist import ALLOWLIST
+from repro.analysis.ranks import ALLOWED_EDGES, LEAF, RANKS, classify_attr
+from repro.analysis.witness import LockOrderViolation, Witness
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "lockcheck_fixtures"
+
+
+def _load(name: str):
+    spec = importlib.util.spec_from_file_location(name, FIXTURES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ------------------------------------------------------------- rank table
+def test_rank_table_is_consistent():
+    # leaves are ranked, allowed edges connect known classes, and the
+    # coarse DESIGN ordering holds
+    assert LEAF <= set(RANKS)
+    for a, b in ALLOWED_EDGES:
+        assert a in RANKS and b in RANKS
+    assert RANKS["metadata"] < RANKS["partition"] < RANKS["controller"]
+    assert RANKS["log"] < RANKS["controller"] < RANKS["ctl-log"]
+    assert all(RANKS[c] >= max(RANKS[x] for x in RANKS if x not in LEAF)
+               for c in LEAF)
+
+
+def test_classify_attr_resolution_order():
+    assert classify_attr("cluster.py", "BrokerCluster", "_meta_lock") == "metadata"
+    assert classify_attr("cluster.py", None, "lock") == "partition"
+    assert classify_attr("log.py", None, "_lock") == "log"
+    # substring fallback for out-of-tree fixtures
+    assert classify_attr("bad_inversion.py", None, "_partition_lock") == "partition"
+    assert classify_attr("bad_sleep.py", None, "_metadata_lock") == "metadata"
+    assert classify_attr("other.py", None, "_helper") is None
+
+
+# ------------------------------------------------- static pass on fixtures
+@pytest.mark.parametrize(
+    "fixture, kind",
+    [
+        ("bad_inversion", "lock-order"),
+        ("bad_unbalanced", "unbalanced-acquire"),
+        ("bad_sleep", "blocking-under-lock"),
+    ],
+)
+def test_static_pass_catches_seeded_fixture(fixture, kind, capsys):
+    path = str(FIXTURES / f"{fixture}.py")
+    rc = lockcheck.main(["--no-allowlist", path])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert f"[{kind}]" in out
+
+
+def test_static_pass_clean_tree_zero_findings():
+    """The CI gate pin: the shipped tree has no unjustified findings."""
+    rc = lockcheck.main([str(REPO / "src" / "repro")])
+    assert rc == 0
+
+
+def test_silent_except_in_daemon_loop_flagged(tmp_path):
+    bad = tmp_path / "daemonish.py"
+    bad.write_text(
+        "class D:\n"
+        "    def _run(self, stop):\n"
+        "        while not stop.is_set():\n"
+        "            try:\n"
+        "                self.tick()\n"
+        "            except Exception:\n"
+        "                pass\n"
+    )
+    findings, _ = scan_paths([str(bad)])
+    assert any(f.kind == "silent-except" for f in findings)
+
+
+def test_unknown_lock_construction_flagged(tmp_path):
+    bad = tmp_path / "mystery.py"
+    bad.write_text(
+        "import threading\n"
+        "class M:\n"
+        "    def __init__(self):\n"
+        "        self._helper = threading.Lock()\n"
+    )
+    findings, _ = scan_paths([str(bad)])
+    assert any(f.kind == "unknown-lock" for f in findings)
+
+
+# ------------------------------------------------------- allowlist hygiene
+def test_allowlist_entries_all_justified():
+    for pattern, justification in ALLOWLIST:
+        assert justification.strip(), f"allowlist entry {pattern} unjustified"
+
+
+def test_allowlist_malformed_entry_rejected():
+    f = Finding("lock-order", "m.py", "C.f", "a->b", 1, "msg")
+    _, _, _, malformed = apply_allowlist([f], [("lock-order:*", "")], ["m.py"])
+    assert malformed == ["lock-order:*"]
+
+
+def test_allowlist_stale_entry_detected():
+    # entry targets a scanned file but matches nothing -> stale
+    reported, suppressed, stale, _ = apply_allowlist(
+        [], [("lock-order:m.py:*:a->b", "why")], ["m.py"])
+    assert stale == ["lock-order:m.py:*:a->b"]
+    # same entry with its file NOT scanned -> out of scope, not stale
+    _, _, stale2, _ = apply_allowlist(
+        [], [("lock-order:m.py:*:a->b", "why")], ["other.py"])
+    assert stale2 == []
+
+
+def test_allowlist_suppresses_matching_finding():
+    f = Finding("lock-order", "m.py", "C.f", "a->b", 1, "msg")
+    reported, suppressed, stale, _ = apply_allowlist(
+        [f], [("lock-order:m.py:*", "why")], ["m.py"])
+    assert reported == [] and suppressed == [f] and stale == []
+
+
+# ----------------------------------------------- runtime witness: fixtures
+def test_witness_catches_seeded_inversion_record_mode():
+    w = Witness(strict=False)
+    mod = _load("bad_inversion")
+    locker = mod.InvertedLocker(
+        partition_lock=w.rlock("partition"), metadata_lock=w.rlock("metadata"))
+    assert locker.invert()
+    kinds = [v["kind"] for v in w.violations]
+    assert "order" in kinds
+    assert ("partition", "metadata") in w.edges
+
+
+def test_witness_catches_seeded_inversion_strict_mode():
+    w = Witness(strict=True)
+    mod = _load("bad_inversion")
+    locker = mod.InvertedLocker(
+        partition_lock=w.rlock("partition"), metadata_lock=w.rlock("metadata"))
+    with pytest.raises(LockOrderViolation):
+        locker.invert()
+
+
+def test_witness_catches_seeded_unbalanced_acquire():
+    w = Witness(strict=False)
+    mod = _load("bad_unbalanced")
+    locker = mod.LeakyLocker(log_lock=w.lock("log", name="log:leaky"))
+    with pytest.raises(TypeError):
+        locker.leak_on_error(None)  # sum(None) raises between acquire/release
+    held = w.held_at_teardown()
+    assert any("log:leaky" in names for names in held.values())
+
+
+def test_witness_catches_seeded_sleep_under_lock():
+    w = Witness(strict=False, hold_warn_s=0.01)
+    mod = _load("bad_sleep")
+    locker = mod.SleepyLocker(metadata_lock=w.lock("metadata"))
+    locker.slow_update(duration=0.05)
+    assert w.long_holds and w.long_holds[0]["class"] == "metadata"
+
+
+# ----------------------------------------------- runtime witness: semantics
+def test_witness_correct_order_is_clean():
+    w = Witness(strict=True)
+    meta, part, ctl = (w.rlock("metadata"), w.rlock("partition"),
+                       w.rlock("controller"))
+    with meta:
+        with part:
+            with ctl:
+                pass
+    assert w.violations == [] and w.cycles() == []
+    assert ("metadata", "partition") in w.edges
+
+
+def test_witness_reentrant_rlock_allowed():
+    w = Witness(strict=True)
+    meta = w.rlock("metadata")
+    with meta:
+        with meta:  # same object: reentrancy, not same-class nesting
+            pass
+    assert w.violations == []
+    # reentrant acquires record no self-edge
+    assert ("metadata", "metadata") not in w.edges
+
+
+def test_witness_same_class_distinct_locks_flagged():
+    w = Witness(strict=False)
+    a, b = w.rlock("partition", name="p:a"), w.rlock("partition", name="p:b")
+    with a:
+        with b:
+            pass
+    assert any(v["kind"] == "same-class" for v in w.violations)
+
+
+def test_witness_leaf_is_terminal():
+    w = Witness(strict=False)
+    leaf, ctl = w.lock("metrics"), w.rlock("controller")
+    with leaf:
+        with ctl:  # any acquire under a leaf is a violation
+            pass
+    assert any(v["kind"] == "leaf-held" for v in w.violations)
+
+
+def test_witness_allowed_edge_suppressed_but_recorded():
+    w = Witness(strict=True)  # strict would raise if not suppressed
+    grp, meta = w.rlock("group"), w.rlock("metadata")
+    with grp:
+        with meta:  # sanctioned by ALLOWED_EDGES
+            pass
+    assert w.violations == []
+    assert ("group", "metadata") in w.edges  # still in the observed graph
+
+
+def test_witness_unbalanced_release_recorded():
+    w = Witness(strict=False)
+    lk = w.lock("metadata")
+    lk._inner.acquire()  # put the inner lock in a releasable state
+    lk.release()  # witness never saw the acquire
+    assert any(v["kind"] == "unbalanced-release" for v in w.violations)
+
+
+def test_witness_cycle_detection_at_teardown():
+    # two sanctioned directions that together form a cycle: neither
+    # acquire asserts, but teardown must still report the loop
+    w = Witness(strict=True, ranks={"a": 0, "b": 1},
+                leaf=frozenset(), allowed={("b", "a"): "test exemption"})
+    a, b = w.rlock("a"), w.rlock("b")
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    cycles = w.cycles()
+    assert cycles and set(cycles[0][:-1]) == {"a", "b"}
+
+
+def test_witness_report_shape():
+    w = Witness(strict=False)
+    with w.rlock("metadata"):
+        pass
+    r = w.report()
+    for key in ("violations", "edges", "cycles", "held_at_teardown",
+                "long_holds", "ranks", "allowed_edges"):
+        assert key in r
+
+
+def test_make_lock_disabled_returns_plain_primitive(monkeypatch):
+    # fast tier runs without REPRO_LOCK_WITNESS: construction must hand
+    # back stock threading primitives (zero steady-state overhead)
+    from repro.analysis import witness as wmod
+    monkeypatch.setattr(wmod, "ENABLED", False)
+    lk = wmod.make_lock("metadata")
+    assert type(lk) is type(threading.Lock())
+
+
+def test_witness_thread_isolation():
+    # held stacks are per-thread: thread B acquiring while A holds a
+    # higher rank is NOT a violation
+    w = Witness(strict=True)
+    part = w.rlock("partition")
+    meta = w.rlock("metadata")
+    errs: list[BaseException] = []
+
+    def other():
+        try:
+            with meta:
+                pass
+        except BaseException as e:  # pragma: no cover - failure path
+            errs.append(e)
+
+    with part:
+        t = threading.Thread(target=other)
+        t.start()
+        t.join(5.0)
+    assert errs == [] and w.violations == []
