@@ -61,11 +61,31 @@ the broker→device data-path benchmark (PR-7, DESIGN.md §10):
 * **schema** — decode/overlap/step sections present with positive
   values, including the poll→kernel step measurement.
 
+With ``--serving BENCH_serving.json`` the gate additionally validates
+the continuous-batching LM serving benchmark (PR-10, DESIGN.md §13):
+
+* **throughput floor** — continuous batching must beat the wave engine's
+  tokens/s on the mixed-length workload; the statistic is the median
+  within-pair ratio recomputed from the recorded slice-interleaved
+  (wave, continuous) pairs. Host-aware: ``SERVING_MIN_SPEEDUP`` (1.3x)
+  on a multi-core host, ``SERVING_MIN_SPEEDUP_1CORE`` (1.2x) on the
+  single-core reference container where per-admission batch-1 prefills
+  timeshare with decode (the quiet-host reading is ~2.8x — the floors
+  only trip on a real regression to wave-like lane idling).
+* **TTFT ceiling** — continuous p99 time-to-first-token must stay below
+  ``SERVING_TTFT_MAX_RATIO`` (0.8x / 0.9x on 1 core) of the wave p99,
+  both percentiles recomputed from the raw per-request TTFT samples
+  stored in the pairs — never trusted from a stored percentile.
+* **schema** — config/throughput/batch_sweep present, pairs non-empty
+  with positive tokens/s and non-empty TTFT sample lists, every sweep
+  point positive.
+
 Exit code 0 on pass, 1 on any failure (the CI job fails on non-zero).
 
     python benchmarks/check_bench.py [BENCH_replication.json]
         [--baseline MSGS_PER_S] [--tolerance FRACTION]
         [--datapath BENCH_datapath.json]
+        [--serving BENCH_serving.json]
 """
 
 from __future__ import annotations
@@ -110,6 +130,14 @@ DATAPATH_MIN_OVERLAP_SPEEDUP = 1.05
 # single-core hosts can't run the host and device legs concurrently —
 # the honest ceiling is parity, so gate "costs nothing to leave on"
 DATAPATH_MIN_OVERLAP_RATIO_1CORE = 0.90
+
+# continuous-vs-wave LM serving gates (BENCH_serving.json, PR-10)
+SERVING_MIN_SPEEDUP = 1.3
+# single-core hosts timeshare the continuous engine's per-admission
+# batch-1 prefills with decode, shaving the algorithmic win's edge
+SERVING_MIN_SPEEDUP_1CORE = 1.2
+SERVING_TTFT_MAX_RATIO = 0.8
+SERVING_TTFT_MAX_RATIO_1CORE = 0.9
 
 ACCEPTANCE_KEY = "contended_t4_rf3_acksall"
 
@@ -310,6 +338,114 @@ def check_datapath(results: dict) -> list[str]:
     return failures
 
 
+def _serving_speedup(throughput: dict) -> tuple[float, int] | None:
+    """Median continuous/wave tokens/s ratio recomputed from the
+    recorded slice-interleaved pairs (never trusted from the stored
+    ``speedup``)."""
+    pairs = throughput.get("pairs")
+    if not isinstance(pairs, list):
+        return None
+    ratios = sorted(
+        p["continuous_tokens_per_s"] / p["wave_tokens_per_s"]
+        for p in pairs
+        if isinstance(p, dict)
+        and p.get("continuous_tokens_per_s", 0) > 0
+        and p.get("wave_tokens_per_s", 0) > 0
+    )
+    if not ratios:
+        return None
+    return ratios[len(ratios) // 2], len(ratios)
+
+
+def _serving_ttft_p99(throughput: dict, side_key: str) -> float | None:
+    """p99 TTFT pooled over the raw per-request samples every pair
+    stores — recomputed here, never trusted from a stored percentile."""
+    pairs = throughput.get("pairs")
+    if not isinstance(pairs, list):
+        return None
+    samples = sorted(
+        t
+        for p in pairs
+        if isinstance(p, dict) and isinstance(p.get(side_key), list)
+        for t in p[side_key]
+        if isinstance(t, (int, float)) and t >= 0
+    )
+    if not samples:
+        return None
+    return samples[min(len(samples) - 1, int(0.99 * len(samples)))]
+
+
+def check_serving(results: dict) -> list[str]:
+    """Return failure messages for a BENCH_serving.json result set."""
+    failures: list[str] = []
+    for key in ("config", "throughput", "batch_sweep"):
+        if key not in results:
+            failures.append(f"serving schema: missing section {key!r}")
+
+    thr = results.get("throughput", {})
+    thr = thr if isinstance(thr, dict) else {}
+    for key in ("wave", "continuous"):
+        row = thr.get(key)
+        if not (isinstance(row, dict) and row.get("tokens_per_s", 0) > 0):
+            failures.append(
+                f"serving schema: throughput[{key!r}] missing or non-positive"
+            )
+    cores = thr.get("host_cores")
+    if not isinstance(cores, int) or cores < 1:
+        failures.append(
+            "serving schema: throughput['host_cores'] missing or non-positive"
+        )
+
+    measured = _serving_speedup(thr)
+    if measured is None:
+        failures.append(
+            "serving schema: throughput['pairs'] missing or holds no valid "
+            "(wave, continuous) tokens/s pair"
+        )
+    elif isinstance(cores, int) and cores >= 1:
+        speedup, n_pairs = measured
+        floor = SERVING_MIN_SPEEDUP if cores >= 2 else SERVING_MIN_SPEEDUP_1CORE
+        if speedup < floor:
+            failures.append(
+                f"regression: continuous batching is only {speedup:.2f}x "
+                f"wave tokens/s on the mixed-length workload (median "
+                f"across {n_pairs} pairs) on a {cores}-core host, below "
+                f"the {floor:.2f}x floor"
+            )
+
+    wave_p99 = _serving_ttft_p99(thr, "wave_ttft_s")
+    cont_p99 = _serving_ttft_p99(thr, "continuous_ttft_s")
+    if wave_p99 is None or cont_p99 is None:
+        failures.append(
+            "serving schema: pairs carry no raw TTFT samples "
+            "(wave_ttft_s / continuous_ttft_s)"
+        )
+    elif isinstance(cores, int) and cores >= 1 and wave_p99 > 0:
+        ceil = (SERVING_TTFT_MAX_RATIO if cores >= 2
+                else SERVING_TTFT_MAX_RATIO_1CORE)
+        if cont_p99 > ceil * wave_p99:
+            failures.append(
+                f"regression: continuous p99 TTFT {cont_p99 * 1e3:.0f} ms "
+                f"exceeds {ceil:.2f}x the wave p99 "
+                f"{wave_p99 * 1e3:.0f} ms (recomputed from stored "
+                f"samples on a {cores}-core host) — continuous admission "
+                "must cut first-token latency, not trade it away"
+            )
+
+    sweep = results.get("batch_sweep")
+    if not (isinstance(sweep, list) and sweep):
+        failures.append("serving schema: batch_sweep missing or empty")
+    else:
+        for row in sweep:
+            if not (isinstance(row, dict) and row.get("n_slots", 0) > 0
+                    and row.get("tokens_per_s", 0) > 0):
+                failures.append(
+                    "serving schema: batch_sweep row missing or non-positive"
+                )
+                break
+    return failures
+
+
 def check(results: dict, baseline: float, tolerance: float) -> list[str]:
     """Return a list of failure messages (empty == pass)."""
     failures: list[str] = []
@@ -469,6 +605,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--datapath", default=None, metavar="BENCH_datapath.json",
                     help="also validate + gate the broker→device "
                          "data-path benchmark result file")
+    ap.add_argument("--serving", default=None, metavar="BENCH_serving.json",
+                    help="also validate + gate the continuous-vs-wave "
+                         "LM serving benchmark result file")
     args = ap.parse_args(argv)
 
     try:
@@ -489,6 +628,16 @@ def main(argv: list[str] | None = None) -> int:
             failures.append(f"cannot read {args.datapath}: {e}")
         else:
             failures.extend(check_datapath(dp_results))
+
+    sv_results = None
+    if args.serving is not None:
+        try:
+            with open(args.serving) as f:
+                sv_results = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(f"cannot read {args.serving}: {e}")
+        else:
+            failures.extend(check_serving(sv_results))
 
     if failures:
         for msg in failures:
@@ -533,6 +682,23 @@ def main(argv: list[str] | None = None) -> int:
             f"{floor:.2f}x); poll→kernel "
             f"{dp_results['step']['records_per_s'] / 1e3:.0f} krec/s "
             f"({dp_results['step']['kernel']})"
+        )
+    if sv_results is not None:
+        thr = sv_results["throughput"]
+        sp, _ = _serving_speedup(thr)
+        cores = thr["host_cores"]
+        floor = (SERVING_MIN_SPEEDUP if cores >= 2
+                 else SERVING_MIN_SPEEDUP_1CORE)
+        wp99 = _serving_ttft_p99(thr, "wave_ttft_s")
+        cp99 = _serving_ttft_p99(thr, "continuous_ttft_s")
+        ceil = (SERVING_TTFT_MAX_RATIO if cores >= 2
+                else SERVING_TTFT_MAX_RATIO_1CORE)
+        print(
+            f"check_bench: OK — serving continuous {sp:.2f}x wave tokens/s "
+            f"on {cores} core(s) (floor {floor:.2f}x); p99 TTFT "
+            f"{cp99 * 1e3:.0f} ms vs wave {wp99 * 1e3:.0f} ms "
+            f"(ceiling {ceil:.2f}x); sweep to "
+            f"{max(s['n_slots'] for s in sv_results['batch_sweep'])} slots"
         )
     return 0
 

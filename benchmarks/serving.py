@@ -1,0 +1,223 @@
+"""LM serving benchmark: continuous vs wave batching (DESIGN.md §13).
+
+The workload the wave design admits it cannot serve well: requests
+arrive in mixed prompt lengths with spread ``max_new`` budgets, in
+arrival order (lengths interleaved, as a streaming request topic
+delivers them). The wave engine must cut equal-length waves from that
+order — underfilled waves, lanes idling until the longest sequence in a
+wave finishes — while the continuous engine admits each request into the
+in-flight decode batch the moment a slot frees.
+
+Measured:
+
+* **throughput** — ``REPS`` slice-interleaved (wave, continuous) pairs
+  over the identical request set, recording each side's generated
+  tokens/s AND the raw per-request TTFT samples (first-token timestamp
+  minus submit timestamp), so ``check_bench.py --serving`` recomputes
+  the median within-pair speedup and the p50/p99 TTFT from the stored
+  pairs — never trusting stored ratios. Host-aware gate: continuous must
+  beat wave tokens/s on any host (the win is algorithmic — fewer wasted
+  lane steps — not a parallelism artifact), with a lower floor on the
+  1-core reference container where per-admission batch-1 prefills
+  timeshare with decode.
+* **batch_sweep** — continuous tokens/s vs ``n_slots`` (the serving
+  capacity curve; schema-gated, recorded not floored).
+* **lane_utilization** — useful/total lane steps per engine, the direct
+  measure of the idle-lane waste continuous batching removes.
+
+Prints ``name,us_per_call,derived`` CSV rows like the other benchmarks
+and writes the full result set to ``BENCH_serving.json``::
+
+    PYTHONPATH=src python -m benchmarks.serving
+
+Nightly CI sources ``scripts/profile_env.sh`` first (tcmalloc, XLA
+flags) so the recorded numbers reflect the tuned-host configuration.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+
+import repro.configs as C
+from repro.models.model import StreamModel
+from repro.models.policy import Policy
+from repro.serve.lm_engine import ContinuousLMEngine, LMEngine, Request
+
+OUT_JSON = "BENCH_serving.json"
+REPS = 5  # slice-interleaved (wave, continuous) pairs
+N_SLOTS = 4
+S_CACHE = 64  # wave cache: fits max plen + max_new
+BLOCK = 8
+N_BLOCKS = 48
+MAX_BLOCKS = 8
+PLENS = (8, 16, 24)
+N_REQ = 18
+SWEEP_SLOTS = (1, 2, 4, 8)
+
+
+def _row(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def _median(xs) -> float:
+    s = sorted(xs)
+    return s[len(s) // 2]
+
+
+def _build_model():
+    cfg = C.get_reduced("yi-6b")
+    model = StreamModel(cfg, Policy(param_dtype="float32", compute_dtype="float32"))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _workload(cfg, seed: int = 0) -> list[Request]:
+    """Mixed lengths in arrival order: lengths interleave, so the wave
+    engine cannot fill equal-length waves from the queue head."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(N_REQ):
+        plen = PLENS[rid % len(PLENS)]
+        reqs.append(Request(
+            rid, rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            int(rng.integers(4, 17)),
+        ))
+    return reqs
+
+
+def _run_side(engine, reqs) -> dict:
+    """Submit the whole set, drain, record tokens/s + raw TTFT samples."""
+    submit_t = {}
+    t0 = time.perf_counter()
+    for r in reqs:
+        submit_t[r.req_id] = time.perf_counter()
+        engine.submit(r)
+    done = engine.run_until_drained()
+    elapsed = time.perf_counter() - t0
+    toks = sum(len(gen) for _rid, gen in done)
+    assert len(done) == len(reqs)
+    ttft = [engine.first_token_s[r.req_id] - submit_t[r.req_id] for r in reqs]
+    return {"tokens": toks, "elapsed_s": elapsed,
+            "tokens_per_s": toks / elapsed, "ttft_s": ttft}
+
+
+def bench_throughput(model, params) -> dict:
+    cfg = model.cfg
+    reqs = _workload(cfg)
+    wave = LMEngine(model, params, n_slots=N_SLOTS, s_cache=S_CACHE)
+    cont = ContinuousLMEngine(
+        model, params, n_slots=N_SLOTS, n_blocks=N_BLOCKS,
+        block_size=BLOCK, max_blocks=MAX_BLOCKS,
+    )
+    # warm-up: compile every prefill shape + the decode steps outside the
+    # timed region (both sides equally)
+    _run_side(wave, reqs)
+    _run_side(cont, reqs)
+    # slice-interleaved pairs: wave then continuous back to back per rep,
+    # so shared-host drift cancels out of the within-pair ratio
+    pairs = []
+    for _ in range(REPS):
+        w = _run_side(wave, reqs)
+        c = _run_side(cont, reqs)
+        pairs.append({
+            "wave_tokens_per_s": w["tokens_per_s"],
+            "continuous_tokens_per_s": c["tokens_per_s"],
+            "wave_ttft_s": w["ttft_s"],
+            "continuous_ttft_s": c["ttft_s"],
+        })
+    speedup = _median(
+        [p["continuous_tokens_per_s"] / p["wave_tokens_per_s"] for p in pairs]
+    )
+    wave_ttft = sorted(t for p in pairs for t in p["wave_ttft_s"])
+    cont_ttft = sorted(t for p in pairs for t in p["continuous_ttft_s"])
+
+    def pct(xs, q):
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    return {
+        "pairs": pairs,
+        "wave": {
+            "tokens_per_s": _median([p["wave_tokens_per_s"] for p in pairs]),
+            "lane_utilization": wave.lane_utilization,
+            "ttft_p50_s": pct(wave_ttft, 0.50),
+            "ttft_p99_s": pct(wave_ttft, 0.99),
+        },
+        "continuous": {
+            "tokens_per_s": _median(
+                [p["continuous_tokens_per_s"] for p in pairs]
+            ),
+            "lane_utilization": cont.lane_utilization,
+            "ttft_p50_s": pct(cont_ttft, 0.50),
+            "ttft_p99_s": pct(cont_ttft, 0.99),
+        },
+        "speedup": speedup,
+        "host_cores": len(os.sched_getaffinity(0)),
+    }
+
+
+def bench_batch_sweep(model, params) -> list[dict]:
+    cfg = model.cfg
+    reqs = _workload(cfg, seed=1)
+    out = []
+    for n in SWEEP_SLOTS:
+        eng = ContinuousLMEngine(
+            model, params, n_slots=n, n_blocks=N_BLOCKS,
+            block_size=BLOCK, max_blocks=MAX_BLOCKS,
+        )
+        _run_side(eng, reqs)  # warm-up/compile at this batch shape
+        r = _run_side(eng, reqs)
+        out.append({"n_slots": n, "tokens_per_s": r["tokens_per_s"]})
+    return out
+
+
+def main() -> None:
+    cfg, model, params = _build_model()
+    results = {
+        "config": {
+            "model": "yi-6b-reduced",
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_slots": N_SLOTS,
+            "block_size": BLOCK,
+            "n_blocks": N_BLOCKS,
+            "prompt_lens": list(PLENS),
+            "n_requests": N_REQ,
+            "reps": REPS,
+            "host_cores": len(os.sched_getaffinity(0)),
+        }
+    }
+    print("name,us_per_call,derived")
+
+    thr = bench_throughput(model, params)
+    results["throughput"] = thr
+    _row("serving_wave_tokens", 1.0 / thr["wave"]["tokens_per_s"],
+         f"{thr['wave']['tokens_per_s']:.0f}tok/s_"
+         f"util{thr['wave']['lane_utilization']:.2f}")
+    _row("serving_continuous_tokens", 1.0 / thr["continuous"]["tokens_per_s"],
+         f"{thr['continuous']['tokens_per_s']:.0f}tok/s_"
+         f"util{thr['continuous']['lane_utilization']:.2f}_"
+         f"{thr['speedup']:.2f}x_cores{thr['host_cores']}")
+    _row("serving_wave_ttft_p99", thr["wave"]["ttft_p99_s"],
+         f"p50_{thr['wave']['ttft_p50_s'] * 1e3:.0f}ms")
+    _row("serving_continuous_ttft_p99", thr["continuous"]["ttft_p99_s"],
+         f"p50_{thr['continuous']['ttft_p50_s'] * 1e3:.0f}ms")
+
+    sweep = bench_batch_sweep(model, params)
+    results["batch_sweep"] = sweep
+    for s in sweep:
+        _row(f"serving_sweep_slots{s['n_slots']}", 1.0 / s["tokens_per_s"],
+             f"{s['tokens_per_s']:.0f}tok/s")
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"# wrote {OUT_JSON}")
+
+
+if __name__ == "__main__":
+    main()

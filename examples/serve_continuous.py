@@ -1,0 +1,101 @@
+"""Continuous-batching LM serving smoke — the streaming-arrival workload.
+
+A tiny LM behind a 2-worker serving group on a replicated cluster:
+mixed-length requests stream onto a per-tenant-keyed request topic, the
+continuous engines admit them into in-flight decode batches (DESIGN.md
+§13), and keyed completions land on the response topic under
+transactional publish. Run by the fast CI tier (scripts/ci.sh).
+
+Run:  PYTHONPATH=src python examples/serve_continuous.py
+"""
+
+import jax
+import numpy as np
+
+import repro.configs as C
+import repro.core as core
+from repro.models.model import StreamModel
+from repro.models.policy import Policy
+from repro.serve import (
+    ContinuousLMEngine,
+    LMServingGroup,
+    Request,
+    decode_completion,
+    encode_request,
+    tenant_key,
+)
+
+
+def main():
+    cfg = C.get_reduced("yi-6b")
+    model = StreamModel(cfg, Policy(param_dtype="float32", compute_dtype="float32"))
+    params = model.init(jax.random.PRNGKey(0))
+
+    log = core.BrokerCluster(3)
+    log.create_topic("lm-requests", core.LogConfig(num_partitions=2))
+    log.create_topic("lm-responses", core.LogConfig(num_partitions=2))
+
+    group = LMServingGroup(
+        log,
+        [
+            ContinuousLMEngine(
+                model, params, n_slots=4, n_blocks=32, block_size=8, max_blocks=8
+            )
+            for _ in range(2)
+        ],
+        input_topic="lm-requests",
+        response_topic="lm-responses",
+        transactional=True,
+    )
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for rid in range(10):
+        plen = int(rng.choice([6, 10, 14]))
+        prompt = rng.integers(0, cfg.vocab, plen).astype(np.int32)
+        reqs.append(Request(rid, prompt, int(rng.integers(2, 7)), tenant=rid % 3))
+    for r in reqs:
+        log.produce("lm-requests", encode_request(r), key=tenant_key(r.tenant))
+
+    served = group.drain()
+    got = {}
+    for part in range(2):
+        end = log.end_offset("lm-responses", part)
+        off = 0
+        while off < end:
+            batch = log.read("lm-responses", part, off, 64, isolation="read_committed")
+            for buf in batch.values:
+                rid, tenant, gen = decode_completion(buf)
+                got[rid] = (tenant, gen)
+            off = batch.next_offset
+
+    assert served == len(reqs), f"served {served} != {len(reqs)}"
+    assert sorted(got) == [r.req_id for r in reqs], sorted(got)
+    for r in reqs:
+        tenant, gen = got[r.req_id]
+        assert tenant == r.tenant and len(gen) <= r.max_new, (r.req_id, tenant, gen)
+    util = [w.engine.lane_utilization for w in group.workers if w.engine.lane_steps]
+    print(
+        f"served {served} completions via {len(group.workers)} workers; "
+        f"lane utilization {', '.join(f'{u:.2f}' for u in util)}"
+    )
+
+
+if __name__ == "__main__":
+    # CI smoke-step watchdog (same shape as examples/quickstart.py): a
+    # hang must become a fast, loud failure. SERVE_TIMEOUT_S overrides.
+    import os
+    import threading
+
+    timeout_s = float(os.environ.get("SERVE_TIMEOUT_S", "180"))
+
+    def _watchdog():
+        print(f"serve_continuous: exceeded {timeout_s:.0f}s watchdog — aborting",
+              flush=True)
+        os._exit(124)  # hard-exit: a hung thread can't block the failure
+
+    timer = threading.Timer(timeout_s, _watchdog)
+    timer.daemon = True
+    timer.start()
+    main()
+    timer.cancel()

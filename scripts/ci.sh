@@ -47,6 +47,13 @@ echo "== fast tier wall clock: ${fast_elapsed}s (budget ${FAST_BUDGET_S}s) =="
 echo "== quickstart smoke (examples/quickstart.py, watchdog-guarded) =="
 QUICKSTART_TIMEOUT_S="${QUICKSTART_TIMEOUT_S:-120}" python examples/quickstart.py
 
+# continuous-batching LM serving end to end (DESIGN.md §13): tiny model,
+# 2-worker transactional serving group on a replicated cluster, streamed
+# mixed-length requests drained through the continuous engines; its
+# __main__ watchdog turns a hang into a fast failure like quickstart's
+echo "== serving smoke (examples/serve_continuous.py, watchdog-guarded) =="
+SERVE_TIMEOUT_S="${SERVE_TIMEOUT_S:-180}" python examples/serve_continuous.py
+
 if [ "$1" = "--full" ]; then
     echo "== full tier (slow system tests + chaos suite) =="
     python -m pytest -q -m "slow" -p no:cacheprovider
@@ -63,4 +70,13 @@ if [ "$1" = "--full" ]; then
     REPRO_LOCK_WITNESS=1 REPRO_LOCK_GRAPH="lock_order_graph_chaos.json" \
         python -m pytest -q -p no:cacheprovider tests/test_cluster_chaos.py \
         tests/test_transactions.py
+
+    # serving benchmark + gate (DESIGN.md §13): continuous vs wave
+    # batching under the tuned-host profile, then the host-aware
+    # regression gate recomputing speedup/TTFT from the stored pairs
+    echo "== serving benchmark (continuous vs wave) + gate =="
+    . scripts/profile_env.sh
+    python -m benchmarks.serving
+    python benchmarks/check_bench.py BENCH_replication.json \
+        --serving BENCH_serving.json
 fi

@@ -46,6 +46,11 @@ RANKS: dict[str, int] = {
     # strictly inside "controller" (a broker data log never is).
     "ctl-log": 40,
     "ctl-log-part": 45,
+    # LMEngine/ContinuousLMEngine._lock — serving request queue. Guards
+    # only deque/slot bookkeeping; polled consumers and the decode loop
+    # submit/admit concurrently. Never held across broker calls, so it
+    # ranks above every broker class.
+    "engine": 80,
     # MetricsRegistry._lock — series maps; snapshot() reads series values
     # (their leaf locks) while holding it, so it ranks just below leaf.
     "metrics-registry": 90,
@@ -89,6 +94,8 @@ SITE_TABLE: dict[tuple[str, str, str], str] = {
     ("log.py", "_Partition", "lock"): "log-part",
     ("controller.py", "QuorumController", "_lock"): "controller",
     ("consumer.py", "ConsumerGroup", "_lock"): "group",
+    ("lm_engine.py", "LMEngine", "_lock"): "engine",
+    ("lm_engine.py", "ContinuousLMEngine", "_lock"): "engine",
     ("registry.py", "Registry", "_lock"): "registry",
     ("metrics.py", "MetricsRegistry", "_lock"): "metrics-registry",
     ("metrics.py", "Counter", "_lock"): "metrics",
@@ -108,6 +115,7 @@ ATTR_TABLE: dict[tuple[str, str], str] = {
     ("log.py", "lock"): "log-part",
     ("controller.py", "_lock"): "controller",
     ("consumer.py", "_lock"): "group",
+    ("lm_engine.py", "_lock"): "engine",
     ("registry.py", "_lock"): "registry",
     ("metrics.py", "_lock"): "metrics",
 }

@@ -283,6 +283,7 @@ class GroupConsumer:
         self._positions: dict[TopicPartition, int] = {}
         self._assigned: list[TopicPartition] = []  # last observed assignment
         self._generation_seen = -1
+        self._paused = False
         self._on_revoked = on_revoked
         self._on_assigned = on_assigned
 
@@ -323,9 +324,27 @@ class GroupConsumer:
                     continue
         return assignment
 
+    def pause(self) -> None:
+        """Stop fetching without leaving the group: a paused member's
+        ``poll`` still heartbeats and tracks assignment (so it is not
+        expired or rebalanced away) but delivers no records and holds its
+        positions — Kafka's ``pause()`` backpressure, used by serving
+        workers whose request queue is at its high-water mark."""
+        self._paused = True
+
+    def resume(self) -> None:
+        self._paused = False
+
+    @property
+    def paused(self) -> bool:
+        return self._paused
+
     def poll(self, max_records: int = 1024) -> list[RecordBatch]:
         self.group.heartbeat(self.member_id)  # raises RebalanceError if evicted
         batches: list[RecordBatch] = []
+        if self._paused:
+            self._sync_assignment()  # keep generation/positions fresh
+            return batches
         for tp in self._sync_assignment():
             pos = self._positions.get(tp)
             if pos is None:

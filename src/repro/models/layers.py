@@ -44,6 +44,7 @@ __all__ = [
     "attn_strategy",
     "decode_attention",
     "embed_init",
+    "paged_decode_attention",
     "layer_norm",
     "mlp",
     "mlp_init",
@@ -438,7 +439,10 @@ def decode_attention(
     x: jax.Array,  # (B, 1, d)
     cache_k: jax.Array,  # (B, S_cache, Kv, D)
     cache_v: jax.Array,
-    cache_pos: jax.Array,  # scalar int32 count of tokens already in cache
+    cache_pos: jax.Array,  # int32 count of tokens already in cache:
+    #                        scalar (whole batch in lockstep) or (B,)
+    #                        per-row (continuous batching: each slot at
+    #                        its own position)
     ap: AttnParams,
     policy: Policy,
     *,
@@ -450,11 +454,19 @@ def decode_attention(
     With a seq-sharded cache the softmax over the sharded key axis lowers to
     a local masked reduce + a tiny cross-shard reduction — flash-decode's
     schedule, derived by the SPMD partitioner.
+
+    A vector ``cache_pos`` switches every position-dependent step to
+    per-row form: RoPE rotates each row by its own position, the new K/V
+    lands at each row's own slot (one scatter instead of a slice update),
+    and the validity/window masks become (B, S). The flash-decode
+    shard_map path stays scalar-only (its predicated slot write assumes
+    one slot per step); per-row decode falls through to the plain path.
     """
     b, one, d = x.shape
     s_cache = cache_k.shape[1]
-    pos = cache_pos
-    positions = jnp.reshape(pos, (1,))
+    pos = jnp.asarray(cache_pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.reshape(pos, (1,))
     batch = policy.batch_spec(b)
     cache_spec = P(batch, cache_seq_spec, None, None)
 
@@ -480,19 +492,24 @@ def decode_attention(
         kn = rope(kn, positions, ap.rope_theta)
 
     mesh = getattr(policy, "_mesh_obj", None)
-    if cache_seq_spec is not None and mesh is not None:
+    if cache_seq_spec is not None and mesh is not None and not per_row:
         out, cache_k, cache_v = _flash_decode(
             q, kn, vn, cache_k, cache_v, pos, ap, policy, mesh,
             ring=ring, seq_axes=cache_seq_spec,
         )
     else:
         slot = jnp.mod(pos, s_cache) if ring else pos
-        cache_k = jax.lax.dynamic_update_slice_in_dim(
-            cache_k, kn.astype(cache_k.dtype), slot, axis=1
-        )
-        cache_v = jax.lax.dynamic_update_slice_in_dim(
-            cache_v, vn.astype(cache_v.dtype), slot, axis=1
-        )
+        if per_row:
+            rows = jnp.arange(b)
+            cache_k = cache_k.at[rows, slot].set(kn[:, 0].astype(cache_k.dtype))
+            cache_v = cache_v.at[rows, slot].set(vn[:, 0].astype(cache_v.dtype))
+        else:
+            cache_k = jax.lax.dynamic_update_slice_in_dim(
+                cache_k, kn.astype(cache_k.dtype), slot, axis=1
+            )
+            cache_v = jax.lax.dynamic_update_slice_in_dim(
+                cache_v, vn.astype(cache_v.dtype), slot, axis=1
+            )
         cache_k = wsc(cache_k, cache_spec)
         cache_v = wsc(cache_v, cache_spec)
         kf = _repeat_kv(cache_k, ap.n_heads).astype(q.dtype)
@@ -503,13 +520,98 @@ def decode_attention(
         scale = 1.0 / math.sqrt(ap.head_dim)
         sc = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * scale
         sc = softcap(sc, ap.softcap) if ap.softcap else sc
-        idx = jnp.arange(s_cache)
-        valid = idx <= pos
-        if not ring and ap.window is not None:
-            valid &= idx > pos - ap.window
-        sc = jnp.where(valid[None, None, None, :], sc, -1e30)
+        valid = _decode_valid(pos, s_cache, ring=ring, window=ap.window)
+        sc = jnp.where(
+            valid[:, None, None, :] if per_row else valid[None, None, None, :],
+            sc, -1e30,
+        )
         w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
         out = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+    y = jnp.einsum("bshd,hdm->bsm", out, p["wo"])
+    return y, cache_k, cache_v
+
+
+def _decode_valid(pos, s_cache: int, *, ring: bool, window: int | None):
+    """Cache-slot validity for one-token decode: slots holding positions
+    0..pos (inclusive of the token just written), intersected with the
+    sliding window for non-ring window layers. Scalar ``pos`` → (S,);
+    vector ``pos`` (B,) → per-row (B, S) windows."""
+    idx = jnp.arange(s_cache)
+    if pos.ndim == 1:
+        valid = idx[None, :] <= pos[:, None]
+        if not ring and window is not None:
+            valid &= idx[None, :] > pos[:, None] - window
+        return valid
+    valid = idx <= pos
+    if not ring and window is not None:
+        valid &= idx > pos - window
+    return valid
+
+
+def paged_decode_attention(
+    p: dict,
+    x: jax.Array,  # (B, 1, d)
+    cache_k: jax.Array,  # (N_blocks, block, Kv, D) — physical block pool,
+    #                       shared by every slot (no batch dim)
+    cache_v: jax.Array,
+    cache_pos: jax.Array,  # (B,) int32 per-row token counts
+    block_table: jax.Array,  # (B, max_blocks) int32 physical block ids;
+    #                          virtual position p of row b lives at
+    #                          (block_table[b, p // block], p % block)
+    ap: AttnParams,
+    policy: Policy,
+):
+    """One-token decode against a paged (block-table) KV cache.
+
+    Rows with different prompt lengths share one physical pool without
+    fragmentation: each row owns ceil(len / block) blocks, mapped through
+    its block-table row. The new token's K/V is scattered to the owning
+    (block, offset) pair; reads gather each row's table into a contiguous
+    (B, max_blocks * block) view and run the same per-row masked softmax
+    as the plain decode path — data beyond a row's ``cache_pos`` (stale
+    freed-block contents included) is masked to -1e30, so block recycling
+    needs no zeroing. Idle rows must point their table at the reserved
+    scratch block 0 so their (discarded) writes never land in a live
+    row's blocks. Returns (out, new_k, new_v).
+    """
+    b = x.shape[0]
+    n_phys, blk_sz, n_kv, hd = cache_k.shape
+    max_blocks = block_table.shape[1]
+    pos = jnp.asarray(cache_pos, jnp.int32)
+    positions = pos[:, None]  # (B, 1)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    kn = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    vn = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if ap.bias:
+        q, kn, vn = q + p["bq"], kn + p["bk"], vn + p["bv"]
+    if ap.use_rope:
+        q = rope(q, positions, ap.rope_theta)
+        kn = rope(kn, positions, ap.rope_theta)
+
+    # scatter the new token: row r -> (table[r, pos_r // blk], pos_r % blk).
+    # Rows whose pos drifted past their table (recycled slots) clamp to
+    # the last table entry — an all-zeros table routes them to scratch.
+    rows = jnp.arange(b)
+    tbl_idx = jnp.minimum(pos // blk_sz, max_blocks - 1)
+    blk = block_table[rows, tbl_idx]
+    off = jnp.mod(pos, blk_sz)
+    cache_k = cache_k.at[blk, off].set(kn[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[blk, off].set(vn[:, 0].astype(cache_v.dtype))
+
+    # gather each row's blocks into a contiguous virtual sequence
+    s_virt = max_blocks * blk_sz
+    kf = cache_k[block_table].reshape(b, s_virt, n_kv, hd)
+    vf = cache_v[block_table].reshape(b, s_virt, n_kv, hd)
+    kf = _repeat_kv(kf, ap.n_heads).astype(q.dtype)
+    vf = _repeat_kv(vf, ap.n_heads).astype(q.dtype)
+    scale = 1.0 / math.sqrt(ap.head_dim)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * scale
+    sc = softcap(sc, ap.softcap) if ap.softcap else sc
+    valid = _decode_valid(pos, s_virt, ring=False, window=ap.window)
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
     y = jnp.einsum("bshd,hdm->bsm", out, p["wo"])
     return y, cache_k, cache_v
 

@@ -370,12 +370,22 @@ class StreamModel:
         if kind in ("attn", "local", "bidir"):
             ap = cfg.attn_params(kind)
             if decode:
-                out, nk, nv = L.decode_attention(
-                    blk["mixer"], h, state["k"], state["v"], state["pos"], ap, pol,
-                    ring=kind == "local",
-                    cache_seq_spec=pol.seq_axis,
-                )
-                new_state = {"k": nk, "v": nv, "pos": state["pos"] + 1}
+                if "bt" in state:  # paged cache (init_paged_cache)
+                    out, nk, nv = L.paged_decode_attention(
+                        blk["mixer"], h, state["k"], state["v"],
+                        state["pos"], state["bt"], ap, pol,
+                    )
+                    new_state = {
+                        "k": nk, "v": nv, "pos": state["pos"] + 1,
+                        "bt": state["bt"],
+                    }
+                else:
+                    out, nk, nv = L.decode_attention(
+                        blk["mixer"], h, state["k"], state["v"], state["pos"], ap, pol,
+                        ring=kind == "local",
+                        cache_seq_spec=pol.seq_axis,
+                    )
+                    new_state = {"k": nk, "v": nv, "pos": state["pos"] + 1}
             elif state is not None:  # prefill: fill the cache while attending
                 out, k, v = L.attention(blk["mixer"], h, ap, pol, positions, return_kv=True)
                 new_state = _fill_kv_cache(state, k, v)
@@ -670,6 +680,126 @@ class StreamModel:
             }
         return caches
 
+    # ------------------------------------------------------------ paged cache
+    # Blocked/paged KV layout for continuous batching (DESIGN.md §13):
+    # one physical pool of (n_blocks, block_size) KV blocks per layer
+    # group — no batch dim — plus per-row int32 positions and block
+    # tables. Rows with different prompt lengths share the pool without
+    # fragmentation; block 0 is the reserved scratch target for idle
+    # rows' discarded writes.
+
+    def init_paged_cache(
+        self, batch_size: int, n_blocks: int, block_size: int,
+        max_blocks: int, dtype=None,
+    ):
+        """Paged decode cache: physical block pool + per-row block tables.
+
+        Supports dense-attention patterns only (window/ring, SSM, RG-LRU
+        and enc-dec states are per-slot recurrences with no paging story
+        yet — recorded follow-up).
+        """
+        cfg = self.cfg
+        if any(k != "attn" for k in cfg.pattern):
+            raise NotImplementedError(
+                f"paged KV cache supports dense 'attn' patterns only "
+                f"(got {cfg.pattern!r})"
+            )
+        if dtype is None:
+            dtype = jnp.dtype(self.policy.kv_cache_dtype)
+
+        def slot(n: int):
+            kv = jnp.zeros((n_blocks, block_size, cfg.n_kv_heads, cfg.hd), dtype)
+            state = {
+                "k": kv, "v": kv,
+                "pos": jnp.zeros((batch_size,), jnp.int32),
+                "bt": jnp.zeros((batch_size, max_blocks), jnp.int32),
+            }
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), state
+            )
+
+        caches = {
+            "slots": {f"s{i}": slot(self.n_groups) for i in range(len(cfg.pattern))}
+        }
+        if self.tail:
+            caches["tail"] = {
+                f"s{i}": jax.tree.map(lambda a: a[0], slot(1))
+                for i in range(self.tail)
+            }
+        return caches
+
+    def paged_insert(self, caches, small_caches, row, block_ids, bt_row, plen):
+        """Admit one prefilled request into a paged cache.
+
+        ``small_caches`` is a batch-1 contiguous cache from
+        :meth:`prefill` with ``s_cache`` padded to ``len(block_ids) *
+        block_size``; its K/V splits into whole blocks scattered to the
+        physical ids in ``block_ids``. ``bt_row`` is the row's full block
+        table (reserved ids first — including growth blocks the prompt
+        has not reached — zero-padded), ``plen`` the prompt length that
+        becomes the row's position. Row/scalar args may be traced;
+        ``block_ids``' length is static per prompt-length bucket.
+        """
+        nb = len(block_ids)
+
+        def insert(dst, src, grouped: bool):
+            blk = dst["k"].shape[-3]  # block_size dim
+            if grouped:
+                ng = dst["k"].shape[0]
+                src_k = src["k"][:, 0].reshape(ng, nb, blk, *dst["k"].shape[-2:])
+                src_v = src["v"][:, 0].reshape(ng, nb, blk, *dst["v"].shape[-2:])
+                nk = dst["k"].at[:, block_ids].set(src_k.astype(dst["k"].dtype))
+                nv = dst["v"].at[:, block_ids].set(src_v.astype(dst["v"].dtype))
+                pos = dst["pos"].at[:, row].set(plen)
+                bt = dst["bt"].at[:, row].set(bt_row)
+            else:
+                src_k = src["k"][0].reshape(nb, blk, *dst["k"].shape[-2:])
+                src_v = src["v"][0].reshape(nb, blk, *dst["v"].shape[-2:])
+                nk = dst["k"].at[block_ids].set(src_k.astype(dst["k"].dtype))
+                nv = dst["v"].at[block_ids].set(src_v.astype(dst["v"].dtype))
+                pos = dst["pos"].at[row].set(plen)
+                bt = dst["bt"].at[row].set(bt_row)
+            return {"k": nk, "v": nv, "pos": pos, "bt": bt}
+
+        out = {
+            "slots": {
+                key: insert(caches["slots"][key], small_caches["slots"][key], True)
+                for key in caches["slots"]
+            }
+        }
+        if "tail" in caches:
+            out["tail"] = {
+                key: insert(caches["tail"][key], small_caches["tail"][key], False)
+                for key in caches["tail"]
+            }
+        return out
+
+    def paged_clear(self, caches, row):
+        """Recycle one slot: zero its position and block table so its
+        subsequent (idle) writes land in the scratch block. The K/V
+        blocks themselves need no zeroing — the validity mask hides
+        them, and the freed physical ids return to the allocator."""
+
+        def clear(dst, grouped: bool):
+            if grouped:
+                pos = dst["pos"].at[:, row].set(0)
+                bt = dst["bt"].at[:, row].set(0)
+            else:
+                pos = dst["pos"].at[row].set(0)
+                bt = dst["bt"].at[row].set(0)
+            return dict(dst, pos=pos, bt=bt)
+
+        out = {
+            "slots": {
+                key: clear(caches["slots"][key], True) for key in caches["slots"]
+            }
+        }
+        if "tail" in caches:
+            out["tail"] = {
+                key: clear(caches["tail"][key], False) for key in caches["tail"]
+            }
+        return out
+
     def cache_pspecs(self, batch_size: int):
         pol, cfg = self.policy, self.cfg
         batch = pol.batch_spec(batch_size)
@@ -733,12 +863,18 @@ class StreamModel:
         return self._logits(params, x[:, -1:, :])[:, 0], new_caches
 
     def decode_step(self, params, caches, tokens, pos):
-        """One decode step. tokens: (B, 1) int32; pos: scalar int32 position."""
+        """One decode step. tokens: (B, 1) int32; pos: scalar int32
+        position, or (B,) per-row positions (continuous batching — each
+        slot decodes at its own depth)."""
         cfg = self.cfg
         x = self._embed_tokens(params, tokens)
+        pos = jnp.asarray(pos, jnp.int32)
         if cfg.learned_pos:
-            x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0)[None]
-        positions = jnp.reshape(pos, (1,))
+            if pos.ndim == 1:
+                x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None]
+            else:
+                x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0)[None]
+        positions = jnp.reshape(pos, (-1,))
         x = wsc(x, P(self.policy.batch_spec(x.shape[0]), None, None))
         x, new_caches, _ = self._run_stack(params, x, positions, None, caches)
         return self._logits(params, x), new_caches

@@ -1,7 +1,21 @@
 from repro.serve.engine import (
     InferenceDeployment,
     InferenceReplica,
+    TxnOutputPublisher,
     build_prefill_step,
     build_serve_step,
 )
-from repro.serve.lm_engine import LMEngine, Request, serve_stream
+from repro.serve.lm_engine import (
+    ContinuousLMEngine,
+    KVBlockTable,
+    LMEngine,
+    LMServingGroup,
+    LMServingWorker,
+    Request,
+    decode_completion,
+    decode_request,
+    encode_completion,
+    encode_request,
+    serve_stream,
+    tenant_key,
+)

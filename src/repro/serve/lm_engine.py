@@ -1,37 +1,65 @@
-"""Wave-batching LM serving engine on the stream pipeline.
+"""LM serving engines on the stream pipeline: wave and continuous batching.
 
 Extends the paper's Algorithm 2 from stateless per-batch prediction to
-stateful LM generation. Requests are served in **waves**: up to
-``n_slots`` equal-length prompts are prefetched from the queue, prefilled
-as one batch, then decoded together step by step; sequences that hit
-``eos``/``max_new`` early stop contributing (their lanes idle until the
-wave ends). The queue refills the next wave.
+stateful LM generation. Two engines share the model's prefill/decode
+steps:
 
-This is the TPU-simple point on the batching spectrum: fixed shapes, one
-fused prefill + one fused decode step per iteration, no per-slot position
-bookkeeping. Fully continuous (per-slot) batching needs per-row cache
-positions + per-row validity windows in decode attention; measured lane
-idle time is bounded by (max_new - mean_new)/max_new per wave, which is
-small for tight max_new — recorded as the trade, with per-slot batching
-as identified future work (DESIGN.md §4c).
+- :class:`LMEngine` — **wave** batching: up to ``n_slots`` equal-length
+  prompts are prefilled as one batch, then decoded together step by
+  step; sequences that hit ``eos``/``max_new`` early stop contributing
+  (their lanes idle until the wave ends). Fixed shapes, one fused
+  prefill + one fused decode per iteration, no per-slot bookkeeping —
+  but it cannot mix prompt lengths in a wave and lane idle time grows
+  with the spread of ``max_new``.
 
-Transport is the paper's: prompts on an input topic (consumer groups load-
-balance across engine replicas), completions on the output topic.
+- :class:`ContinuousLMEngine` — **continuous (per-slot)** batching
+  (DESIGN.md §13): requests are admitted into the in-flight decode
+  batch the moment a slot frees up. Each slot decodes at its own cache
+  position (the model's per-row ``decode_step``), finished slots are
+  recycled immediately, and K/V lives in a blocked/paged pool
+  (:meth:`~repro.models.model.StreamModel.init_paged_cache`) so slots
+  with different prompt lengths share the cache without fragmentation.
+  Greedy outputs are token-identical to the wave engine — the
+  batch/stream-identical framing the DataFlow line of work argues for,
+  applied to serving.
+
+Transport is the paper's: requests on an input topic (consumer groups
+load-balance across serving workers, keys partition by tenant),
+completions on a response topic. :class:`LMServingWorker` wires an
+engine into the group-consumer/transactional-publish machinery shared
+with :class:`~repro.serve.engine.InferenceReplica`, so a worker crash
+mid-serve neither loses nor duplicates completions.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.witness import make_lock
+from repro.core.consumer import ConsumerGroup, RebalanceError
 from repro.core.log import StreamLog
 from repro.models.model import StreamModel
+from repro.serve.engine import TxnOutputPublisher
 
-__all__ = ["LMEngine", "Request", "serve_stream"]
+__all__ = [
+    "ContinuousLMEngine",
+    "KVBlockTable",
+    "LMEngine",
+    "LMServingGroup",
+    "LMServingWorker",
+    "Request",
+    "decode_completion",
+    "decode_request",
+    "encode_completion",
+    "encode_request",
+    "serve_stream",
+]
 
 
 @dataclasses.dataclass
@@ -39,8 +67,41 @@ class Request:
     req_id: int
     prompt: np.ndarray  # (prompt_len,) int32
     max_new: int
+    tenant: int = 0  # partitioning key on the request/response topics
 
 
+# ------------------------------------------------------- topic record codec
+# Request records: int32 header [req_id, tenant, max_new, plen] || prompt
+# tokens. Completion records: int32 [req_id, tenant, n] || n generated
+# tokens. Variable length — decoded per record, not via to_matrix.
+
+def encode_request(req: Request) -> bytes:
+    hdr = np.array([req.req_id, req.tenant, req.max_new, len(req.prompt)], np.int32)
+    return hdr.tobytes() + np.asarray(req.prompt, np.int32).tobytes()
+
+
+def decode_request(buf) -> Request:
+    a = np.frombuffer(buf, np.int32)
+    rid, tenant, max_new, plen = (int(x) for x in a[:4])
+    return Request(rid, a[4 : 4 + plen].copy(), max_new, tenant=tenant)
+
+
+def encode_completion(req_id: int, tenant: int, tokens: np.ndarray) -> bytes:
+    hdr = np.array([req_id, tenant, len(tokens)], np.int32)
+    return hdr.tobytes() + np.asarray(tokens, np.int32).tobytes()
+
+
+def decode_completion(buf) -> tuple[int, int, np.ndarray]:
+    a = np.frombuffer(buf, np.int32)
+    return int(a[0]), int(a[1]), a[3 : 3 + int(a[2])].copy()
+
+
+def tenant_key(tenant: int) -> bytes:
+    """The record key a tenant's requests/completions partition by."""
+    return np.int32(tenant).tobytes()
+
+
+# ------------------------------------------------------------- wave engine
 class LMEngine:
     """Fixed-slot wave batching around prefill + decode_step."""
 
@@ -58,7 +119,11 @@ class LMEngine:
         self.n_slots = n_slots
         self.s_cache = s_cache
         self.eos_id = eos_id
-        self.queue: list[Request] = []
+        # submit() races with the decode loop (a polling worker feeds the
+        # queue from another thread): deque + engine-ranked lock, popleft
+        # is O(1) where the old list.pop(0) was O(n)
+        self.queue: deque[Request] = deque()
+        self._lock = make_lock("engine", name="lm-wave")
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, s_cache, cache_dtype=jnp.float32)
         )
@@ -66,14 +131,24 @@ class LMEngine:
         self.waves = 0
         self.lane_steps = 0
         self.useful_steps = 0
+        self.first_token_s: dict[int, float] = {}  # req_id -> TTFT timestamp
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        with self._lock:
+            self.queue.append(req)
+
+    def qsize(self) -> int:
+        with self._lock:
+            return len(self.queue)
 
     def _next_wave(self) -> list[Request]:
         wave: list[Request] = []
-        while self.queue and len(wave) < self.n_slots:
-            wave.append(self.queue.pop(0))
+        with self._lock:
+            while self.queue and len(wave) < self.n_slots:
+                nxt = self.queue[0]
+                if wave and len(nxt.prompt) != len(wave[0].prompt):
+                    break  # waves are equal-length: leave it for the next wave
+                wave.append(self.queue.popleft())
         return wave
 
     def run_wave(self) -> list[tuple[int, np.ndarray]]:
@@ -88,6 +163,9 @@ class LMEngine:
         prompts = jnp.asarray(np.stack(rows).astype(np.int32))
         logits, cache = self._prefill(self.params, {"tokens": prompts})
         tok = jnp.argmax(logits, -1)[:, None]
+        now = time.perf_counter()
+        for r in wave:
+            self.first_token_s[r.req_id] = now
         max_new = max(r.max_new for r in wave)
         gen = np.full((self.n_slots, max_new), -1, np.int32)
         gen[:, 0] = np.asarray(tok[:, 0])
@@ -112,7 +190,7 @@ class LMEngine:
     def run_until_drained(self, max_waves: int = 10_000):
         out = []
         for _ in range(max_waves):
-            if not self.queue:
+            if not self.qsize():
                 break
             out.extend(self.run_wave())
         return out
@@ -120,6 +198,365 @@ class LMEngine:
     @property
     def lane_utilization(self) -> float:
         return self.useful_steps / max(self.lane_steps, 1)
+
+
+# --------------------------------------------------------- paged KV blocks
+class KVBlockTable:
+    """Host-side free-list over the physical KV block pool.
+
+    Block 0 is the reserved scratch target idle rows' (discarded) decode
+    writes land in — it is never handed out, so a recycled slot's
+    zeroed block table can never alias a live row's blocks.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved scratch)")
+        self.n_blocks = n_blocks
+        self._free = list(range(n_blocks - 1, 0, -1))  # pop() yields 1, 2, ...
+
+    def reserve(self, n: int) -> list[int] | None:
+        """n physical block ids, or None if the pool can't cover them
+        (all-or-nothing, so admission never deadlocks holding a rump)."""
+        if len(self._free) < n:
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def release(self, ids: list[int]) -> None:
+        self._free.extend(ids)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    blocks: list[int]  # physical block ids owned by this row
+    pos: int  # tokens in cache (mirrors the device-side per-row pos)
+    generated: list[int]
+
+
+# -------------------------------------------------------- continuous engine
+class ContinuousLMEngine:
+    """Continuous (per-slot) batching over a paged KV cache.
+
+    Each :meth:`step` first admits queued requests into free slots —
+    a per-request prefill scattered into reserved blocks via
+    ``paged_insert`` — then runs ONE fused ``decode_step`` across all
+    slots with a per-row position vector. Slots that hit ``eos`` /
+    ``max_new`` are recycled immediately (blocks released, block table
+    zeroed), so a long request never holds idle lanes hostage the way a
+    wave does. Greedy outputs are token-identical to :class:`LMEngine`.
+    """
+
+    def __init__(
+        self,
+        model: StreamModel,
+        params,
+        *,
+        n_slots: int = 4,
+        n_blocks: int = 64,
+        block_size: int = 16,
+        max_blocks: int = 16,
+        eos_id: int | None = None,
+    ):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.block_size = block_size
+        self.max_blocks = max_blocks
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self._lock = make_lock("engine", name="lm-continuous")
+        self.blocks = KVBlockTable(n_blocks)
+        self.caches = model.init_paged_cache(
+            n_slots, n_blocks, block_size, max_blocks, dtype=jnp.float32
+        )
+        self.slots: list[_Slot | None] = [None] * n_slots
+        self._tok = np.zeros((n_slots, 1), np.int32)  # each row's last token
+        self._decode = jax.jit(model.decode_step)
+        self._clear = jax.jit(model.paged_clear)
+
+        def _admit(params, caches, tokens, row, block_ids, bt_row, plen):
+            # pad the prefill cache to whole blocks; block_ids' (static)
+            # length fixes s_pad, so jit specializes per length bucket
+            s_pad = block_ids.shape[0] * block_size
+            logits, small = model.prefill(
+                params, {"tokens": tokens}, s_pad, cache_dtype=jnp.float32
+            )
+            caches = model.paged_insert(caches, small, row, block_ids, bt_row, plen)
+            return logits[0], caches
+
+        self._admit = jax.jit(_admit)
+        self.lane_steps = 0
+        self.useful_steps = 0
+        self.admissions = 0
+        self.first_token_s: dict[int, float] = {}  # req_id -> TTFT timestamp
+
+    def _blocks_needed(self, req: Request) -> int:
+        # final decode step writes K/V at position plen + max_new - 2;
+        # the cache must hold plen + max_new - 1 tokens
+        return -(-(len(req.prompt) + max(req.max_new, 1) - 1) // self.block_size)
+
+    def submit(self, req: Request) -> None:
+        if self._blocks_needed(req) > self.max_blocks:
+            raise ValueError(
+                f"request {req.req_id}: {len(req.prompt)}+{req.max_new} tokens "
+                f"exceeds max_blocks={self.max_blocks} * block={self.block_size}"
+            )
+        with self._lock:
+            self.queue.append(req)
+
+    def qsize(self) -> int:
+        with self._lock:
+            return len(self.queue)
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def _finish(self, row: int, out: list[tuple[int, np.ndarray]]) -> None:
+        slot = self.slots[row]
+        gen = np.asarray(slot.generated[: slot.req.max_new], np.int32)
+        out.append((slot.req.req_id, gen))
+        self.blocks.release(slot.blocks)
+        # zero the row's position + block table so its idle writes land
+        # in the scratch block — a stale table would corrupt whichever
+        # row the freed blocks go to next
+        self.caches = self._clear(self.caches, jnp.int32(row))
+        self.slots[row] = None
+
+    def _admit_pending(self, out: list[tuple[int, np.ndarray]]) -> None:
+        for row in range(self.n_slots):
+            if self.slots[row] is not None:
+                continue
+            with self._lock:
+                req = self.queue.popleft() if self.queue else None
+            if req is None:
+                return
+            need = self._blocks_needed(req)
+            blocks = self.blocks.reserve(need)
+            if blocks is None:
+                with self._lock:
+                    self.queue.appendleft(req)  # pool exhausted: retry later
+                return
+            plen = len(req.prompt)
+            nb_prefill = -(-plen // self.block_size)
+            bt_row = np.zeros(self.max_blocks, np.int32)
+            bt_row[:need] = blocks
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, self.caches = self._admit(
+                self.params,
+                self.caches,
+                tokens,
+                jnp.int32(row),
+                jnp.asarray(blocks[:nb_prefill], jnp.int32),
+                jnp.asarray(bt_row),
+                jnp.int32(plen),
+            )
+            tok0 = int(jnp.argmax(logits))
+            self.first_token_s[req.req_id] = time.perf_counter()
+            self.admissions += 1
+            self.slots[row] = _Slot(req, blocks, plen, [tok0])
+            self._tok[row, 0] = tok0
+            if req.max_new <= 1 or (self.eos_id is not None and tok0 == self.eos_id):
+                self._finish(row, out)
+
+    def step(self) -> list[tuple[int, np.ndarray]]:
+        """One engine tick: admit from the queue, then one fused decode
+        step across every active slot. Returns completions finished this
+        tick as ``(req_id, generated)`` pairs."""
+        out: list[tuple[int, np.ndarray]] = []
+        self._admit_pending(out)
+        rows = [r for r in range(self.n_slots) if self.slots[r] is not None]
+        if not rows:
+            return out
+        pos_vec = np.zeros(self.n_slots, np.int32)
+        for r in rows:
+            pos_vec[r] = self.slots[r].pos
+        lg, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self._tok), jnp.asarray(pos_vec)
+        )
+        tok = jnp.argmax(lg[:, 0], -1)
+        t = np.asarray(tok)
+        self.lane_steps += self.n_slots
+        self.useful_steps += len(rows)
+        for r in rows:
+            slot = self.slots[r]
+            slot.generated.append(int(t[r]))
+            slot.pos += 1
+            self._tok[r, 0] = t[r]
+            if (
+                self.eos_id is not None and t[r] == self.eos_id
+            ) or len(slot.generated) >= slot.req.max_new:
+                self._finish(r, out)
+        return out
+
+    def run_until_drained(self, max_steps: int = 100_000):
+        out: list[tuple[int, np.ndarray]] = []
+        for _ in range(max_steps):
+            if not self.qsize() and self.active == 0:
+                break
+            out.extend(self.step())
+        return out
+
+    @property
+    def lane_utilization(self) -> float:
+        return self.useful_steps / max(self.lane_steps, 1)
+
+
+# -------------------------------------------------------- cluster serving
+class LMServingWorker:
+    """One serving worker: group consumer -> engine -> response topic.
+
+    The Algorithm 2 loop with LM state: poll requests from the group's
+    assigned partitions, submit to the engine, drain, publish keyed
+    completions. ``transactional=True`` (clusters only) publishes
+    completions atomically with the consumed request offsets
+    (:class:`~repro.serve.engine.TxnOutputPublisher`): a worker crash
+    mid-serve can neither lose nor duplicate a completion — the
+    re-delivered requests re-serve deterministically (greedy decode) and
+    the aborted first attempt stays invisible to read_committed readers.
+    A full engine queue pauses the consumer (backpressure) instead of
+    buffering unboundedly.
+    """
+
+    def __init__(
+        self,
+        worker_id: str,
+        log,
+        group: ConsumerGroup,
+        engine,
+        response_topic: str,
+        *,
+        transactional: bool = False,
+        max_queue: int = 64,
+    ):
+        self.worker_id = worker_id
+        self.log = log
+        self.engine = engine
+        self.response_topic = response_topic
+        self.max_queue = max_queue
+        txn = transactional and hasattr(log, "init_producer")
+        self.consumer = group.join(
+            worker_id, isolation_level="read_committed" if txn else None
+        )
+        self.publisher = (
+            TxnOutputPublisher(
+                log, self.consumer, worker_id,
+                transactional_id=f"{group.group_id}-{worker_id}",
+            )
+            if txn
+            else None
+        )
+        self._tenants: dict[int, int] = {}  # req_id -> tenant for keyed publish
+        self.served = 0
+        self.alive = True
+
+    def poll_serve(self, max_records: int = 64) -> int:
+        """One tick: poll -> submit -> drain -> publish+commit. Returns
+        completions published (0 also covers rejoin/recovery ticks)."""
+        if not self.alive:
+            return 0
+        if self.worker_id not in self.consumer.group.members:
+            # evicted while alive (heartbeats lapsed under load): re-enter
+            # and resume from committed offsets next tick
+            self.consumer.rejoin()
+            return 0
+        if self.engine.qsize() >= self.max_queue:
+            self.consumer.pause()
+        else:
+            self.consumer.resume()
+        try:
+            polled = self.consumer.poll(max_records)
+        except RebalanceError:
+            self.consumer.rejoin()
+            return 0
+        for batch in polled:
+            for buf in batch.values:
+                req = decode_request(buf)
+                self._tenants[req.req_id] = req.tenant
+                self.engine.submit(req)
+        completions = self.engine.run_until_drained()
+        if not polled and not completions:
+            return 0
+        recs, keys = [], []
+        for rid, gen in completions:
+            tenant = self._tenants.pop(rid, 0)
+            recs.append(encode_completion(rid, tenant, gen))
+            keys.append(tenant_key(tenant))
+        if self.publisher is not None:
+            done = self.publisher.publish(self.response_topic, [recs], keys=[keys])
+            self.served += done
+            return done
+        self.log.ensure_topic(self.response_topic)
+        for rec, key in zip(recs, keys):
+            self.log.produce(self.response_topic, rec, key=key)
+        self.consumer.commit()
+        self.served += len(recs)
+        return len(recs)
+
+    def kill(self) -> None:
+        """Simulated crash: stops heartbeating (the group expires it)."""
+        self.alive = False
+
+
+class LMServingGroup:
+    """N serving workers on one consumer group over the request topic —
+    the LM analogue of :class:`~repro.serve.engine.InferenceDeployment`.
+    Per-tenant keys partition the request topic, the group's range
+    assignment load-balances partitions across workers, and a worker
+    that stops heartbeating loses its partitions to the survivors."""
+
+    def __init__(
+        self,
+        log,
+        engines: list,
+        *,
+        input_topic: str,
+        response_topic: str,
+        group_id: str = "lm-serve",
+        transactional: bool = False,
+        session_timeout_s: float = 5.0,
+        max_queue: int = 64,
+        clock=None,
+    ):
+        self.log = log
+        self.group = ConsumerGroup(
+            log,
+            group_id=group_id,
+            topics=[input_topic],
+            session_timeout_s=session_timeout_s,
+            clock=clock,
+        )
+        self.workers = [
+            LMServingWorker(
+                f"worker-{i}", log, self.group, eng, response_topic,
+                transactional=transactional, max_queue=max_queue,
+            )
+            for i, eng in enumerate(engines)
+        ]
+
+    def poll_all(self) -> int:
+        for w in self.workers:  # live workers heartbeat, dead ones don't
+            if w.alive and w.worker_id in self.group.members:
+                self.group.heartbeat(w.worker_id)
+        self.group.expire_dead_members()
+        return sum(w.poll_serve() for w in self.workers)
+
+    def kill_worker(self, idx: int) -> None:
+        self.workers[idx].kill()
+
+    def drain(self, max_iters: int = 100) -> int:
+        total = 0
+        for _ in range(max_iters):
+            got = self.poll_all()
+            total += got
+            if got == 0:
+                break
+        return total
 
 
 def serve_stream(

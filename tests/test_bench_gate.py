@@ -321,3 +321,111 @@ def test_unreadable_datapath_file_fails_cli(tmp_path):
         str(ROOT / "BENCH_replication.json"),
         "--datapath", str(tmp_path / "missing.json"),
     ]) == 1
+
+
+def load_serving():
+    return json.loads((ROOT / "BENCH_serving.json").read_text())
+
+
+def test_checked_in_serving_passes_gate():
+    gate = load_gate()
+    assert gate.check_serving(load_serving()) == []
+    # and the CLI path CI invokes exits 0
+    assert gate.main([
+        str(ROOT / "BENCH_replication.json"),
+        "--serving", str(ROOT / "BENCH_serving.json"),
+    ]) == 0
+
+
+def test_serving_throughput_regression_fails_gate():
+    gate = load_gate()
+    results = load_serving()
+    # continuous degrades to wave-level throughput: below every floor
+    for p in results["throughput"]["pairs"]:
+        p["continuous_tokens_per_s"] = 1.05 * p["wave_tokens_per_s"]
+    failures = gate.check_serving(results)
+    assert any("regression" in f and "wave tokens/s" in f for f in failures)
+
+
+def test_serving_gate_recomputes_ratio_from_pairs():
+    gate = load_gate()
+    results = load_serving()
+    # a hand-edited stored ratio must not rescue doctored pairs...
+    for p in results["throughput"]["pairs"]:
+        p["continuous_tokens_per_s"] = p["wave_tokens_per_s"]
+    results["throughput"]["speedup"] = 99.0
+    assert any("regression" in f for f in gate.check_serving(results))
+    # ...and a doctored stored ratio on honest pairs must not fail them
+    results = load_serving()
+    results["throughput"]["speedup"] = 0.01
+    assert gate.check_serving(results) == []
+
+
+def test_serving_ttft_gate_recomputes_percentiles():
+    gate = load_gate()
+    results = load_serving()
+    # doctored stored percentiles don't matter: samples rule
+    results["throughput"]["continuous"]["ttft_p99_s"] = 99.0
+    assert gate.check_serving(results) == []
+    # continuous TTFT samples inflated past the wave p99 ceiling fail
+    results = load_serving()
+    for p in results["throughput"]["pairs"]:
+        p["continuous_ttft_s"] = [2.0 * t for t in p["wave_ttft_s"]]
+    failures = gate.check_serving(results)
+    assert any("p99 TTFT" in f for f in failures)
+
+
+def test_serving_speedup_gate_is_host_aware():
+    gate = load_gate()
+    results = load_serving()
+    assert results["throughput"]["host_cores"] == 1
+    # a 1.25x median: above the 1.2x single-core floor...
+    for p in results["throughput"]["pairs"]:
+        p["continuous_tokens_per_s"] = 1.25 * p["wave_tokens_per_s"]
+    assert gate.check_serving(results) == []
+    # ...but below the 1.3x multi-core floor
+    results["throughput"]["host_cores"] = 4
+    failures = gate.check_serving(results)
+    assert any("below the 1.30x floor" in f for f in failures)
+
+
+def test_serving_schema_violations_fail_gate():
+    gate = load_gate()
+    results = load_serving()
+    del results["batch_sweep"]
+    results["throughput"].pop("wave")
+    failures = gate.check_serving(results)
+    assert any("missing section 'batch_sweep'" in f for f in failures)
+    assert any("'wave'" in f for f in failures)
+    # empty pairs / missing TTFT samples are loud schema failures
+    results = load_serving()
+    results["throughput"]["pairs"] = []
+    failures = gate.check_serving(results)
+    assert any("pairs" in f for f in failures)
+    results = load_serving()
+    for p in results["throughput"]["pairs"]:
+        del p["wave_ttft_s"]
+    failures = gate.check_serving(results)
+    assert any("TTFT samples" in f for f in failures)
+    # the host-aware gate needs the recorded core count
+    results = load_serving()
+    del results["throughput"]["host_cores"]
+    failures = gate.check_serving(results)
+    assert any("host_cores" in f for f in failures)
+
+
+def test_serving_single_outlier_pair_tolerated():
+    gate = load_gate()
+    results = load_serving()
+    # one co-tenant-noise pair where wave "won" must not trip the median
+    p0 = results["throughput"]["pairs"][0]
+    p0["continuous_tokens_per_s"] = 0.5 * p0["wave_tokens_per_s"]
+    assert gate.check_serving(results) == []
+
+
+def test_unreadable_serving_file_fails_cli(tmp_path):
+    gate = load_gate()
+    assert gate.main([
+        str(ROOT / "BENCH_replication.json"),
+        "--serving", str(tmp_path / "missing.json"),
+    ]) == 1

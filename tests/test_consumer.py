@@ -263,3 +263,39 @@ class TestRebalanceFencing:
         served += infer.poll_all()  # and serve again
         assert served == 2
         assert sorted(infer.group.members) == ["replica-0", "replica-1"]
+
+
+class TestPauseResume:
+    def test_pause_stops_fetch_but_keeps_membership(self):
+        log = _mklog(2)
+        g = ConsumerGroup(log, "g", ["t"])
+        c = g.join("a")
+        log.produce_batch("t", [b"1", b"2"], partition=0)
+        c.pause()
+        assert c.paused
+        # paused polls deliver nothing but still heartbeat and track the
+        # generation — the member is not expired or rebalanced away
+        assert c.poll() == []
+        assert c.poll() == []
+        assert "a" in g.members and c.generation == g.generation
+        # positions did not advance: nothing to commit, nothing lost
+        assert c.positions() == {} or all(
+            v == 0 for v in c.positions().values()
+        )
+        c.resume()
+        assert not c.paused
+        assert sum(len(b) for b in c.poll()) == 2
+
+    def test_pause_survives_rebalance(self):
+        log = _mklog(2)
+        g = ConsumerGroup(log, "g", ["t"])
+        c = g.join("a")
+        log.produce_batch("t", [b"x"], partition=0)
+        log.produce_batch("t", [b"y"], partition=1)
+        c.pause()
+        g.join("b")  # rebalance while paused
+        assert c.poll() == []  # still paused under the new generation
+        assert c.generation == g.generation
+        c.resume()
+        got = sum(len(b) for b in c.poll())
+        assert got == 1  # only the partition this member still owns

@@ -1,0 +1,173 @@
+"""Chaos: continuous LM serving through broker/worker failure.
+
+The ISSUE-10 satellite scenario: a transactional serving group keeps
+serving through a partition-leader kill — no completion is lost, none is
+duplicated (read_committed responses contain each req_id exactly once,
+token-identical to an undisturbed engine), because completions and the
+request offsets they answer commit in one transaction and re-delivered
+requests re-serve deterministically (greedy decode).
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+import repro.core as core
+from repro.core.cluster import BrokerCluster, ClusterError
+from repro.core.log import LogConfig
+from repro.models.model import StreamModel
+from repro.models.policy import Policy
+from repro.serve.lm_engine import (
+    ContinuousLMEngine,
+    LMServingGroup,
+    Request,
+    decode_completion,
+    encode_request,
+    tenant_key,
+)
+
+pytestmark = pytest.mark.slow
+
+N_REQ = 12
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = C.get_reduced("yi-6b")
+    model = StreamModel(cfg, Policy(param_dtype="float32", compute_dtype="float32"))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params):
+    return ContinuousLMEngine(
+        model, params, n_slots=4, n_blocks=32, block_size=8, max_blocks=8
+    )
+
+
+def _requests(cfg, rng):
+    reqs = []
+    for rid in range(N_REQ):
+        plen = int(rng.choice([6, 10, 14]))
+        reqs.append(Request(
+            rid, rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            int(rng.integers(2, 7)), tenant=rid % 4,
+        ))
+    return reqs
+
+
+def _reference(model, params, reqs):
+    eng = _engine(model, params)
+    for r in reqs:
+        eng.submit(r)
+    return dict(eng.run_until_drained())
+
+
+def _collect(c, parts=2):
+    """Read-committed audit of the whole response topic; returns
+    (req_id -> tokens, per-req occurrence counts)."""
+    got, counts = {}, {}
+    for p in range(parts):
+        off = 0
+        try:
+            end = c.end_offset("lm-resp", p)
+        except (ClusterError, KeyError, IndexError):
+            continue  # partition offline mid-election, or fewer partitions
+        while off < end:
+            try:
+                batch = c.read("lm-resp", p, off, 256, isolation="read_committed")
+            except ClusterError:
+                break
+            for buf in batch.values:
+                rid, _tenant, gen = decode_completion(buf)
+                got[rid] = gen
+                counts[rid] = counts.get(rid, 0) + 1
+            off = batch.next_offset
+    return got, counts
+
+
+def test_serving_survives_partition_leader_kill_exactly_once(lm):
+    cfg, model, params = lm
+    rng = np.random.default_rng(11)
+    c = BrokerCluster(3, default_acks="all")
+    c.create_topic("lm-req", LogConfig(num_partitions=2, replication_factor=3))
+    c.create_topic("lm-resp", LogConfig(num_partitions=2, replication_factor=3))
+    reqs = _requests(cfg, rng)
+    want = _reference(model, params, reqs)
+
+    group = LMServingGroup(
+        c, [_engine(model, params) for _ in range(2)],
+        input_topic="lm-req", response_topic="lm-resp", transactional=True,
+    )
+    # phase 1: half the requests served cleanly
+    for r in reqs[: N_REQ // 2]:
+        c.produce("lm-req", encode_request(r), key=tenant_key(r.tenant))
+    group.poll_all()
+
+    # kill the response partition leader, then stream the rest: the next
+    # transactional publish hits the dead leader mid-serve
+    c.start_replication(interval_s=0.002, workers=2)
+    try:
+        c.kill_broker(c.leader_for("lm-resp", 0))
+        for r in reqs[N_REQ // 2 :]:
+            c.produce("lm-req", encode_request(r), key=tenant_key(r.tenant))
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            c.controller_tick()
+            try:
+                group.poll_all()
+            except ClusterError:
+                continue  # election window: abort+rewind, retry the tick
+            got, _counts = _collect(c)
+            if len(got) == N_REQ:
+                break
+        got, counts = _collect(c)
+    finally:
+        c.stop_replication()
+
+    assert sorted(got) == list(range(N_REQ)), f"missing: {set(range(N_REQ)) - set(got)}"
+    # exactly-once: no req_id published twice (read_committed view)
+    dups = {rid: n for rid, n in counts.items() if n != 1}
+    assert dups == {}, f"duplicated completions: {dups}"
+    # token-identical to the undisturbed engine (greedy determinism)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+
+
+def test_serving_survives_worker_death_via_rebalance(lm):
+    cfg, model, params = lm
+    rng = np.random.default_rng(12)
+    t = [0.0]
+    log = core.StreamLog()
+    log.create_topic("lm-req", LogConfig(num_partitions=2))
+    reqs = _requests(cfg, rng)
+    want = _reference(model, params, reqs)
+
+    group = LMServingGroup(
+        log, [_engine(model, params) for _ in range(2)],
+        input_topic="lm-req", response_topic="lm-resp",
+        session_timeout_s=5.0, clock=lambda: t[0],
+    )
+    for r in reqs[: N_REQ // 2]:
+        log.produce("lm-req", encode_request(r), key=tenant_key(r.tenant))
+    group.poll_all()
+
+    group.kill_worker(0)
+    t[0] += 10.0  # heartbeats lapse; the survivor absorbs both partitions
+    for r in reqs[N_REQ // 2 :]:
+        log.produce("lm-req", encode_request(r), key=tenant_key(r.tenant))
+    for _ in range(10):
+        group.poll_all()
+        got, _ = _collect(log)
+        if len(got) == N_REQ:
+            break
+
+    got, counts = _collect(log)
+    assert sorted(got) == list(range(N_REQ))
+    assert all(n == 1 for n in counts.values())
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    assert group.workers[1].served >= N_REQ // 2
